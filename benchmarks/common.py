@@ -1,0 +1,54 @@
+"""Shared benchmark utilities: trained-model cache + CSV emission."""
+from __future__ import annotations
+
+import pathlib
+import pickle
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import CoTMConfig, booleanize, predict, train_epochs  # noqa: E402
+from repro.data.synthetic import digits  # noqa: E402
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[1] / "artifacts"
+ARTIFACTS.mkdir(exist_ok=True)
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def trained_mnist_cotm(n_clauses: int = 500, epochs: int = 10,
+                       n_train: int = 8000, tag: str = "bench"):
+    """Train (or load cached) CoTM at the paper's MNIST dims.
+
+    Returns (cfg, params, test literals, test labels, software accuracy).
+    """
+    cache = ARTIFACTS / f"cotm_{tag}_{n_clauses}c_{epochs}e.pkl"
+    cfg = CoTMConfig(n_literals=1568, n_clauses=n_clauses, n_classes=10,
+                     n_states=128, threshold=96, specificity=8.0)
+    x_te, y_te = digits(1000, seed=2, jitter=2)
+    lit_te = booleanize(jnp.asarray(x_te))
+    if cache.exists():
+        with open(cache, "rb") as f:
+            blob = pickle.load(f)
+        params = jax.tree.map(jnp.asarray, blob["params"])
+    else:
+        x_tr, y_tr = digits(n_train, seed=1, jitter=2)
+        lit_tr = booleanize(jnp.asarray(x_tr))
+        params = cfg.init(jax.random.key(0))
+        t0 = time.time()
+        params = train_epochs(params, lit_tr, jnp.asarray(y_tr),
+                              jax.random.key(1), cfg, epochs=epochs,
+                              batch_size=32)
+        print(f"# trained CoTM {n_clauses}c x{epochs}ep in "
+              f"{time.time() - t0:.0f}s", file=sys.stderr)
+        with open(cache, "wb") as f:
+            pickle.dump({"params": jax.tree.map(np.asarray, params)}, f)
+    acc = float((predict(params, lit_te, cfg) == jnp.asarray(y_te)).mean())
+    return cfg, params, lit_te, jnp.asarray(y_te), acc

@@ -1,0 +1,196 @@
+"""Roofline analysis: three terms per (arch x shape x mesh) cell.
+
+Sources (from the dry-run artifacts in ``artifacts/dryrun``):
+
+* ``cost``        — compiled.cost_analysis() verbatim (brief-literal; NOTE:
+  XLA visits each while body once, so scan-over-layers flops appear /L).
+* ``weighted``    — execution-weighted reanalysis of the optimized HLO
+  (launch/hlo.py): dot flops, fusion-boundary HBM traffic and collective
+  link bytes multiplied by known_trip_count through the call graph.  The
+  flops and collective terms are authoritative; the HBM term is an UPPER
+  bound on TPU (XLA-CPU materializes f32 attention intermediates that a
+  TPU flash fusion keeps in VMEM), so we also report an analytic floor
+  (params + caches + layer-boundary activations).
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+  compute    t_c = flops_per_device / 197e12
+  memory     t_m = hbm_bytes_per_device / 819e9
+  collective t_x = link_bytes_per_device / 50e9
+
+MODEL_FLOPS = 6 N_act D (train) / 2 N_act D (inference) + explicit
+attention terms; the ratio MODEL_FLOPS / HLO_flops exposes remat recompute,
+causal-mask waste and replicated attention (heads % 16 != 0).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.configs import ARCH_IDS, get_config  # noqa: E402
+from repro.models import build  # noqa: E402
+from repro.models.config import SHAPES  # noqa: E402
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[1] / "artifacts"
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # B/s / chip
+LINK_BW = 50e9           # B/s / link
+
+
+def n_active(cfg) -> float:
+    """Active (per-token matmul) params: excludes the embedding gather and
+    scales routed experts by top_k/E (x capacity factor)."""
+    model = build(cfg)
+    n = float(model.n_params())
+    n -= cfg.vocab * cfg.d_model * (cfg.n_codebooks
+                                    if cfg.modality == "audio" else 1)
+    if cfg.moe is not None:
+        m = cfg.moe
+        routed = (cfg.n_layers - m.first_dense_layers) * 3 * \
+            m.n_experts * cfg.d_model * m.d_ff_expert
+        active_frac = min(1.0, m.top_k * m.capacity_factor / m.n_experts)
+        n -= routed * (1.0 - active_frac)
+    return n
+
+
+def attn_dims(cfg):
+    """(L_attn, H, qk_dim, v_dim) for the full-attention component."""
+    if cfg.ssm is not None and cfg.hybrid_attn_every == 0:
+        return 0, 0, 0, 0                     # rwkv6: attention-free
+    if cfg.hybrid_attn_every:
+        L = cfg.n_layers // cfg.hybrid_attn_every
+        hd = 2 * cfg.d_model // cfg.n_heads
+        return L, cfg.n_heads, hd, hd
+    if cfg.mla is not None:
+        return (cfg.n_layers, cfg.n_heads,
+                cfg.mla.qk_nope_head_dim + cfg.mla.qk_rope_head_dim,
+                cfg.mla.v_head_dim)
+    return cfg.n_layers, cfg.n_heads, cfg.resolved_head_dim, \
+        cfg.resolved_head_dim
+
+
+def model_flops(cfg, shape, n_chips: int) -> float:
+    """Useful (model) flops per device per step."""
+    N = n_active(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    L, H, qk, vd = attn_dims(cfg)
+    if shape.kind == "train":
+        tokens = B * S
+        mm = 6.0 * N * tokens
+        attn = 3.0 * tokens * (2 * (S / 2) * H * (qk + vd)) * L
+    elif shape.kind == "prefill":
+        tokens = B * S
+        mm = 2.0 * N * tokens
+        attn = tokens * (2 * (S / 2) * H * (qk + vd)) * L
+    else:  # decode: one token per sequence against an S-token context
+        tokens = B
+        mm = 2.0 * N * tokens
+        attn = tokens * (2 * S * H * (qk + vd)) * L
+    return (mm + attn) / n_chips
+
+
+def analytic_memory_floor(cfg, shape, n_chips: int) -> float:
+    """Per-device HBM bytes that MUST move: params (bf16) once + cache
+    read/write (decode) or boundary activations (train/prefill)."""
+    model = build(cfg)
+    n = float(model.n_params())
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        # fwd+bwd touch params ~3x (f32 master+grad) + boundary acts.
+        acts = cfg.n_layers * B * S * cfg.d_model * 2
+        return (3 * 4 * n + acts) / n_chips
+    if shape.kind == "prefill":
+        acts = cfg.n_layers * B * S * cfg.d_model * 2
+        return (2 * n + acts) / n_chips
+    # decode: whole cache is read once per step + params.
+    import jax
+    cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    cache_bytes = sum(x.size * x.dtype.itemsize
+                      for x in jax.tree.leaves(cache))
+    return (2 * n + cache_bytes) / n_chips
+
+
+def load_cells(mesh_dir: str):
+    d = ARTIFACTS / "dryrun" / mesh_dir
+    out = []
+    for p in sorted(d.glob("*.json")):
+        out.append(json.loads(p.read_text()))
+    return out
+
+
+def analyze(mesh_dir: str = "16x16"):
+    n_chips = 512 if mesh_dir == "2x16x16" else 256
+    rows = []
+    for rec in load_cells(mesh_dir):
+        if "skipped" in rec or "error" in rec:
+            rows.append(dict(arch=rec["arch"], shape=rec["shape"],
+                             skipped=rec.get("skipped",
+                                             rec.get("error", ""))[:60]))
+            continue
+        cfg = get_config(rec["arch"])
+        shape = SHAPES[rec["shape"]]
+        w = rec.get("weighted", {})
+        flops = w.get("flops_weighted", 0.0)
+        hbm = w.get("hbm_bytes_weighted", 0.0)
+        coll = w.get("collective_link_bytes_weighted", 0.0)
+        t_c = flops / PEAK_FLOPS
+        t_m = hbm / HBM_BW
+        mf = model_flops(cfg, shape, n_chips)
+        floor = analytic_memory_floor(cfg, shape, n_chips)
+        t_m_floor = floor / HBM_BW
+        t_x = coll / LINK_BW
+        terms = {"compute": t_c, "memory(floor)": t_m_floor,
+                 "collective": t_x}
+        dominant = max(terms, key=terms.get)
+        rows.append(dict(
+            arch=rec["arch"], shape=rec["shape"], kind=rec["kind"],
+            flops=flops, hbm_upper=hbm, hbm_floor=floor, coll=coll,
+            t_compute=t_c, t_mem_upper=t_m, t_mem_floor=t_m_floor,
+            t_coll=t_x, dominant=dominant,
+            model_flops=mf,
+            useful_ratio=(mf / flops if flops else 0.0),
+            cost_flops=rec.get("cost", {}).get("flops", 0.0),
+            cost_bytes=rec.get("cost", {}).get("bytes accessed", 0.0),
+            mem_args_gib=rec.get("memory", {}).get(
+                "argument_size_in_bytes", 0) / 2**30,
+            mem_temp_gib=rec.get("memory", {}).get(
+                "temp_size_in_bytes", 0) / 2**30,
+        ))
+    return rows
+
+
+LEVERS = {
+    "compute": "raise MFU: cut causal-mask waste / replicated attention "
+               "(shard head_dim or context), larger chunk matmuls",
+    "memory(floor)": "raise arithmetic intensity: quantize cache/params, "
+                     "fuse reads, bigger per-step batch",
+    "collective": "cut link bytes: reduce-scatter instead of all-gather, "
+                  "EP all-to-all combine, overlap with compute",
+}
+
+
+def main() -> None:
+    for mesh in ("16x16", "2x16x16"):
+        rows = analyze(mesh)
+        print(f"roofline/{mesh},0.0,cells={len(rows)}")
+        for r in rows:
+            if "skipped" in r:
+                print(f"roofline/{mesh}/{r['arch']}/{r['shape']},0.0,"
+                      f"SKIP:{r['skipped']}")
+                continue
+            print(
+                f"roofline/{mesh}/{r['arch']}/{r['shape']},0.0,"
+                f"t_c={r['t_compute']:.3f}s;t_m_floor={r['t_mem_floor']:.3f}s;"
+                f"t_m_upper={r['t_mem_upper']:.3f}s;t_x={r['t_coll']:.3f}s;"
+                f"dominant={r['dominant']};useful={r['useful_ratio']:.2f}")
+    # also dump a machine-readable summary for EXPERIMENTS.md generation
+    out = {m: analyze(m) for m in ("16x16", "2x16x16")}
+    (ARTIFACTS / "roofline.json").write_text(json.dumps(out, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Benchmark orchestrator: one section per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated section names to run")
+    args = ap.parse_args()
+
+    from . import (fig7_8_variability, fig13_tuning_sweep, roofline,
+                   table4_energy, table5_datasets, table6_comparison)
+    sections = {
+        "table4": table4_energy.main,
+        "table5": table5_datasets.main,
+        "table6": table6_comparison.main,
+        "fig7_8": fig7_8_variability.main,
+        "fig13": fig13_tuning_sweep.main,
+        "roofline": roofline.main,
+    }
+    chosen = (args.only.split(",") if args.only else list(sections))
+    print("name,us_per_call,derived")
+    for name in chosen:
+        try:
+            sections[name]()
+        except Exception as e:
+            print(f"{name}/ERROR,0.0,{type(e).__name__}:{str(e)[:120]}")
+            traceback.print_exc(file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

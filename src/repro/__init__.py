@@ -1,0 +1,6 @@
+"""repro — IMPACT (Y-Flash CoTM) reproduction + multi-pod JAX framework.
+
+See README.md for layout, DESIGN.md for the TPU adaptation map, and
+EXPERIMENTS.md for the reproduction/dry-run/roofline/perf record.
+"""
+__version__ = "1.0.0"

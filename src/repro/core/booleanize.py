@@ -1,0 +1,41 @@
+"""Booleanization: raw features -> Boolean literals (original + negated).
+
+The paper's data-preparation step: each feature is threshold-encoded into one
+or more bits; every bit is paired with its negation, so K = 2 * n_bits.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def threshold_bits(x: Array, thresholds: Array) -> Array:
+    """x: (..., F) -> bits (..., F * len(thresholds)) via x > t (thermometer)."""
+    bits = x[..., None] > thresholds  # (..., F, T)
+    return bits.reshape(*x.shape[:-1], -1)
+
+
+def thermometer_thresholds(n_bits: int, lo: float = 0.0, hi: float = 1.0) -> Array:
+    """Evenly spaced thresholds strictly inside (lo, hi)."""
+    return lo + (hi - lo) * (jnp.arange(1, n_bits + 1) / (n_bits + 1))
+
+
+def with_negations(bits: Array) -> Array:
+    """bits (..., B) -> literals (..., 2B): [bits, ~bits]."""
+    return jnp.concatenate([bits, ~bits], axis=-1)
+
+
+def booleanize(x: Array, *, n_bits: int = 1, lo: float = 0.0,
+               hi: float = 1.0) -> Array:
+    """Full pipeline: threshold-encode then append negations.
+
+    x (..., F) -> literals (..., 2 * F * n_bits) bool.
+    """
+    t = thermometer_thresholds(n_bits, lo, hi)
+    return with_negations(threshold_bits(x, t))
+
+
+def n_literals(n_features: int, n_bits: int = 1) -> int:
+    return 2 * n_features * n_bits

@@ -1,0 +1,131 @@
+"""Coalesced Tsetlin Machine (CoTM) — functional JAX implementation.
+
+The CoTM [Glimsdal & Granmo, arXiv:2108.07594] shares one pool of ``n``
+clauses across ``m`` classes through a signed integer weight matrix
+``W (m, n)``.  Each clause is a conjunction over ``K`` Boolean literals
+selected by Tsetlin Automata (TA).
+
+The computational identities used throughout this repo (and mirrored by the
+IMPACT crossbars) are:
+
+    include_kj = ta_state_kj > n_states            # TA action
+    viol_bj    = sum_k (1 - L_bk) * include_kj     # "interaction current"
+    clause_bj  = (viol_bj == 0)                    # CSA threshold
+    scores_bi  = sum_j W_ij * clause_bj            # class crossbar column sum
+    pred_b     = argmax_i scores_bi
+
+``viol`` is exactly the clause-column current of the paper's clause crossbar
+(each (literal=0, include) pair contributes ~5uA; the CSA fires "0" above
+4.1uA, i.e. whenever at least one violation exists), and ``scores`` is the
+class-crossbar column current.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class CoTMConfig:
+    n_literals: int          # K (features *including* negations)
+    n_clauses: int           # n
+    n_classes: int           # m
+    n_states: int = 128      # N: per-action state count (states span [1, 2N])
+    threshold: int = 32      # T: vote clamp used by training feedback
+    specificity: float = 5.0  # s
+    boost_true_positive: bool = True
+
+    def init(self, key: Array) -> "CoTMParams":
+        kt, _ = jax.random.split(key)
+        # TAs start uniformly at the exclude/include boundary (N or N+1).
+        ta = jnp.asarray(
+            self.n_states
+            + jax.random.bernoulli(kt, 0.5, (self.n_literals, self.n_clauses)),
+            jnp.int32,
+        )
+        w = jnp.zeros((self.n_classes, self.n_clauses), jnp.int32)
+        return CoTMParams(ta_state=ta, weights=w)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CoTMParams:
+    ta_state: Array   # (K, n) int32 in [1, 2N]
+    weights: Array    # (m, n) int32 signed
+
+
+# ---------------------------------------------------------------------------
+# Inference
+# ---------------------------------------------------------------------------
+
+def include_mask(ta_state: Array, n_states: int) -> Array:
+    """TA action: include iff the state sits in the upper half."""
+    return ta_state > n_states
+
+
+def violation_counts(literals: Array, include: Array) -> Array:
+    """Per-clause count of (literal==0, include) pairs: the crossbar current.
+
+    literals: (..., K) bool / {0,1};  include: (K, n) bool.
+    Returns (..., n) int32.
+    """
+    not_l = (1 - literals.astype(jnp.int8))
+    return jax.lax.dot_general(
+        not_l, include.astype(jnp.int8),
+        (((not_l.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def clause_outputs(literals: Array, include: Array, *, training: bool = False) -> Array:
+    """Boolean clause outputs (..., n).
+
+    During inference, "empty" clauses (no include) are forced to 0 so that
+    untrained clauses do not vote; during training they output 1 (standard TM
+    semantics so fresh clauses can capture patterns).
+    """
+    viol = violation_counts(literals, include)
+    fired = viol == 0
+    if not training:
+        nonempty = include.any(axis=0)
+        fired = jnp.logical_and(fired, nonempty)
+    return fired
+
+
+def class_scores(clauses: Array, weights: Array) -> Array:
+    """Weighted votes: (..., n) x (m, n) -> (..., m) int32."""
+    c = clauses.astype(jnp.int8)
+    return jax.lax.dot_general(
+        c, weights.astype(jnp.int32),
+        (((c.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def forward(params: CoTMParams, literals: Array, cfg: CoTMConfig,
+            *, training: bool = False) -> tuple[Array, Array]:
+    """Returns (clauses (..., n) bool, scores (..., m) int32)."""
+    inc = include_mask(params.ta_state, cfg.n_states)
+    clauses = clause_outputs(literals, inc, training=training)
+    return clauses, class_scores(clauses, params.weights)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def predict(params: CoTMParams, literals: Array, cfg: CoTMConfig) -> Array:
+    _, scores = forward(params, literals, cfg)
+    return jnp.argmax(scores, axis=-1)
+
+
+def to_unipolar(weights: Array) -> tuple[Array, Array]:
+    """Paper's signed->unsigned shift: W' = W + |W_min| (argmax preserving).
+
+    Returns (unipolar weights, the scalar shift that was added).
+    """
+    shift = jnp.maximum(-jnp.min(weights), 0)
+    return weights + shift, shift

@@ -1,0 +1,170 @@
+"""CoTM training: coalesced clause pool + signed weights, Type I/II feedback.
+
+Follows Glimsdal & Granmo (arXiv:2108.07594): per sample, the true class is
+reinforced with polarity c=+1 and one uniformly sampled negative class with
+polarity c=-1.  For a class update with polarity ``c``:
+
+    v   = clamp(scores[class], -T, T)
+    p   = (T - c*v) / (2T)                      # per-clause update probability
+    for each clause j drawn with prob p:
+        if sign(W[class, j]) == c:  Type I feedback (pattern reinforcement)
+        else:                       Type II feedback (pattern invalidation)
+        if clause_j fired:          W[class, j] += c
+
+Type I  (recognise): a fired clause strengthens includes of present literals
+        (prob 1 with boost, else (s-1)/s) and weakens includes of absent
+        literals (prob 1/s); a non-fired clause weakens all (prob 1/s).
+Type II (reject): a fired clause pushes excluded TAs of absent literals one
+        step toward include (prob 1), eventually breaking the clause.
+
+Two execution modes:
+
+* ``train_step_sequential`` — faithful per-sample scan (the reference
+  semantics; used by fidelity tests).
+* ``train_step_batch`` — the production/distributed mode.  The batch sum of
+  TA deltas factors into THREE (K,B)x(B,n) integer matmuls once the 1/s
+  Bernoulli thinning field is shared across the batch (mean-preserving; the
+  thinning then gates *accumulated* event counts instead of single events):
+
+      present = litT   @ (type1 & fired)          # reward counts
+      absent  = ~litT  @ (type1 & fired)          # penalty counts
+      inval   = ~litT  @ (type2 & fired)          # Type II counts
+      ta_delta = hi*present - lo*(absent + decay) + excluded*inval
+
+  This runs on the MXU, needs no (B,K,n) intermediates, and shards over the
+  batch axis with a single psum — it is the formulation lowered in the
+  multi-pod dry-run.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .cotm import (CoTMConfig, CoTMParams, class_scores, clause_outputs,
+                   include_mask)
+
+Array = jax.Array
+
+
+def _int_matmul(a: Array, b: Array) -> Array:
+    return jax.lax.dot_general(a, b, (((a.ndim - 1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.int32)
+
+
+def batch_deltas(params: CoTMParams, literals: Array, labels: Array,
+                 key: Array, cfg: CoTMConfig) -> tuple[Array, Array]:
+    """Summed (ta_delta (K,n), w_delta (m,n)) for a batch — matmul form."""
+    B, K = literals.shape
+    n = cfg.n_clauses
+    m = cfg.n_classes
+    T = cfg.threshold
+
+    inc = include_mask(params.ta_state, cfg.n_states)
+    fired = clause_outputs(literals, inc, training=True)        # (B, n)
+    scores = class_scores(fired, params.weights)                # (B, m)
+
+    k_neg, k_sel, k_hi, k_lo = jax.random.split(key, 4)
+    neg = (labels + jax.random.randint(k_neg, (B,), 1, m)) % m
+    tgt = jnp.concatenate([labels, neg])                        # (2B,)
+    pol = jnp.concatenate([jnp.ones(B, jnp.int32),
+                           -jnp.ones(B, jnp.int32)])            # (2B,)
+
+    rows = jnp.arange(B)
+    v = jnp.concatenate([scores[rows, labels], scores[rows, neg]])
+    v = jnp.clip(v, -T, T)
+    p = (T - pol * v).astype(jnp.float32) / (2 * T)             # (2B,)
+    sel = jax.random.bernoulli(k_sel, p[:, None], (2 * B, n))   # (2B, n)
+
+    w_rows = params.weights[tgt]                                # (2B, n)
+    sign = jnp.where(w_rows >= 0, 1, -1)
+    match = sign == pol[:, None]
+    fired2 = jnp.concatenate([fired, fired])                    # (2B, n)
+
+    t1f = (sel & match & fired2).astype(jnp.int8)               # (2B, n)
+    t1nf = (sel & match & ~fired2)                              # (2B, n)
+    t2f = (sel & ~match & fired2).astype(jnp.int8)              # (2B, n)
+
+    lit_t = literals.astype(jnp.int8).T                         # (K, B)
+    lit2_t = jnp.concatenate([lit_t, lit_t], axis=1)            # (K, 2B)
+    not_lit2_t = (1 - lit2_t)
+
+    present = _int_matmul(lit2_t, t1f)                          # (K, n)
+    absent = _int_matmul(not_lit2_t, t1f)                       # (K, n)
+    inval = _int_matmul(not_lit2_t, t2f)                        # (K, n)
+    decay = t1nf.sum(0, dtype=jnp.int32)[None, :]               # (1, n)
+
+    s = cfg.specificity
+    hi = (jnp.ones((K, n), jnp.int32) if cfg.boost_true_positive
+          else jax.random.bernoulli(k_hi, (s - 1.0) / s, (K, n)).astype(jnp.int32))
+    lo = jax.random.bernoulli(k_lo, 1.0 / s, (K, n)).astype(jnp.int32)
+    excl = (~inc).astype(jnp.int32)
+
+    ta_delta = hi * present - lo * (absent + decay) + excl * inval
+
+    # Weight deltas: scatter-add per-class rows == one-hot matmul (MXU).
+    onehot = jax.nn.one_hot(tgt, m, dtype=jnp.int8).T           # (m, 2B)
+    w_upd = (pol[:, None] * (sel & fired2)).astype(jnp.int8)    # (2B, n)
+    w_delta = _int_matmul(onehot, w_upd)                        # (m, n)
+    return ta_delta, w_delta
+
+
+def apply_deltas(params: CoTMParams, ta_delta: Array, w_delta: Array,
+                 cfg: CoTMConfig) -> CoTMParams:
+    ta = jnp.clip(params.ta_state + ta_delta, 1, 2 * cfg.n_states)
+    return CoTMParams(ta_state=ta, weights=params.weights + w_delta)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def train_step_batch(params: CoTMParams, literals: Array, labels: Array,
+                     key: Array, cfg: CoTMConfig) -> CoTMParams:
+    ta_d, w_d = batch_deltas(params, literals, labels, key, cfg)
+    return apply_deltas(params, ta_d, w_d, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Faithful per-sample reference semantics
+# ---------------------------------------------------------------------------
+
+def _sample_deltas(params: CoTMParams, literals: Array, label: Array,
+                   key: Array, cfg: CoTMConfig) -> tuple[Array, Array]:
+    """Per-sample deltas (batch of 1) via the same matmul machinery."""
+    ta_d, w_d = batch_deltas(params, literals[None, :], label[None],
+                             key, cfg)
+    return ta_d, w_d
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def train_step_sequential(params: CoTMParams, literals: Array, labels: Array,
+                          key: Array, cfg: CoTMConfig) -> CoTMParams:
+    """Faithful per-sample sequential updates (fori_loop over the batch)."""
+    B = literals.shape[0]
+    keys = jax.random.split(key, B)
+
+    def body(i, p):
+        ta_d, w_d = _sample_deltas(p, literals[i], labels[i], keys[i], cfg)
+        return apply_deltas(p, ta_d, w_d, cfg)
+
+    return jax.lax.fori_loop(0, B, body, params)
+
+
+def train_epochs(params: CoTMParams, literals: Array, labels: Array,
+                 key: Array, cfg: CoTMConfig, *, epochs: int = 1,
+                 batch_size: int = 32, sequential: bool = False,
+                 ) -> CoTMParams:
+    """Simple host-side training loop (shuffles once per epoch)."""
+    n = literals.shape[0]
+    n_batches = n // batch_size
+    step = train_step_sequential if sequential else train_step_batch
+    for _ in range(epochs):
+        key, k_shuf, k_ep = jax.random.split(key, 3)
+        perm = jax.random.permutation(k_shuf, n)
+        lit = literals[perm][: n_batches * batch_size]
+        lab = labels[perm][: n_batches * batch_size]
+        lit = lit.reshape(n_batches, batch_size, -1)
+        lab = lab.reshape(n_batches, batch_size)
+        for b in range(n_batches):
+            params = step(params, lit[b], lab[b],
+                          jax.random.fold_in(k_ep, b), cfg)
+    return params

@@ -1,0 +1,14 @@
+from .energy import EnergyReport
+from .pipeline import IMPACTConfig, IMPACTSystem, build_system
+from .tiles import (ClassTile, ClauseTile, encode_class_tile,
+                    encode_clause_tile, weight_targets)
+from .yflash import (DeviceVariation, G_HCS_BOOL, G_LCS, I_CSA_THRESHOLD,
+                     erase_pulse, program_pulse, pulse_until, read_current)
+
+__all__ = [
+    "EnergyReport", "IMPACTConfig", "IMPACTSystem", "build_system",
+    "ClassTile", "ClauseTile", "encode_class_tile", "encode_clause_tile",
+    "weight_targets", "DeviceVariation", "G_HCS_BOOL", "G_LCS",
+    "I_CSA_THRESHOLD", "erase_pulse", "program_pulse", "pulse_until",
+    "read_current",
+]

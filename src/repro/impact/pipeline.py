@@ -1,0 +1,177 @@
+"""End-to-end IMPACT system: trained CoTM -> crossbar tiles -> inference.
+
+Implements the paper's Fig. 14 modular scaling:
+
+* literals beyond one tile's rows are split across R "row shards"; each
+  shard produces PARTIAL clauses, combined by digital AND;
+* clauses beyond one tile's rows in the class crossbar are split across S
+  shards; partial class currents are digitised (ADC) and summed digitally.
+
+The same split is the `model`-axis sharding used by the distributed runtime
+(the digital AND == psum of violation bits; the ADC+add == psum of partial
+sums), so this module is both the hardware simulator and the reference
+semantics for the multi-pod lowering.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..core.cotm import CoTMConfig, CoTMParams, include_mask, to_unipolar
+from . import energy as energy_mod
+from .energy import EnergyReport
+from .tiles import (ClassTile, ClauseTile, encode_class_tile,
+                    encode_clause_tile)
+from .yflash import I_CSA_THRESHOLD, T_READ, V_READ, read_current
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class IMPACTConfig:
+    max_tile_rows: int = 2048     # clause-tile rows (literals)
+    max_tile_cols: int = 512      # clause-tile columns (clauses)
+    max_class_rows: int = 2048    # class-tile rows (clauses)
+    variability: bool = True
+    finetune: bool = True
+    mask_empty: bool = True
+    encode_pulse_width: float = 1e-3
+
+
+def _pad_to(x: Array, size: int, axis: int, value=0) -> Array:
+    pad = size - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@dataclasses.dataclass
+class IMPACTSystem:
+    """Programmed crossbar grid + digital periphery."""
+    clause_g: Array        # (R, C, tr, tc) conductances
+    nonempty: Array        # (n_pad,) digital empty-clause mask
+    class_g: Array         # (S, sr, m) conductances
+    n_literals: int
+    n_clauses: int
+    n_classes: int
+    cfg: IMPACTConfig
+    encode_stats: dict[str, Any]
+
+    # -- inference ----------------------------------------------------------
+    def clause_bits(self, literals: Array) -> tuple[Array, Array]:
+        """(B, K) -> (clauses (B, n_pad) bool, clause tile currents)."""
+        B = literals.shape[0]
+        R, C, tr, tc = self.clause_g.shape
+        lit = _pad_to(literals.astype(jnp.float32), R * tr, axis=1, value=1)
+        drive = (1.0 - lit).reshape(B, R, tr)
+        i_cell = read_current(self.clause_g)                    # (R,C,tr,tc)
+        i_col = jnp.einsum("brk,rckj->brcj", drive, i_cell)     # (B,R,C,tc)
+        partial = i_col < I_CSA_THRESHOLD                       # CSA per shard
+        fired = jnp.all(partial, axis=1).reshape(B, C * tc)     # digital AND
+        if self.cfg.mask_empty:
+            fired = jnp.logical_and(fired, self.nonempty)
+        return fired, i_col
+
+    def class_scores(self, clauses: Array) -> tuple[Array, Array]:
+        """(B, n_pad) -> (scores (B, m) = summed shard currents, currents)."""
+        B = clauses.shape[0]
+        S, sr, m = self.class_g.shape
+        drive = _pad_to(clauses.astype(jnp.float32), S * sr, axis=1)
+        drive = drive.reshape(B, S, sr)
+        i_cell = read_current(self.class_g)                     # (S,sr,m)
+        i_col = jnp.einsum("bsn,snm->bsm", drive, i_cell)       # per-shard ADC
+        return i_col.sum(axis=1), i_col                         # digital add
+
+    def predict(self, literals: Array) -> Array:
+        clauses, _ = self.clause_bits(literals)
+        scores, _ = self.class_scores(clauses)
+        return jnp.argmax(scores, axis=-1)
+
+    def infer_with_report(self, literals: Array) -> tuple[Array, EnergyReport]:
+        B = literals.shape[0]
+        clauses, i_clause = self.clause_bits(literals)
+        scores, i_class = self.class_scores(clauses)
+        preds = jnp.argmax(scores, axis=-1)
+
+        e_clause = float((V_READ * i_clause * T_READ).sum())
+        e_class = float((V_READ * i_class * T_READ).sum())
+        R, C, tr, tc = self.clause_g.shape
+        lat = energy_mod.inference_latency(
+            n_clause_cols=min(tc, self.n_clauses), n_class_cols=self.n_classes,
+            clause_tiles_parallel=1)
+        ops = B * (self.n_literals * self.n_clauses
+                   + self.n_clauses * self.n_classes)
+        report = EnergyReport(
+            read_energy_j=e_clause + e_class,
+            clause_energy_j=e_clause, class_energy_j=e_class,
+            program_energy_j=self.encode_stats["program_energy_j"],
+            erase_energy_j=self.encode_stats["erase_energy_j"],
+            latency_s=lat, ops_crosspoint=ops, datapoints=B)
+        return preds, report
+
+    # -- metrics ------------------------------------------------------------
+    def area_mm2(self) -> dict[str, float]:
+        # Paper convention (Table 4): area of the *occupied* region.
+        return dict(
+            clause=energy_mod.tile_area_mm2(self.n_literals, self.n_clauses),
+            class_=energy_mod.tile_area_mm2(self.n_clauses, self.n_classes),
+        )
+
+
+def build_system(params: CoTMParams, cfg: CoTMConfig, key: Array,
+                 impact_cfg: IMPACTConfig = IMPACTConfig()) -> IMPACTSystem:
+    """Map a trained CoTM onto crossbar tiles (Figs. 6, 9, 11)."""
+    K, n = params.ta_state.shape
+    m = params.weights.shape[0]
+    ic = impact_cfg
+
+    include = include_mask(params.ta_state, cfg.n_states)
+    R = -(-K // ic.max_tile_rows)
+    C = -(-n // ic.max_tile_cols)
+    inc_pad = _pad_to(_pad_to(include, R * ic.max_tile_rows, 0),
+                      C * ic.max_tile_cols, 1)
+
+    k_cl, k_w = jax.random.split(key)
+    # Encode every clause tile (vectorised over the whole padded array —
+    # equivalent to per-tile encoding since cells are independent).
+    tile_inc = inc_pad  # (R*tr, C*tc)
+    clause_tile, cl_stats = encode_clause_tile(
+        tile_inc, k_cl, pulse_width=ic.encode_pulse_width,
+        variability=ic.variability)
+    tr, tc = ic.max_tile_rows, ic.max_tile_cols
+    clause_g = clause_tile.g.reshape(R, tr, C, tc).transpose(0, 2, 1, 3)
+
+    # Class crossbar: signed -> unipolar shift, then two-phase tuning.
+    w_uni, shift = to_unipolar(params.weights)                 # (m, n)
+    w_t = w_uni.T                                              # (n, m)
+    S = -(-n // ic.max_class_rows)
+    w_pad = _pad_to(w_t, S * ic.max_class_rows, 0)
+    class_tile, w_stats = encode_class_tile(
+        w_pad, k_w, variability=ic.variability, finetune=ic.finetune)
+    class_g = class_tile.g.reshape(S, ic.max_class_rows, m)
+
+    e_prog_cl, e_er_cl = energy_mod.encode_energy(
+        cl_stats["prog_pulses"], cl_stats["erase_pulses"],
+        ic.encode_pulse_width, ic.encode_pulse_width)
+    pre_p = w_stats["pretune_prog"]
+    pre_e = w_stats["pretune_erase"]
+    e_prog_w, e_er_w = energy_mod.encode_energy(pre_p, pre_e, 500e-6, 500e-6)
+    if ic.finetune:
+        e_fp, e_fe = energy_mod.encode_energy(
+            w_stats["finetune_prog"], w_stats["finetune_erase"], 50e-6, 50e-6)
+        e_prog_w += e_fp
+        e_er_w += e_fe
+
+    stats = dict(clause=cl_stats, weights=w_stats,
+                 weight_shift=int(shift),
+                 program_energy_j=e_prog_cl + e_prog_w,
+                 erase_energy_j=e_er_cl + e_er_w)
+    nonempty = _pad_to(include.any(axis=0), C * tc, 0)
+    return IMPACTSystem(
+        clause_g=clause_g, nonempty=nonempty, class_g=class_g,
+        n_literals=K, n_clauses=n, n_classes=m, cfg=ic, encode_stats=stats)

@@ -1,0 +1,178 @@
+"""IMPACT crossbar tiles: clause tile (Boolean mode) + class tile (analog).
+
+Both tiles store conductances and compute with Ohm + Kirchhoff exactly as in
+the paper (Fig. 4).  Inputs arrive as voltages:
+
+* clause tile rows:  literal 0 -> V_R, literal 1 -> floating 'Z' (0 V drive)
+  — i.e. the multiplied operand is NOT(literal);
+* class tile rows:   clause 1 -> V_R, clause 0 -> 'Z'.
+
+Column read-out:
+
+* clause tile: current-sense amplifier thresholds the column current at
+  4.1 uA — "any (literal=0, include) pair present" => clause 0;
+* class tile: column currents ARE the class-weighted sums (ADC), argmax in
+  the digital domain.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import yflash
+from .yflash import (DeviceVariation, G_HCS_BOOL, G_LCS, I_CSA_THRESHOLD,
+                     V_READ, read_current)
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ClauseTile:
+    """K x n Boolean-mode crossbar storing TA include/exclude actions."""
+    g: Array                   # (K, n) conductances (S)
+    nonempty: Array            # (n,) digital mask: clause has >=1 include
+
+    def currents(self, literals: Array) -> Array:
+        """Column currents for a batch of literal vectors (..., K) -> (..., n).
+
+        Only literal==0 rows are driven at V_R; literal==1 rows float.
+        """
+        drive = (1.0 - literals.astype(jnp.float32))           # (..., K)
+        return drive @ read_current(self.g)                    # (..., n)
+
+    def clauses(self, literals: Array, *, mask_empty: bool = True) -> Array:
+        """CSA decision: clause fires iff column current < 4.1 uA."""
+        fired = self.currents(literals) < I_CSA_THRESHOLD
+        if mask_empty:
+            fired = jnp.logical_and(fired, self.nonempty)
+        return fired
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ClassTile:
+    """n x m analog-mode crossbar storing unipolar clause weights."""
+    g: Array                   # (n, m) conductances (S)
+
+    def currents(self, clauses: Array) -> Array:
+        """(..., n) Boolean clauses -> (..., m) class column currents."""
+        drive = clauses.astype(jnp.float32)
+        return drive @ read_current(self.g)
+
+    def scores(self, clauses: Array) -> Array:
+        return self.currents(clauses)
+
+    def predict(self, clauses: Array) -> Array:
+        return jnp.argmax(self.currents(clauses), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Encoding (Figs. 9-10): TA actions -> Boolean conductances
+# ---------------------------------------------------------------------------
+
+def encode_clause_tile(include: Array, key: Array, *,
+                       pulse_width: float = 1e-3,
+                       variability: bool = True,
+                       max_pulses: int = 64,
+                       ) -> tuple[ClauseTile, dict]:
+    """Program a clause tile from an include mask (K, n).
+
+    All cells start erased at HCS; excluded cells are programmed to
+    LCS < 1 nS with 1 ms pulses (paper Fig. 9d / Fig. 10); included cells
+    are erased up to > 2.4 uS (mostly already there).
+    Returns the tile and encode statistics (pulse histograms, energy inputs).
+    """
+    K, n = include.shape
+    k_var, k_init, k_pulse = jax.random.split(key, 3)
+    var = (DeviceVariation.sample(k_var, (K, n)) if variability
+           else DeviceVariation.none((K, n)))
+    # Freshly erased array: HCS with mild spread.
+    g0 = 2.5e-6 * jnp.exp(0.05 * jax.random.normal(k_init, (K, n)))
+
+    target_lo = jnp.where(include, G_HCS_BOOL, 0.0)
+    target_hi = jnp.where(include, jnp.inf, G_LCS)
+    g, n_prog, n_erase = yflash.pulse_until(
+        g0, target_lo=target_lo, target_hi=target_hi,
+        width_prog=pulse_width, width_erase=pulse_width,
+        var=var, key=k_pulse, max_pulses=max_pulses)
+
+    stats = dict(prog_pulses=n_prog, erase_pulses=n_erase,
+                 include_fraction=include.mean(),
+                 pulse_width=pulse_width)
+    return ClauseTile(g=g, nonempty=include.any(axis=0)), stats
+
+
+# ---------------------------------------------------------------------------
+# Weight mapping (Figs. 6, 11-12): two-phase analog tuning
+# ---------------------------------------------------------------------------
+
+def weight_targets(weights_unipolar: Array, w_max: Array | int) -> Array:
+    """Divide [G_RANGE_LO, G_RANGE_HI] into w_max uniform segments and map
+    each integer weight to its segment conductance (paper Fig. 6/11)."""
+    w_max = jnp.maximum(w_max, 1)
+    frac = weights_unipolar.astype(jnp.float32) / w_max
+    return yflash.G_RANGE_LO + frac * (yflash.G_RANGE_HI - yflash.G_RANGE_LO)
+
+
+def encode_class_tile(weights_unipolar: Array, key: Array, *,
+                      w_max: int | None = None,
+                      pretune_tol_segments: float = 20.0,
+                      finetune_tol_segments: float = 5.0,
+                      pretune_width: float = 500e-6,
+                      finetune_width: float = 50e-6,
+                      variability: bool = True,
+                      finetune: bool = True,
+                      adaptive: bool = False,
+                      max_pulses: int = 96,
+                      ) -> tuple[ClassTile, dict]:
+    """Program the class tile from unipolar integer weights (n, m).
+
+    Pre-tune: 500 us pulses to within +/-20 segments of target;
+    fine-tune: 50 us pulses to within +/-5 segments (paper Figs. 6, 12, 13).
+
+    ``adaptive=True`` (beyond paper) replaces the fixed two-phase schedule
+    with the closed-loop width-selecting controller
+    (``yflash.tune_adaptive``) driving straight to the fine tolerance.
+    """
+    n, m = weights_unipolar.shape
+    if w_max is None:
+        w_max = int(jnp.max(weights_unipolar))
+    seg = (yflash.G_RANGE_HI - yflash.G_RANGE_LO) / max(w_max, 1)
+    target = weight_targets(weights_unipolar, w_max)
+
+    k_var, k_init, k_pre, k_fine = jax.random.split(key, 4)
+    var = (DeviceVariation.sample(k_var, (n, m)) if variability
+           else DeviceVariation.none((n, m)))
+    # Paper: all cells erased to HCS before mapping for a uniform transition.
+    g0 = 2.5e-6 * jnp.exp(0.05 * jax.random.normal(k_init, (n, m)))
+
+    if adaptive:
+        tol = finetune_tol_segments * seg
+        g2, p_a, e_a = yflash.tune_adaptive(
+            g0, target, jnp.asarray(tol), var=var, key=k_pre,
+            max_pulses=max_pulses)
+        stats = dict(pretune_prog=p_a, pretune_erase=e_a,
+                     segment_size=seg, w_max=w_max, adaptive=True)
+        return ClassTile(g=g2), stats
+
+    tol_pre = pretune_tol_segments * seg
+    g1, p_pre, e_pre = yflash.pulse_until(
+        g0, target_lo=target - tol_pre, target_hi=target + tol_pre,
+        width_prog=pretune_width, width_erase=pretune_width,
+        var=var, key=k_pre, max_pulses=max_pulses)
+
+    stats = dict(pretune_prog=p_pre, pretune_erase=e_pre,
+                 segment_size=seg, w_max=w_max)
+    if finetune:
+        tol_fine = finetune_tol_segments * seg
+        g2, p_f, e_f = yflash.pulse_until(
+            g1, target_lo=target - tol_fine, target_hi=target + tol_fine,
+            width_prog=finetune_width, width_erase=finetune_width,
+            var=var, key=k_fine, max_pulses=max_pulses)
+        stats.update(finetune_prog=p_f, finetune_erase=e_f)
+    else:
+        g2 = g1
+    return ClassTile(g=g2), stats

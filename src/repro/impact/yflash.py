@@ -1,0 +1,197 @@
+"""Y-Flash memristor digital twin.
+
+Models the 180 nm two-terminal Y-Flash device of the paper [16-18]:
+
+* program pulses (5 V) move conductance DOWN (toward LCS) — exponential
+  decay with per-device time constant;
+* erase pulses (8 V) move conductance UP (toward HCS) — exponential
+  approach to a ceiling;
+* cycle-to-cycle (C2C) noise: per-pulse multiplicative log-normal;
+* device-to-device (D2D) spread: per-device log-normal scaling of the
+  program/erase time constants and of the asymptotes.
+
+Calibration anchors (paper figures/tables):
+  - Boolean programming with 1 ms pulses: HCS 2.5 uS -> LCS < 1 nS in
+    ~7 pulses on average (Fig. 10).
+  - D2D test (200 us program / 100 us erase): 23-61 program pulses to LCS,
+    15-51 erase pulses to HCS > 1 uS (Fig. 8).
+  - C2C LCS mean 0.925 nS SD ~4.8 %; HCS mean 1.01 uS SD ~9.7 % (Fig. 7).
+  - Read: V_R = 2 V, 5 ns; HCS read current ~4.5-5 uA; LCS read current
+    ~1 nA nominal, ~3 nA average due to I-V nonlinearity (Fig. 5c).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# --- device constants (SI units) -------------------------------------------
+G_LCS = 1e-9          # Boolean low-conductance state threshold (S)
+G_HCS_BOOL = 2.4e-6   # Boolean high-conductance state threshold (S)
+G_MIN = 0.25e-9       # programming floor (S)
+G_MAX = 3.0e-6        # erasing ceiling (S)
+G_RANGE_LO = 1e-9     # analog-mode usable range (S)
+G_RANGE_HI = 2.5e-6
+V_READ = 2.0          # read voltage (V)
+T_READ = 5e-9         # read pulse width (s)
+V_PROG = 5.0
+V_ERASE = 8.0
+TAU_PROG = 8.96e-4    # s — gives ~7 pulses HCS->LCS at 1 ms width
+TAU_ERASE = 6.2e-3    # s — gives ~25 pulses LCS->1 uS at 100 us width
+I_CSA_THRESHOLD = 4.1e-6   # A — clause CSA decision boundary
+LCS_NONLINEARITY = 1.5     # low-G read current boost (Fig. 5c: ~3 nA vs 2 nA)
+G_NONLIN_CUTOFF = 10e-9    # S — below this the nonlinearity applies
+
+# Variability scales (calibrated against Figs. 7-8 statistics).
+C2C_SIGMA = 0.048     # per-pulse log-normal sigma (LCS SD ~4.8 %)
+C2C_SIGMA_HCS = 0.097
+D2D_SIGMA_TAU = 0.22  # per-device tau spread -> 23-61 pulse D2D range
+D2D_SIGMA_G = 0.04
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceVariation:
+    """Per-device (D2D) multiplicative factors, sampled once per array."""
+    tau_prog: Array   # scales the program time constant
+    tau_erase: Array
+    g_floor: Array    # scales G_MIN
+    g_ceil: Array     # scales G_MAX
+
+    @staticmethod
+    def sample(key: Array, shape: tuple[int, ...]) -> "DeviceVariation":
+        ks = jax.random.split(key, 4)
+        ln = lambda k, s: jnp.exp(s * jax.random.normal(k, shape))
+        return DeviceVariation(
+            tau_prog=ln(ks[0], D2D_SIGMA_TAU),
+            tau_erase=ln(ks[1], D2D_SIGMA_TAU),
+            g_floor=ln(ks[2], D2D_SIGMA_G),
+            g_ceil=ln(ks[3], D2D_SIGMA_G),
+        )
+
+    @staticmethod
+    def none(shape: tuple[int, ...]) -> "DeviceVariation":
+        one = jnp.ones(shape)
+        return DeviceVariation(one, one, one, one)
+
+
+jax.tree_util.register_dataclass(
+    DeviceVariation, data_fields=["tau_prog", "tau_erase", "g_floor", "g_ceil"],
+    meta_fields=[])
+
+
+def program_pulse(g: Array, width: float, var: DeviceVariation,
+                  key: Array | None = None) -> Array:
+    """One 5 V program pulse: exponential decay toward the floor."""
+    floor = G_MIN * var.g_floor
+    decay = jnp.exp(-width / (TAU_PROG * var.tau_prog))
+    if key is not None:
+        decay = decay * jnp.exp(C2C_SIGMA * jax.random.normal(key, g.shape))
+    return floor + (g - floor) * jnp.clip(decay, 0.0, 1.0)
+
+
+def erase_pulse(g: Array, width: float, var: DeviceVariation,
+                key: Array | None = None) -> Array:
+    """One 8 V erase pulse: exponential approach to the ceiling."""
+    ceil = G_MAX * var.g_ceil
+    rate = 1.0 - jnp.exp(-width / (TAU_ERASE * var.tau_erase))
+    if key is not None:
+        rate = rate * jnp.exp(C2C_SIGMA_HCS * jax.random.normal(key, g.shape))
+    return g + (ceil - g) * jnp.clip(rate, 0.0, 1.0)
+
+
+def read_current(g: Array, v_read: float = V_READ) -> Array:
+    """I = G*V with the paper's low-conductance nonlinearity (Fig. 5c)."""
+    nl = jnp.where(g < G_NONLIN_CUTOFF, LCS_NONLINEARITY, 1.0)
+    return g * v_read * nl
+
+
+def pulse_until(g: Array, *, target_lo: Array, target_hi: Array,
+                width_prog: float, width_erase: float,
+                var: DeviceVariation, key: Array,
+                max_pulses: int = 128) -> tuple[Array, Array, Array]:
+    """Vectorised program/erase loop: drive every cell into
+    [target_lo, target_hi].  Returns (G, prog_pulse_counts, erase_pulse_counts).
+
+    This is the primitive behind both the Boolean encode (Fig. 9-10) and the
+    analog pre-tune / fine-tune phases (Figs. 6, 12).
+    """
+    def cond(state):
+        g, _, _, i, _ = state
+        done = (g >= target_lo) & (g <= target_hi)
+        return (~jnp.all(done)) & (i < max_pulses)
+
+    def body(state):
+        g, np_, ne_, i, k = state
+        k, kp, ke = jax.random.split(k, 3)
+        too_high = g > target_hi
+        too_low = g < target_lo
+        g_p = program_pulse(g, width_prog, var, kp)
+        g_e = erase_pulse(g, width_erase, var, ke)
+        g = jnp.where(too_high, g_p, jnp.where(too_low, g_e, g))
+        return (g, np_ + too_high.astype(jnp.int32),
+                ne_ + too_low.astype(jnp.int32), i + 1, k)
+
+    zeros = jnp.zeros(g.shape, jnp.int32)
+    g, n_prog, n_erase, _, _ = jax.lax.while_loop(
+        cond, body, (g, zeros, zeros, jnp.int32(0), key))
+    return g, n_prog, n_erase
+
+
+def tune_adaptive(g: Array, target: Array, tol: Array, *,
+                  var: DeviceVariation, key: Array,
+                  widths: tuple[float, ...] = (500e-6, 50e-6, 5e-6),
+                  max_pulses: int = 64) -> tuple[Array, Array, Array]:
+    """Closed-loop programmer with per-pulse WIDTH SELECTION (beyond
+    paper).  The paper's two-phase schedule applies one fixed width per
+    phase; real lab programmers pick, per cell per step, the widest pulse
+    whose predicted landing point is closest to the target — coarse pulses
+    cover distance, fine pulses settle inside the band without the
+    overshoot that costs the fixed-width controller ~20 accuracy points
+    before fine-tuning (see benchmarks/fig13).
+
+    Vectorised greedy: evaluate the deterministic landing point for every
+    candidate width (program and erase), apply the per-cell argmin, repeat
+    until all cells are within ``tol`` of ``target``.
+    Returns (G, program_pulse_counts, erase_pulse_counts).
+    """
+    widths_arr = list(widths)
+
+    def land_all(g):
+        cands = []
+        for w in widths_arr:
+            cands.append(program_pulse(g, w, var))
+            cands.append(erase_pulse(g, w, var))
+        return jnp.stack(cands)                          # (2W, ...)
+
+    def cond(state):
+        g, _, _, i, _ = state
+        return (~jnp.all(jnp.abs(g - target) <= tol)) & (i < max_pulses)
+
+    def body(state):
+        g, np_, ne_, i, k = state
+        k, k1 = jax.random.split(k)
+        cands = land_all(g)
+        err = jnp.abs(cands - target)
+        best = jnp.argmin(err, axis=0)                   # (2W index per cell)
+        is_prog = (best % 2) == 0
+        width = jnp.take(jnp.asarray(widths_arr), best // 2)
+        # Re-apply the chosen move WITH C2C noise.
+        noise = jnp.exp(C2C_SIGMA * jax.random.normal(k1, g.shape))
+        floor = G_MIN * var.g_floor
+        ceil = G_MAX * var.g_ceil
+        decay = jnp.exp(-width / (TAU_PROG * var.tau_prog)) * noise
+        rate = (1.0 - jnp.exp(-width / (TAU_ERASE * var.tau_erase))) * noise
+        g_prog = floor + (g - floor) * jnp.clip(decay, 0.0, 1.0)
+        g_erase = g + (ceil - g) * jnp.clip(rate, 0.0, 1.0)
+        done = jnp.abs(g - target) <= tol
+        g_new = jnp.where(done, g, jnp.where(is_prog, g_prog, g_erase))
+        return (g_new, np_ + (~done & is_prog).astype(jnp.int32),
+                ne_ + (~done & ~is_prog).astype(jnp.int32), i + 1, k)
+
+    zeros = jnp.zeros(g.shape, jnp.int32)
+    g, n_prog, n_erase, _, _ = jax.lax.while_loop(
+        cond, body, (g, zeros, zeros, jnp.int32(0), key))
+    return g, n_prog, n_erase

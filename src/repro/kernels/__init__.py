@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the IMPACT hot spots.
+
+Layout (one module per kernel + shared wrappers/oracles):
+
+* ``clause_eval.py``  — clause crossbar: binary matmul + CSA ``==0`` epilogue
+* ``class_sum.py``    — class crossbar: weighted vote accumulation
+* ``fused_cotm.py``   — both crossbars fused in one VMEM residency
+* ``crossbar_mvm.py`` — analog conductance MVM with read nonlinearity
+* ``ops.py``          — public jit'd wrappers (padding, interpret fallback)
+* ``ref.py``          — pure-jnp oracles (the test ground truth)
+"""
+from . import ops, ref
+from .ops import class_sum, clause_eval, crossbar_mvm, fused_cotm
+
+__all__ = ["ops", "ref", "class_sum", "clause_eval", "crossbar_mvm",
+           "fused_cotm"]

@@ -1,0 +1,157 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Responsibilities:
+
+* accept arbitrary shapes/dtypes and pad to MXU-aligned tiles with
+  *semantically neutral* padding (literal rows pad with 1 — a floating 'Z'
+  row in the paper's crossbar contributes no current; clause columns pad
+  with include=0/nonempty=0/weight=0);
+* pick interpret mode automatically on non-TPU backends so the same call
+  sites run in CI (CPU) and production (TPU);
+* offer a pure-XLA fallback (``impl="xla"``) for A/B testing.
+
+Oracles live in ``ref.py``; every wrapper here is exact-equality tested
+against them over shape sweeps and hypothesis-generated inputs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import clause_eval as _clause_kernel
+from . import class_sum as _class_kernel
+from . import crossbar_mvm as _mvm_kernel
+from . import fused_cotm as _fused_kernel
+from . import ref
+
+Array = jax.Array
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_axis(x: Array, mult: int, axis: int, value) -> Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def clause_eval(literals: Array, include: Array,
+                nonempty: Array | None = None, *, mode: str = "fired",
+                impl: str = "pallas", interpret: bool | None = None,
+                block_b: int = 128, block_n: int = 128,
+                block_k: int = 512) -> Array:
+    """Boolean clause outputs (B, N) bool, or violation counts int32.
+
+    literals (B, K) bool/{0,1}; include (K, N) bool/{0,1};
+    nonempty (N,) bool (defaults to ``include.any(0)``).
+    """
+    B, K = literals.shape
+    N = include.shape[1]
+    if nonempty is None:
+        nonempty = include.astype(bool).any(axis=0)
+    if impl == "xla":
+        out = (ref.clause_viol_ref(literals, include) if mode == "viol"
+               else ref.clause_eval_ref(literals, include, nonempty))
+        return out
+    if interpret is None:
+        interpret = _interpret_default()
+
+    block_k = min(block_k, max(128, -(-K // 128) * 128))
+    lit = _pad_axis(_pad_axis(literals.astype(jnp.int8), block_b, 0, 1),
+                    block_k, 1, 1)          # pad literals with 1 ('Z' rows)
+    inc = _pad_axis(_pad_axis(include.astype(jnp.int8), block_k, 0, 0),
+                    block_n, 1, 0)
+    ne = _pad_axis(nonempty.astype(jnp.int8)[None, :], block_n, 1, 0)
+    out = _clause_kernel.clause_eval(
+        lit, inc, ne, mode=mode, block_b=block_b, block_n=block_n,
+        block_k=block_k, interpret=interpret)[:B, :N]
+    return out if mode == "viol" else out.astype(bool)
+
+
+def class_sum(clauses: Array, weights: Array, *, impl: str = "pallas",
+              interpret: bool | None = None, block_b: int = 128,
+              block_n: int = 512, block_m: int = 128) -> Array:
+    """Class scores (B, M) int32 from clauses (B, N) and weights (N, M)."""
+    B, N = clauses.shape
+    M = weights.shape[1]
+    if impl == "xla":
+        return ref.class_sum_ref(clauses, weights)
+    if interpret is None:
+        interpret = _interpret_default()
+
+    block_n = min(block_n, max(128, -(-N // 128) * 128))
+    cl = _pad_axis(_pad_axis(clauses.astype(jnp.int8), block_b, 0, 0),
+                   block_n, 1, 0)
+    w = _pad_axis(_pad_axis(weights.astype(jnp.int32), block_n, 0, 0),
+                  block_m, 1, 0)
+    out = _class_kernel.class_sum(
+        cl, w, block_b=block_b, block_n=block_n, block_m=block_m,
+        interpret=interpret)
+    return out[:B, :M]
+
+
+def fused_cotm(literals: Array, include: Array, weights: Array,
+               nonempty: Array | None = None, *, impl: str = "pallas",
+               interpret: bool | None = None, block_b: int = 128,
+               block_n: int = 256) -> Array:
+    """Fused literals -> class scores (B, M) int32 (clauses stay in VMEM).
+
+    weights is (N, M) — i.e. the class-crossbar layout (paper stores W^T).
+    """
+    B, K = literals.shape
+    N, M = weights.shape
+    if nonempty is None:
+        nonempty = include.astype(bool).any(axis=0)
+    if impl == "xla":
+        return ref.fused_cotm_ref(literals, include, weights, nonempty)
+    if interpret is None:
+        interpret = _interpret_default()
+
+    block_n = min(block_n, max(128, -(-N // 128) * 128))
+    lit = _pad_axis(_pad_axis(literals.astype(jnp.int8), block_b, 0, 1),
+                    128, 1, 1)
+    inc = _pad_axis(_pad_axis(include.astype(jnp.int8), 128, 0, 0),
+                    block_n, 1, 0)
+    ne = _pad_axis(nonempty.astype(jnp.int8)[None, :], block_n, 1, 0)
+    w = _pad_axis(_pad_axis(weights.astype(jnp.int32), block_n, 0, 0),
+                  128, 1, 0)
+    out = _fused_kernel.fused_cotm(
+        lit, inc, ne, w, block_b=block_b, block_n=block_n,
+        interpret=interpret)
+    return out[:B, :M]
+
+
+def crossbar_mvm(drive: Array, g: Array, *, v_read: float = 2.0,
+                 nonlin: float = 1.5, cutoff: float = 10e-9,
+                 impl: str = "pallas", interpret: bool | None = None,
+                 block_b: int = 128, block_n: int = 128,
+                 block_k: int = 512) -> Array:
+    """Analog crossbar column currents (B, N) f32."""
+    B, K = drive.shape
+    N = g.shape[1]
+    if impl == "xla":
+        return ref.crossbar_mvm_ref(drive, g, v_read=v_read, nonlin=nonlin,
+                                    cutoff=cutoff)
+    if interpret is None:
+        interpret = _interpret_default()
+
+    block_k = min(block_k, max(128, -(-K // 128) * 128))
+    dr = _pad_axis(_pad_axis(drive.astype(jnp.float32), block_b, 0, 0.0),
+                   block_k, 1, 0.0)
+    # Pad conductances ABOVE the nonlinearity cutoff so padded cells do not
+    # get the LCS boost; padded drive rows are 0 so they contribute nothing.
+    gp = _pad_axis(_pad_axis(g.astype(jnp.float32), block_k, 0, 1.0),
+                   block_n, 1, 1.0)
+    out = _mvm_kernel.crossbar_mvm(
+        dr, gp, v_read=v_read, nonlin=nonlin, cutoff=cutoff,
+        block_b=block_b, block_n=block_n, block_k=block_k,
+        interpret=interpret)
+    return out[:B, :N]

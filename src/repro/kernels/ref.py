@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for the shape/dtype sweep tests: each kernel in
+``ops.py`` must ``assert_allclose`` against the function of the same name
+here (exact equality for the integer/Boolean kernels).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def clause_eval_ref(literals: Array, include: Array,
+                    nonempty: Array | None = None) -> Array:
+    """Boolean clause outputs.
+
+    literals (B, K) {0,1}; include (K, N) {0,1} -> fired (B, N) bool with
+    ``fired = (sum_k (1-L)*inc == 0) & nonempty``.
+    """
+    viol = clause_viol_ref(literals, include)
+    fired = viol == 0
+    if nonempty is not None:
+        fired = jnp.logical_and(fired, nonempty.astype(bool))
+    return fired
+
+
+def clause_viol_ref(literals: Array, include: Array) -> Array:
+    """Violation counts (the clause-crossbar column current), (B, N) int32."""
+    not_l = (1 - literals.astype(jnp.int32))
+    return not_l @ include.astype(jnp.int32)
+
+
+def class_sum_ref(clauses: Array, weights: Array) -> Array:
+    """clauses (B, N) {0,1}; weights (N, M) int -> scores (B, M) int32."""
+    return clauses.astype(jnp.int32) @ weights.astype(jnp.int32)
+
+
+def fused_cotm_ref(literals: Array, include: Array, weights: Array,
+                   nonempty: Array | None = None) -> Array:
+    """literals -> class scores without materializing clauses in HBM."""
+    fired = clause_eval_ref(literals, include, nonempty)
+    return class_sum_ref(fired, weights)
+
+
+def crossbar_mvm_ref(drive: Array, g: Array, *, v_read: float = 2.0,
+                     nonlin: float = 1.5, cutoff: float = 10e-9) -> Array:
+    """Analog crossbar column currents with the Y-Flash low-G nonlinearity.
+
+    drive (B, K) f32 (row voltages in units of V_R); g (K, N) f32
+    conductances -> currents (B, N) f32:  I = drive @ (g * V_R * nl(g)).
+    """
+    nl = jnp.where(g < cutoff, nonlin, 1.0)
+    return drive.astype(jnp.float32) @ (g * v_read * nl).astype(jnp.float32)

@@ -1,0 +1,8 @@
+"""Launch layer: mesh construction, input specs, dry-run, train/serve CLIs.
+
+NOTE: do NOT import ``dryrun`` from here — it mutates XLA_FLAGS at import
+time (512 host devices) and must only ever run as its own process.
+"""
+from .mesh import make_debug_mesh, make_production_mesh
+
+__all__ = ["make_production_mesh", "make_debug_mesh"]

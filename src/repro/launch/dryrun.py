@@ -1,0 +1,238 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+__doc__ = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell the appropriate step function is jitted against
+ShapeDtypeStruct stand-ins (zero allocation) with full production
+shardings, compiled for the 16x16 (single-pod, 256 chips) or 2x16x16
+(two-pod, 512 chips) mesh of host devices, and the compiled artifact is
+mined for the roofline inputs:
+
+* ``memory_analysis``  -> bytes per device (proves the cell fits HBM)
+* ``cost_analysis``    -> HLO FLOPs / bytes accessed
+* optimized HLO text   -> collective inventory (launch/hlo.py)
+
+Results land in ``artifacts/dryrun/<mesh>/<arch>__<shape>.json``; the
+roofline benchmark and EXPERIMENTS.md read from there.
+
+Run one cell (subprocess-friendly):
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+        --shape train_4k --mesh single
+Run everything:  --all [--mesh both]
+"""
+
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs import ARCH_IDS, SHAPES, cells, get_config
+from repro.launch import specs as specs_mod
+from repro.launch.hlo import analyze_hlo, collective_summary, parse_collectives
+from repro.launch.mesh import make_production_mesh
+from repro.models import ShardCtx, build
+from repro.sharding.rules import merged_rules, opt_rules, param_rules
+from repro.train.optimizer import AdamWConfig, init_state
+from repro.train.step import make_train_step
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[3] / "artifacts"
+
+
+def _shardings_for(tree, axes_tree, ctx: ShardCtx):
+    """NamedShardings for an abstract pytree given a logical-axes tree."""
+    return jax.tree.map(
+        lambda sds, ax: NamedSharding(ctx.mesh, ctx.spec(sds.shape,
+                                                         tuple(ax))),
+        tree, axes_tree)
+
+
+def _replicated(tree, mesh):
+    return jax.tree.map(
+        lambda _: NamedSharding(mesh, PartitionSpec()), tree)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               *, compile_: bool = True, mutate_cfg=None) -> dict:
+    cfg = get_config(arch)
+    if mutate_cfg is not None:
+        cfg = mutate_cfg(cfg)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    rules = merged_rules(mesh, zero3=cfg.zero3)
+    ctx = ShardCtx(mesh, rules)
+    model = build(cfg, ctx)
+
+    p_ctx = ShardCtx(mesh, param_rules(mesh, zero3=cfg.zero3))
+    o_ctx = ShardCtx(mesh, opt_rules(mesh))
+    t0 = time.time()
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(moment_dtype=jnp.dtype(cfg.opt_moment_dtype))
+        params_abs = model.abstract(jnp.float32)
+        param_sh = _shardings_for(params_abs, model.axes(), p_ctx)
+        opt_sh = _shardings_for(params_abs, model.axes(), o_ctx)
+        state_abs = jax.eval_shape(
+            lambda p: init_state(p, opt_cfg), params_abs)
+        state_sh = type(state_abs)(
+            step=NamedSharding(mesh, PartitionSpec()),
+            params=param_sh, m=opt_sh, v=opt_sh)
+        batch_abs = specs_mod.train_batch_specs(cfg, shape)
+        batch_sh = _shardings_for(batch_abs,
+                                  specs_mod.train_batch_axes(cfg), ctx)
+        step_fn = make_train_step(model, opt_cfg, grad_shardings=opt_sh)
+        lowered = jax.jit(
+            step_fn,
+            in_shardings=(state_sh, batch_sh, None),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,),
+        ).lower(state_abs, batch_abs, jax.ShapeDtypeStruct((), jnp.int32))
+
+    elif shape.kind == "prefill":
+        params_abs = model.abstract(jnp.bfloat16)
+        param_sh = _shardings_for(params_abs, model.axes(), p_ctx)
+        batch_abs = specs_mod.prefill_specs(cfg, shape)
+        batch_sh = _shardings_for(batch_abs, specs_mod.prefill_axes(cfg),
+                                  ctx)
+        cache_abs = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len))
+        cache_sh = _shardings_for(cache_abs, model.cache_axes(), ctx)
+
+        def prefill_step(params, batch):
+            return model.prefill(params, batch["tokens"],
+                                 batch.get("positions"), shape.seq_len,
+                                 batch.get("extra_embeds"))
+        lowered = jax.jit(
+            prefill_step,
+            in_shardings=(param_sh, batch_sh),
+            out_shardings=(NamedSharding(mesh, PartitionSpec()), cache_sh),
+        ).lower(params_abs, batch_abs)
+
+    else:  # decode
+        params_abs = model.abstract(jnp.bfloat16)
+        param_sh = _shardings_for(params_abs, model.axes(), p_ctx)
+        d = specs_mod.decode_specs(cfg, shape, model)
+        cache_sh = _shardings_for(d["cache"], model.cache_axes(), ctx)
+        dec_axes = specs_mod.decode_axes(cfg)
+        tok_sh = _shardings_for(
+            {"tokens": d["tokens"], "positions": d["positions"]},
+            dec_axes, ctx)
+
+        def serve_step(params, cache, tokens, positions):
+            return model.decode_step(params, cache, tokens, positions)
+        lowered = jax.jit(
+            serve_step,
+            in_shardings=(param_sh, cache_sh, tok_sh["tokens"],
+                          tok_sh["positions"]),
+            out_shardings=(NamedSharding(mesh, PartitionSpec()), cache_sh),
+            donate_argnums=(1,),
+        ).lower(params_abs, d["cache"], d["tokens"], d["positions"])
+
+    t_lower = time.time() - t0
+    record = dict(arch=arch, shape=shape_name,
+                  mesh="2x16x16" if multi_pod else "16x16",
+                  kind=shape.kind, lower_s=round(t_lower, 1),
+                  n_params=model.n_params())
+    if not compile_:
+        record["compiled"] = False
+        return record
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    record["compile_s"] = round(time.time() - t0, 1)
+
+    try:
+        mem = compiled.memory_analysis()
+        record["memory"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes")
+            if hasattr(mem, k)}
+    except Exception as e:                              # pragma: no cover
+        record["memory"] = {"error": str(e)}
+    try:
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+        record["cost"] = {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float))
+                          and k in ("flops", "bytes accessed",
+                                    "transcendentals", "optimal_seconds")}
+    except Exception as e:                              # pragma: no cover
+        record["cost"] = {"error": str(e)}
+    try:
+        hlo = compiled.as_text()
+        ops = parse_collectives(hlo)
+        record["collectives"] = collective_summary(ops)
+        record["hlo_bytes"] = len(hlo)
+        # Execution-weighted analysis: while-loop trip counts propagated
+        # through the call graph (cost_analysis visits each body once).
+        record["weighted"] = analyze_hlo(hlo)
+    except Exception as e:                              # pragma: no cover
+        record["collectives"] = {"error": str(e)}
+    record["compiled"] = True
+    return record
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             out_dir: pathlib.Path | None = None, mutate_cfg=None) -> dict:
+    multi = mesh_kind == "multi"
+    ok_map = cells(arch)
+    if not ok_map[shape_name]:
+        record = dict(arch=arch, shape=shape_name,
+                      mesh="2x16x16" if multi else "16x16",
+                      skipped="long_500k requires sub-quadratic attention; "
+                              "full-attention arch (see DESIGN.md)")
+    else:
+        try:
+            record = lower_cell(arch, shape_name, multi,
+                                mutate_cfg=mutate_cfg)
+        except Exception as e:
+            record = dict(arch=arch, shape=shape_name,
+                          mesh="2x16x16" if multi else "16x16",
+                          error=f"{type(e).__name__}: {e}",
+                          traceback=traceback.format_exc()[-4000:])
+    if out_dir is not None:
+        out_dir.mkdir(parents=True, exist_ok=True)
+        path = out_dir / f"{arch}__{shape_name}.json"
+        path.write_text(json.dumps(record, indent=1))
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=str(ARTIFACTS / "dryrun"))
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    todo = ([(a, s) for a in ARCH_IDS for s in SHAPES] if args.all
+            else [(args.arch, args.shape)])
+    for mesh_kind in meshes:
+        out_dir = pathlib.Path(args.out) / (
+            "2x16x16" if mesh_kind == "multi" else "16x16")
+        for arch, shape_name in todo:
+            rec = run_cell(arch, shape_name, mesh_kind, out_dir)
+            status = ("SKIP" if "skipped" in rec
+                      else "ERR " if "error" in rec else "OK  ")
+            print(f"[{status}] {rec['mesh']:8s} {arch:24s} {shape_name:12s}"
+                  f" lower={rec.get('lower_s', '-')}s"
+                  f" compile={rec.get('compile_s', '-')}s"
+                  f" flops={rec.get('cost', {}).get('flops', '-')}")
+            if "error" in rec:
+                print(rec.get("traceback", "")[-2000:])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,379 @@
+"""Optimized-HLO analysis: collective inventory + byte accounting.
+
+``compiled.cost_analysis()`` has no collective traffic, so the roofline's
+collective term is derived here by parsing the post-SPMD optimized HLO:
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op is collected with its operand bytes and replica-group
+fan-out, and converted to per-device link bytes with ring-algorithm
+factors:
+
+    all-gather       (P-1)/P * output_bytes
+    reduce-scatter   (P-1)/P * input_bytes
+    all-reduce       2 (P-1)/P * input_bytes      (RS + AG)
+    all-to-all       (P-1)/P * input_bytes
+    collective-permute     input_bytes
+
+Ops inside while-loop bodies (the scan over layers / microbatches) execute
+once per iteration; HLO text does not annotate trip counts, so the parser
+reports RAW per-program bytes and the caller scales loop-carried traffic by
+the known scan trip counts (layers x accum) — see ``benchmarks/roofline``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    size = _DTYPE_BYTES.get(dtype)
+    if size is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * size
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    out_bytes: int
+    in_bytes: int
+    group_size: int
+    line: str
+
+    @property
+    def link_bytes(self) -> float:
+        """Per-device bytes over the interconnect (ring algorithm)."""
+        p = max(self.group_size, 1)
+        frac = (p - 1) / p
+        if self.kind == "all-gather":
+            return frac * self.out_bytes
+        if self.kind == "reduce-scatter":
+            return frac * self.in_bytes
+        if self.kind == "all-reduce":
+            return 2.0 * frac * self.in_bytes
+        if self.kind == "all-to-all":
+            return frac * self.in_bytes
+        return float(self.in_bytes)      # collective-permute
+
+
+def parse_collectives(hlo_text: str) -> list[CollectiveOp]:
+    ops: list[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.*)$", stripped)
+        if not m:
+            continue
+        rhs = m.group(1)
+        kind = None
+        for c in _COLLECTIVES:
+            if re.search(rf"\b{c}(-start|-done)?\(", rhs):
+                kind = c
+                break
+        if kind is None:
+            continue
+        if f"{kind}-done(" in rhs:
+            continue  # counted at -start
+        shapes = _SHAPE_RE.findall(rhs)
+        if not shapes:
+            continue
+        # First shape(s) before the op name = output; shapes inside the
+        # parens = operands.
+        paren = rhs.index("(")
+        out_shapes = _SHAPE_RE.findall(rhs[:paren])
+        in_shapes = _SHAPE_RE.findall(rhs[paren:])
+        out_b = sum(_shape_bytes(d, s) for d, s in out_shapes)
+        in_b = sum(_shape_bytes(d, s) for d, s in in_shapes)
+
+        g = _GROUPS_RE.search(rhs)
+        if g:
+            first = g.group(1).split("},{")[0]
+            group_size = len([x for x in re.split("[,{}]", first) if x])
+        else:
+            gi = _GROUPS_IOTA_RE.search(rhs)
+            group_size = int(gi.group(2)) if gi else 1
+        ops.append(CollectiveOp(kind=kind, out_bytes=out_b, in_bytes=in_b,
+                                group_size=group_size, line=stripped[:160]))
+    return ops
+
+
+# ---------------------------------------------------------------------------
+# Full-module analysis with while-loop trip-count propagation
+# ---------------------------------------------------------------------------
+#
+# XLA's cost_analysis() visits every computation ONCE — a 30-layer scan body
+# counts as one layer.  Honest roofline terms need each op weighted by how
+# many times it executes, so we build the call graph (while bodies with
+# known_trip_count, fusions, calls, conditionals) and propagate execution
+# multipliers from ENTRY.
+
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(")
+_WHILE_RE = re.compile(
+    r"while\(.*?\)"
+    r".*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)", re.S)
+_TRIP_RE = re.compile(r'known_trip_count.*?"n"\s*:\s*"?(\d+)')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(
+    r"(?:branch_computations=\{([^}]*)\}"
+    r"|true_computation=%?([\w.\-]+), false_computation=%?([\w.\-]+))")
+_DOT_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_LHS_NAME_RE = re.compile(r"^%([\w.\-]+)\s*=")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+_FREE_OPS = ("parameter(", "constant(", "tuple(", "get-tuple-element(",
+             "bitcast(", "after-all(", "partition-id(", "iota(")
+
+
+def _symtab(lines: list[str]) -> dict[str, tuple[int, list[int] | None]]:
+    """name -> (total output bytes, dims if a single array else None).
+
+    Scheduled HLO references operands by NAME ONLY, so operand sizes must
+    be resolved against their defining lines.
+    """
+    tab: dict[str, tuple[int, list[int] | None]] = {}
+    for line in lines:
+        m = _LHS_NAME_RE.match(line)
+        if not m:
+            continue
+        try:
+            eq = line.index("=")
+            op_paren = line.index("(", eq)
+        except ValueError:
+            op_paren = len(line)
+        lhs = line[:op_paren]
+        shapes = _SHAPE_RE.findall(lhs[lhs.index("=") + 1:])
+        total = sum(_shape_bytes(d, s) for d, s in shapes)
+        dims = ([int(x) for x in shapes[0][1].split(",") if x]
+                if len(shapes) == 1 else None)
+        tab[m.group(1)] = (total, dims)
+    return tab
+
+
+def _operand_names(line: str) -> list[str]:
+    try:
+        eq = line.index("=")
+        start = line.index("(", eq)
+    except ValueError:
+        return []
+    depth = 0
+    end = start
+    for i in range(start, len(line)):
+        if line[i] == "(":
+            depth += 1
+        elif line[i] == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return _OPERAND_RE.findall(line[start:end + 1])
+
+
+def _operand_bytes(line: str, tab) -> int:
+    return sum(tab.get(n, (0, None))[0] for n in _operand_names(line))
+
+
+def _split_computations(text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        if line and not line[0].isspace():
+            m = _COMP_HEADER_RE.match(line)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+            if line.startswith("}"):
+                cur = None
+                continue
+        if cur is not None and "=" in line:
+            comps[cur].append(line.strip())
+    return comps
+
+
+def _entry_name(text: str) -> str | None:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.M)
+    return m.group(1) if m else None
+
+
+def _dot_flops(line: str, tab) -> int:
+    eq = line.index("=")
+    paren = line.index("(", eq)
+    out_shapes = _SHAPE_RE.findall(line[:paren])
+    if not out_shapes:
+        return 0
+    out_elems = 1
+    for d in out_shapes[-1][1].split(","):
+        if d:
+            out_elems *= int(d)
+    operands = _operand_names(line)
+    lhs_dims = tab.get(operands[0], (0, None))[1] if operands else None
+    if lhs_dims is None:
+        return 0
+    m = _DOT_CONTRACT_RE.search(line)
+    contract = 1
+    if m and m.group(1):
+        for idx in m.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                contract *= lhs_dims[int(idx)]
+    return 2 * out_elems * contract
+
+
+def _line_out_bytes(line: str) -> int:
+    try:
+        eq = line.index("=")
+        paren = line.index("(", eq)
+    except ValueError:
+        paren = len(line)
+    return sum(_shape_bytes(d, s)
+               for d, s in _SHAPE_RE.findall(line[:paren]))
+
+
+def analyze_hlo(text: str) -> dict:
+    """Execution-weighted per-device flops / HBM-traffic / collective bytes.
+
+    flops: dot ops only (2*M*N*K), weighted by how often their computation
+    runs.  bytes: operand+output sizes of top-level ops in executed (non-
+    fused) computations — the post-fusion kernel-boundary HBM-traffic
+    model.  collectives: ring link-bytes, execution-weighted.
+    """
+    comps = _split_computations(text)
+    entry = _entry_name(text)
+    if entry is None or entry not in comps:
+        return {"error": "no entry computation"}
+
+    # Call graph + which computations are fusion bodies (no HBM traffic).
+    edges: dict[str, list[tuple[str, float]]] = {c: [] for c in comps}
+    fused: set[str] = set()
+    for name, lines in comps.items():
+        for line in lines:
+            if " while(" in line:
+                m = _WHILE_RE.search(line)
+                t = _TRIP_RE.search(line)
+                trip = float(t.group(1)) if t else 1.0
+                if m:
+                    edges[name].append((m.group(2), trip))
+                    edges[name].append((m.group(1), trip + 1))
+            for m in _CALLS_RE.finditer(line):
+                edges[name].append((m.group(1), 1.0))
+                fused.add(m.group(1))
+            for m in _TO_APPLY_RE.finditer(line):
+                edges[name].append((m.group(1), 1.0))
+                fused.add(m.group(1))
+            m = _BRANCHES_RE.search(line)
+            if m:
+                if m.group(1):
+                    for b in m.group(1).split(","):
+                        b = b.strip().lstrip("%")
+                        if b:
+                            edges[name].append((b, 1.0))
+                else:
+                    edges[name].append((m.group(2), 1.0))
+                    edges[name].append((m.group(3), 1.0))
+
+    mult: dict[str, float] = {c: 0.0 for c in comps}
+    mult[entry] = 1.0
+    # Propagate in topological-ish order via repeated relaxation (call
+    # graphs are DAGs; depth is small).
+    for _ in range(64):
+        changed = False
+        new = {c: 0.0 for c in comps}
+        new[entry] = 1.0
+        for src in comps:
+            m_src = mult.get(src, 0.0)
+            if m_src == 0.0:
+                continue
+            for dst, w in edges[src]:
+                if dst in new:
+                    new[dst] += m_src * w
+        for c in comps:
+            if abs(new[c] - mult[c]) > 1e-9:
+                changed = True
+        mult = new
+        if not changed:
+            break
+
+    flops = 0.0
+    bytes_traffic = 0.0
+    coll_bytes = 0.0
+    coll_f32_bytes = 0.0
+    coll_by_kind: dict[str, float] = {}
+    _CONTROL = (" while(", " conditional(", " call(")
+    for name, lines in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        in_fusion = name in fused
+        tab = _symtab(lines)
+        for line in lines:
+            if " dot(" in line:
+                flops += m * _dot_flops(line, tab)
+            if in_fusion:
+                continue
+            if any(f in line for f in _FREE_OPS):
+                continue
+            if any(c in line for c in _CONTROL):
+                continue   # bodies accounted separately
+            if "-done(" in line or "-update(" in line:
+                continue   # async second halves: counted at -start
+            kind = None
+            for c in _COLLECTIVES:
+                if re.search(rf"\b{c}(-start)?\(", line):
+                    kind = c
+                    break
+            out_b = _line_out_bytes(line)
+            in_b = _operand_bytes(line, tab)
+            if kind is not None:
+                g = _GROUPS_RE.search(line)
+                if g:
+                    first = g.group(1).split("},{")[0]
+                    gs = len([x for x in re.split("[,{}]", first) if x])
+                else:
+                    gi = _GROUPS_IOTA_RE.search(line)
+                    gs = int(gi.group(2)) if gi else 1
+                op = CollectiveOp(kind=kind, out_bytes=out_b, in_bytes=in_b,
+                                  group_size=gs, line=line[:120])
+                lb = m * op.link_bytes
+                coll_bytes += lb
+                coll_by_kind[kind] = coll_by_kind.get(kind, 0.0) + lb
+                if re.search(r"=\s*\(?f32\[", line):
+                    coll_f32_bytes += lb
+                continue
+            bytes_traffic += m * (out_b + in_b)
+    return {
+        "flops_weighted": flops,
+        "hbm_bytes_weighted": bytes_traffic,
+        "collective_link_bytes_weighted": coll_bytes,
+        # XLA-CPU FloatNormalization upcasts bf16 collectives to f32; a
+        # TPU ships them in bf16.  Estimate: halve the f32 share (slight
+        # overcorrection for genuinely-f32 optimizer reductions).
+        "collective_link_bytes_tpu_est": coll_bytes - 0.5 * coll_f32_bytes,
+        "collective_f32_bytes_weighted": coll_f32_bytes,
+        "collective_by_kind_weighted": coll_by_kind,
+        "n_computations": len(comps),
+    }
+
+
+def collective_summary(ops: list[CollectiveOp]) -> dict:
+    by_kind: dict[str, dict] = defaultdict(lambda: dict(count=0, bytes=0.0))
+    for op in ops:
+        by_kind[op.kind]["count"] += 1
+        by_kind[op.kind]["bytes"] += op.link_bytes
+    total = sum(v["bytes"] for v in by_kind.values())
+    return {"total_link_bytes": total, "by_kind": dict(by_kind)}

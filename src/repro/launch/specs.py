@@ -1,0 +1,139 @@
+"""Input specifications: ShapeDtypeStruct stand-ins for every model input.
+
+This is the dry-run's contract: for each (arch, shape) cell we produce the
+exact pytree the lowered step function consumes — weak-type-correct,
+shardable, and never allocated.  The same builders produce REAL (small)
+arrays for smoke tests via ``concrete=True`` with a reduced spec.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig, ShapeSpec
+
+VLM_PATCH_TOKENS = 256   # qwen2-vl stub: patch embeddings per sample
+
+
+def _arr(shape, dtype, concrete: bool, fill: int = 0):
+    if concrete:
+        if jnp.issubdtype(dtype, jnp.integer):
+            return jnp.full(shape, fill, dtype)
+        return jnp.zeros(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec, *,
+                      concrete: bool = False) -> dict:
+    """Batch pytree with a leading grad-accumulation axis."""
+    A = shape.accum
+    B = shape.global_batch // A
+    assert B * A == shape.global_batch, (shape.global_batch, A)
+    S = shape.seq_len
+    batch: dict[str, Any] = {}
+    if cfg.modality == "audio":
+        batch["tokens"] = _arr((A, B, S, cfg.n_codebooks), jnp.int32,
+                               concrete)
+    elif cfg.modality == "vlm":
+        s_text = S - VLM_PATCH_TOKENS
+        batch["tokens"] = _arr((A, B, s_text), jnp.int32, concrete)
+        batch["extra_embeds"] = _arr((A, B, VLM_PATCH_TOKENS, cfg.d_model),
+                                     jnp.bfloat16, concrete)
+        batch["positions"] = _arr((A, 3, B, S), jnp.int32, concrete)
+    else:
+        batch["tokens"] = _arr((A, B, S), jnp.int32, concrete)
+    return batch
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeSpec, *,
+                  concrete: bool = False) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    batch: dict[str, Any] = {}
+    if cfg.modality == "audio":
+        batch["tokens"] = _arr((B, S, cfg.n_codebooks), jnp.int32, concrete)
+        batch["positions"] = _arr((B, S), jnp.int32, concrete)
+    elif cfg.modality == "vlm":
+        s_text = S - VLM_PATCH_TOKENS
+        batch["tokens"] = _arr((B, s_text), jnp.int32, concrete)
+        batch["extra_embeds"] = _arr((B, VLM_PATCH_TOKENS, cfg.d_model),
+                                     jnp.bfloat16, concrete)
+        batch["positions"] = _arr((3, B, S), jnp.int32, concrete)
+    else:
+        batch["tokens"] = _arr((B, S), jnp.int32, concrete)
+        batch["positions"] = _arr((B, S), jnp.int32, concrete)
+    return batch
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec, model, *,
+                 concrete: bool = False) -> dict:
+    """Decode step inputs: one new token + the cache at seq_len capacity."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.modality == "audio":
+        tokens = _arr((B, 1, cfg.n_codebooks), jnp.int32, concrete)
+    else:
+        tokens = _arr((B, 1), jnp.int32, concrete)
+    if cfg.rope_style == "mrope":
+        positions = _arr((3, B, 1), jnp.int32, concrete)
+    else:
+        positions = _arr((B, 1), jnp.int32, concrete)
+    if concrete:
+        cache = model.init_cache(B, S)
+    else:
+        cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    return {"tokens": tokens, "positions": positions, "cache": cache}
+
+
+def train_batch_axes(cfg: ModelConfig) -> dict:
+    """Logical axes for the train batch (leading accum axis unsharded)."""
+    if cfg.modality == "audio":
+        return {"tokens": (None, "batch", None, None)}
+    if cfg.modality == "vlm":
+        return {"tokens": (None, "batch", None),
+                "extra_embeds": (None, "batch", None, None),
+                "positions": (None, None, "batch", None)}
+    return {"tokens": (None, "batch", None)}
+
+
+def prefill_axes(cfg: ModelConfig) -> dict:
+    if cfg.modality == "audio":
+        return {"tokens": ("batch", None, None),
+                "positions": ("batch", None)}
+    if cfg.modality == "vlm":
+        return {"tokens": ("batch", None),
+                "extra_embeds": ("batch", None, None),
+                "positions": (None, "batch", None)}
+    return {"tokens": ("batch", None), "positions": ("batch", None)}
+
+
+def decode_axes(cfg: ModelConfig) -> dict:
+    tok = (("batch", None, None) if cfg.modality == "audio"
+           else ("batch", None))
+    pos = ((None, "batch", None) if cfg.rope_style == "mrope"
+           else ("batch", None))
+    return {"tokens": tok, "positions": pos}
+
+
+def synth_tokens(cfg: ModelConfig, batch: int, seq: int,
+                 seed: int = 0) -> jnp.ndarray:
+    """Synthetic token stream with learnable n-gram structure (data
+    pipeline stand-in for real corpora in this offline container)."""
+    rng = np.random.default_rng(seed)
+    # Markov chain over a small state machine mapped into the vocab.
+    n_states = min(cfg.vocab, 64)
+    trans = rng.dirichlet(np.ones(n_states) * 0.1, size=n_states)
+    toks = np.zeros((batch, seq), np.int32)
+    state = rng.integers(0, n_states, size=batch)
+    for t in range(seq):
+        toks[:, t] = state
+        nxt = [rng.choice(n_states, p=trans[s]) for s in state]
+        state = np.asarray(nxt)
+    toks = toks % cfg.vocab
+    if cfg.modality == "audio":
+        return jnp.asarray(
+            np.stack([np.roll(toks, c, axis=1) % cfg.vocab
+                      for c in range(cfg.n_codebooks)], axis=-1))
+    return jnp.asarray(toks)

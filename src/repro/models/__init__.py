@@ -1,0 +1,34 @@
+"""Model zoo: one builder for all 10 assigned architectures.
+
+``build(cfg, ctx)`` dispatches on family:
+
+* dense / moe / vlm / audio -> ``TransformerLM``
+* ssm (rwkv6)               -> ``RWKV6LM``
+* hybrid (mamba2 + shared attention) -> ``Zamba2LM``
+
+All three expose the same functional interface: ``decls/init/abstract/axes``,
+``forward``, ``loss``, ``init_cache``/``cache_axes``/``decode_step``.
+"""
+from .base import NULL_CTX, P, ShardCtx, abstract_tree, axes_tree, init_tree
+from .config import (MLAConfig, MoEConfig, ModelConfig, SHAPES, ShapeSpec,
+                     SSMConfig, TMHeadConfig)
+from .rwkv6 import RWKV6LM
+from .tm_head import TMHead, pool_features
+from .transformer import TransformerLM
+from .zamba2 import Zamba2LM
+
+
+def build(cfg: ModelConfig, ctx: ShardCtx = NULL_CTX):
+    if cfg.ssm is not None and cfg.hybrid_attn_every > 0:
+        return Zamba2LM(cfg, ctx)
+    if cfg.ssm is not None and cfg.ssm.kind == "rwkv6":
+        return RWKV6LM(cfg, ctx)
+    return TransformerLM(cfg, ctx)
+
+
+__all__ = [
+    "build", "ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig",
+    "TMHeadConfig", "ShapeSpec", "SHAPES", "TransformerLM", "RWKV6LM",
+    "Zamba2LM", "TMHead", "pool_features", "ShardCtx", "NULL_CTX", "P",
+    "abstract_tree", "axes_tree", "init_tree",
+]

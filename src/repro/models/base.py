@@ -1,0 +1,215 @@
+"""Model substrate: declarative parameter trees + sharding-aware layers.
+
+Every model in this zoo declares its parameters as a nested dict of ``P``
+leaves (shape, logical axes, init).  From one declaration tree we derive:
+
+* ``init_tree``      — materialized parameters (smoke tests, real training);
+* ``abstract_tree``  — ``ShapeDtypeStruct`` stand-ins (the multi-pod dry-run
+  lowers against these; nothing is ever allocated);
+* ``axes_tree``      — logical-axis tuples consumed by ``sharding.rules`` to
+  build ``NamedSharding``s per mesh.
+
+Logical axes used across the zoo (resolution to mesh axes happens in
+``repro.sharding``):
+
+  "batch"   data-parallel batch            -> ("pod", "data")
+  "vocab"   embedding/output vocab         -> "model"
+  "embed"   d_model                        -> replicated (or "data" for ZeRO-3)
+  "heads"   attention heads                -> "model" (if divisible)
+  "kv"      KV heads                       -> "model" (if divisible)
+  "mlp"     feed-forward hidden            -> "model"
+  "experts" MoE expert index               -> "model" (expert parallelism)
+  "layers"  scan-stacked layer index       -> never sharded
+  "seq"     sequence (activations only)    -> "model" under sequence parallelism
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """Declaration of one parameter tensor."""
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]      # logical axis names, len == ndim
+    dtype: Any = jnp.float32
+    init: str = "normal"              # normal | zeros | ones | small
+    scale: float | None = None        # stddev override for "normal"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_p(x) -> bool:
+    return isinstance(x, P)
+
+
+def _leaves_with_path(tree: PyTree):
+    return jax.tree_util.tree_flatten_with_path(tree, is_leaf=_is_p)
+
+
+def init_tree(decls: PyTree, key: Array, dtype=None) -> PyTree:
+    """Materialize parameters; per-leaf keys derived from the tree path
+    via a STABLE hash (python's ``hash`` is salted per process, which
+    would make inits irreproducible across runs)."""
+    import zlib
+    flat, treedef = _leaves_with_path(decls)
+
+    def make(path, p: P) -> Array:
+        k = key
+        for part in str(jax.tree_util.keystr(path)).split("'"):
+            if part and part not in ("[", "]", "[']", "']["):
+                k = jax.random.fold_in(k, zlib.crc32(part.encode()))
+        dt = dtype or p.dtype
+        if p.init == "zeros":
+            return jnp.zeros(p.shape, dt)
+        if p.init == "ones":
+            return jnp.ones(p.shape, dt)
+        fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+        std = p.scale if p.scale is not None else 1.0 / math.sqrt(fan_in)
+        if p.init == "small":
+            std = 0.02
+        return (std * jax.random.normal(k, p.shape, jnp.float32)).astype(dt)
+
+    leaves = [make(path, p) for path, p in flat]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def abstract_tree(decls: PyTree, dtype=None) -> PyTree:
+    """ShapeDtypeStruct stand-ins — no allocation (dry-run path)."""
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, dtype or p.dtype),
+        decls, is_leaf=_is_p)
+
+
+def axes_tree(decls: PyTree) -> PyTree:
+    """The logical-axis tree, same structure as the parameters."""
+    return jax.tree.map(lambda p: p.axes, decls, is_leaf=_is_p)
+
+
+def count_params(decls: PyTree) -> int:
+    flat, _ = _leaves_with_path(decls)
+    return sum(math.prod(p.shape) for _, p in flat)
+
+
+# ---------------------------------------------------------------------------
+# Sharding context threaded through model code
+# ---------------------------------------------------------------------------
+
+class ShardCtx:
+    """Resolves logical axes -> PartitionSpec and applies constraints.
+
+    ``mesh=None`` (single-device smoke tests) makes every method a no-op.
+    Divisibility-checked: a logical axis only maps to a mesh axis if the
+    dimension divides evenly; otherwise that dim is replicated.  This is what
+    lets one rule table serve all 10 architectures (e.g. kv=2 GQA heads
+    simply replicate on a 16-way model axis).
+    """
+
+    def __init__(self, mesh, rules: dict[str, Any] | None = None):
+        self.mesh = mesh
+        self.rules = rules or {}
+
+    def _axis_size(self, entry) -> int:
+        if entry is None or self.mesh is None:
+            return 1
+        names = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for nm in names:
+            size *= self.mesh.shape.get(nm, 1)
+        return size
+
+    def spec(self, shape: tuple[int, ...],
+             axes: tuple[str | None, ...]):
+        from jax.sharding import PartitionSpec
+        if self.mesh is None:
+            return PartitionSpec()
+        entries = []
+        used: set = set()
+        for dim, ax in zip(shape, axes):
+            entry = self.rules.get(ax) if ax else None
+            if entry is not None:
+                names = entry if isinstance(entry, tuple) else (entry,)
+                if any(nm in used for nm in names):
+                    entry = None
+            if entry is not None and dim % self._axis_size(entry) != 0:
+                entry = None
+            if entry is not None:
+                names = entry if isinstance(entry, tuple) else (entry,)
+                used.update(names)
+            entries.append(entry)
+        return PartitionSpec(*entries)
+
+    def sharding(self, shape, axes):
+        from jax.sharding import NamedSharding
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(shape, axes))
+
+    def constrain(self, x: Array, *axes: str | None) -> Array:
+        """Sharding constraint on an activation (no-op without a mesh)."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, self.sharding(x.shape, tuple(axes)))
+
+    def param_shardings(self, decls: PyTree) -> PyTree:
+        return jax.tree.map(
+            lambda p: self.sharding(p.shape, p.axes), decls, is_leaf=_is_p)
+
+
+NULL_CTX = ShardCtx(None)
+
+
+# ---------------------------------------------------------------------------
+# Functional layers
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: Array, gamma: Array, eps: float = 1e-6) -> Array:
+    """Mixed-precision RMSNorm: the variance REDUCTION runs in f32 (a
+    (B, S, 1) output the fuser keeps internal) but the data path stays in
+    x.dtype end-to-end — full-width f32 copies of the residual stream
+    otherwise become the payload of every SP all-gather riding on the
+    norm output (perf iteration 4)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1,
+                   keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * (1.0 + gamma.astype(x.dtype))
+
+
+def layer_norm(x: Array, gamma: Array, beta: Array,
+               eps: float = 1e-5) -> Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    out = (x - mu.astype(x.dtype)) * inv
+    return out * gamma.astype(x.dtype) + beta.astype(x.dtype)
+
+
+ACTIVATIONS: dict[str, Callable[[Array], Array]] = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+}
+
+
+def dense(x: Array, w: Array) -> Array:
+    """x (..., d_in) @ w (d_in, ...) -> x.dtype.
+
+    No f32 preferred_element_type: the TPU MXU accumulates bf16 matmuls in
+    f32 internally and rounds once on output, while an explicit f32 output
+    doubles the bytes of every sharded-contraction all-reduce riding on
+    the result (perf iteration 3: -50% TP collective traffic)."""
+    return jax.lax.dot_general(
+        x, w.astype(x.dtype),
+        (((x.ndim - 1,), (0,)), ((), ())))

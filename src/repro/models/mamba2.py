@@ -1,0 +1,145 @@
+"""Mamba2 (SSD) block — the recurrent core of the Zamba2 hybrid.
+
+Structure per arXiv:2405.21060 / Zamba2 (arXiv:2411.15242): fused in_proj
+producing (z gate | x | B | C | dt), short causal depthwise conv over
+(x, B, C), per-head scalar decay ``a_t = exp(-exp(A_log) * dt_t)``, SSD
+recurrence ``S_t = a_t S_{t-1} + (dt_t x_t) (x) B_t``, ``y_t = C_t . S_t``
++ D-skip, gated RMSNorm, out_proj.
+
+The recurrence runs on ``ssm_common.chunked_la`` (inclusive diagonal,
+scalar decay broadcast over the state channel axis) — i.e. the exact SSD
+"chunked" algorithm, MXU matmuls within chunks, one (N, P) state hand-off
+per chunk.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import P, ShardCtx, dense, rms_norm
+from .config import ModelConfig
+from .ssm_common import chunked_la, la_step
+
+Array = jax.Array
+
+
+def mamba_dims(cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.n_groups * s.state_dim
+    d_in_proj = 2 * d_inner + 2 * s.n_groups * s.state_dim + n_heads
+    return dict(d_inner=d_inner, n_heads=n_heads, conv_ch=conv_ch,
+                d_in_proj=d_in_proj)
+
+
+def decls_mamba(cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    dims = mamba_dims(cfg)
+    d = cfg.d_model
+    return {
+        "in_proj": P((d, dims["d_in_proj"]), ("embed", "mlp")),
+        "conv_w": P((s.conv_width, dims["conv_ch"]), (None, "mlp"),
+                    init="small"),
+        "conv_b": P((dims["conv_ch"],), ("mlp",), init="zeros"),
+        "dt_bias": P((dims["n_heads"],), ("heads",), init="zeros"),
+        "a_log": P((dims["n_heads"],), ("heads",), init="zeros"),
+        "d_skip": P((dims["n_heads"],), ("heads",), init="ones"),
+        "norm": P((dims["d_inner"],), ("mlp",), init="zeros"),
+        "out_proj": P((dims["d_inner"], d), ("mlp", "embed")),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv via shifted adds.  x (B, S, C); w (W, C)."""
+    W = w.shape[0]
+    out = x * w[-1].astype(x.dtype)
+    for j in range(W - 1):
+        shift = W - 1 - j
+        shifted = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :-shift]
+        out = out + shifted * w[j].astype(x.dtype)
+    return out + b.astype(x.dtype)
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: Array):
+    s = cfg.ssm
+    dims = mamba_dims(cfg)
+    di, gN = dims["d_inner"], s.n_groups * s.state_dim
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + dims["conv_ch"]]
+    dt = zxbcdt[..., di + dims["conv_ch"]:]
+    return z, xbc, dt, di, gN
+
+
+def mamba_forward(p: dict, x: Array, cfg: ModelConfig, ctx: ShardCtx, *,
+                  state: dict | None = None) -> tuple[Array, dict]:
+    """x (B, S, d) -> (out (B, S, d), new state dict for decode).
+
+    state (decode, S==1): {"conv": (B, W-1, conv_ch), "s": (B, H, N, P)}.
+    """
+    s = cfg.ssm
+    dims = mamba_dims(cfg)
+    B, S, _ = x.shape
+    H, Pd, N, G = dims["n_heads"], s.head_dim, s.state_dim, s.n_groups
+
+    zxbcdt = dense(x, p["in_proj"])
+    zxbcdt = ctx.constrain(zxbcdt, "batch", None, "mlp")
+    z, xbc, dt, di, gN = _split_proj(cfg, zxbcdt)
+
+    new_state: dict = {}
+    if state is None:
+        # Carry the conv tail so a prefill can hand off to decode.
+        tail = xbc[:, -(s.conv_width - 1):]
+        pad = s.conv_width - 1 - tail.shape[1]
+        if pad > 0:
+            tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+        new_state["conv"] = tail
+        xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    else:
+        window = jnp.concatenate([state["conv"].astype(xbc.dtype), xbc],
+                                 axis=1)                     # (B, W, C)
+        xbc = (jnp.einsum("bwc,wc->bc", window,
+                          p["conv_w"].astype(xbc.dtype))
+               + p["conv_b"].astype(xbc.dtype))[:, None]
+        new_state["conv"] = window[:, 1:]
+    xbc = jax.nn.silu(xbc)
+
+    xs = xbc[..., :di].reshape(B, S, H, Pd)
+    Bm = xbc[..., di:di + gN].reshape(B, S, G, N)
+    Cm = xbc[..., di + gN:].reshape(B, S, G, N)
+    rep = H // G
+    Bm = jnp.repeat(Bm, rep, axis=2)                         # (B,S,H,N)
+    Cm = jnp.repeat(Cm, rep, axis=2)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    log_a = -jnp.exp(p["a_log"].astype(jnp.float32)) * dt     # <= 0
+    v = xs * dt[..., None].astype(xs.dtype)                   # (B,S,H,P)
+    log_w = jnp.broadcast_to(log_a[..., None], (B, S, H, N))
+
+    if state is None:
+        y, s_final = chunked_la(Cm, Bm, v, log_w, inclusive=True,
+                                chunk=s.chunk)
+        new_state["s"] = s_final
+    else:
+        y1, s_new = la_step(state["s"], Cm[:, 0], Bm[:, 0], v[:, 0],
+                            log_w[:, 0], inclusive=True)
+        y = y1[:, None]
+        new_state["s"] = s_new
+
+    y = y + xs * p["d_skip"].astype(xs.dtype)[None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = rms_norm(y, p["norm"]) * jax.nn.silu(z)
+    y = ctx.constrain(y, "batch", None, "mlp")
+    out = dense(y, p["out_proj"])
+    return ctx.constrain(out, "batch", "seq", None), new_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int,
+                     dtype=jnp.bfloat16) -> dict:
+    s = cfg.ssm
+    dims = mamba_dims(cfg)
+    return dict(
+        conv=jnp.zeros((batch, s.conv_width - 1, dims["conv_ch"]), dtype),
+        s=jnp.zeros((batch, dims["n_heads"], s.state_dim, s.head_dim),
+                    jnp.float32))

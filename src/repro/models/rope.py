@@ -1,0 +1,54 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE splits the rotary half-dim into (temporal, height, width) sections,
+each rotated by its own position stream; plain text positions set all three
+streams equal, recovering standard RoPE exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    """(head_dim//2,) inverse frequencies."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope_angles(positions: Array, head_dim: int, theta: float) -> Array:
+    """positions (..., S) int -> angles (..., S, head_dim//2) f32."""
+    inv = rope_freqs(head_dim, theta)
+    return positions.astype(jnp.float32)[..., None] * inv
+
+
+def mrope_angles(positions: Array, head_dim: int, theta: float,
+                 sections: tuple[int, int, int]) -> Array:
+    """positions (3, B, S) -> angles (B, S, head_dim//2).
+
+    ``sections`` are half-dim section sizes (t, h, w); sum == head_dim//2.
+    """
+    assert positions.shape[0] == 3
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    inv = rope_freqs(head_dim, theta)                       # (half,)
+    ang = positions.astype(jnp.float32)[..., None] * inv    # (3, B, S, half)
+    section_id = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections),
+        total_repeat_length=head_dim // 2)                  # (half,)
+    pick = jax.nn.one_hot(section_id, 3, dtype=jnp.float32)  # (half, 3)
+    return jnp.einsum("tbsh,ht->bsh", ang, pick)
+
+
+def apply_rope(x: Array, angles: Array) -> Array:
+    """x (B, S, H, D) with D even; angles (B, S, D//2) -> rotated x.
+
+    Uses the split-half convention (Llama/NeoX style).
+    """
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = jnp.cos(angles)[..., None, :].astype(x.dtype)   # (B, S, 1, half)
+    sin = jnp.sin(angles)[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1)

@@ -1,0 +1,280 @@
+"""RWKV6 "Finch" — attention-free LM with data-dependent decay.
+
+Faithful structure per arXiv:2404.05892: token-shift ddlerp mixes with a
+shared LoRA, data-dependent per-channel decay ``w_t = exp(-exp(w0 + lora))``,
+u-bonus for the current token, per-head group norm, squared-ReLU channel
+mix.  The wkv recurrence runs on the shared chunked-linear-attention engine
+(``ssm_common``) — matmul form on the MXU for train/prefill, O(1)-state
+``la_step`` for decode (this is the family that runs the long_500k cell).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .base import (NULL_CTX, P, ShardCtx, abstract_tree, axes_tree,
+                   count_params, dense, init_tree, layer_norm)
+from .config import ModelConfig
+from .ssm_common import chunked_la, la_step
+from .transformer import _stack  # same stacked-layer machinery
+
+Array = jax.Array
+
+N_MIX = 5  # r, w, k, v, g ddlerp streams
+
+
+def _shift(x: Array, x_prev: Array | None = None) -> Array:
+    """Token shift: previous token's features (zeros / carried at t=0)."""
+    pad = jnp.zeros_like(x[:, :1]) if x_prev is None else x_prev[:, None, :]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+class RWKV6LM:
+    def __init__(self, cfg: ModelConfig, ctx: ShardCtx = NULL_CTX):
+        assert cfg.ssm is not None and cfg.ssm.kind == "rwkv6"
+        self.cfg = cfg
+        self.ctx = ctx
+        self.head_dim = cfg.ssm.head_dim
+        self.n_heads_ssm = cfg.d_model // self.head_dim
+
+    # -- declarations --------------------------------------------------------
+    def _block_decls(self) -> dict:
+        cfg = self.cfg
+        d, ff = cfg.d_model, cfg.d_ff
+        H, hd = self.n_heads_ssm, self.head_dim
+        lr = 32
+        lw = cfg.ssm.decay_lora
+        return {
+            "ln1": {"gamma": P((d,), (None,), init="ones"),
+                    "beta": P((d,), (None,), init="zeros")},
+            "ln2": {"gamma": P((d,), (None,), init="ones"),
+                    "beta": P((d,), (None,), init="zeros")},
+            "tm": {
+                "mu_x": P((d,), (None,), init="zeros"),
+                "mu": P((N_MIX, d), (None, None), init="zeros"),
+                "lora_a": P((d, N_MIX * lr), ("embed", None), scale=0.02),
+                "lora_b": P((N_MIX, lr, d), (None, None, "embed"),
+                            scale=0.02),
+                "w0": P((d,), (None,), init="zeros"),
+                "wa": P((d, lw), ("embed", None), scale=0.02),
+                "wb": P((lw, d), (None, "embed"), scale=0.02),
+                "wr": P((d, H, hd), ("embed", "heads", None)),
+                "wk": P((d, H, hd), ("embed", "heads", None)),
+                "wv": P((d, H, hd), ("embed", "heads", None)),
+                "wg": P((d, H, hd), ("embed", "heads", None)),
+                "u": P((H, hd), ("heads", None), init="small"),
+                "ln_x": {"gamma": P((H, hd), ("heads", None), init="ones"),
+                         "beta": P((H, hd), ("heads", None), init="zeros")},
+                "wo": P((H, hd, d), ("heads", None, "embed")),
+            },
+            "cm": {
+                "mu_k": P((d,), (None,), init="zeros"),
+                "mu_r": P((d,), (None,), init="zeros"),
+                "wk": P((d, ff), ("embed", "mlp")),
+                "wv": P((ff, d), ("mlp", "embed")),
+                "wr": P((d, d), ("embed", None)),
+            },
+        }
+
+    def decls(self) -> dict:
+        cfg = self.cfg
+        return {
+            "embed": P((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                       scale=1.0),
+            "ln0": {"gamma": P((cfg.d_model,), (None,), init="ones"),
+                    "beta": P((cfg.d_model,), (None,), init="zeros")},
+            "final_norm": {"gamma": P((cfg.d_model,), (None,), init="ones"),
+                           "beta": P((cfg.d_model,), (None,), init="zeros")},
+            "lm_head": P((cfg.d_model, cfg.vocab), ("embed", "vocab")),
+            "layers": _stack(self._block_decls(), cfg.n_layers),
+        }
+
+    def init(self, key):
+        return init_tree(self.decls(), key)
+
+    def abstract(self, dtype=None):
+        return abstract_tree(self.decls(), dtype)
+
+    def axes(self):
+        return axes_tree(self.decls())
+
+    def n_params(self) -> int:
+        return count_params(self.decls())
+
+    # -- time mix -------------------------------------------------------------
+    def _ddlerp(self, tm: dict, x: Array, xx: Array) -> tuple[Array, ...]:
+        """Data-dependent lerp producing the 5 mixed streams (r,w,k,v,g)."""
+        B, S, d = x.shape
+        lr = tm["lora_a"].shape[1] // N_MIX
+        base = x + xx * tm["mu_x"].astype(x.dtype)
+        s = jnp.tanh(dense(base, tm["lora_a"])).reshape(B, S, N_MIX, lr)
+        s = jnp.einsum("bsml,mld->bsmd", s, tm["lora_b"].astype(x.dtype))
+        mixed = (x[:, :, None, :]
+                 + xx[:, :, None, :] * (tm["mu"].astype(x.dtype) + s))
+        return tuple(mixed[:, :, i, :] for i in range(N_MIX))
+
+    def _time_mix_proj(self, tm: dict, x: Array, xx: Array):
+        """Shared projection path for train and decode (S axis kept)."""
+        cfg = self.cfg
+        H, hd = self.n_heads_ssm, self.head_dim
+        x_r, x_w, x_k, x_v, x_g = self._ddlerp(tm, x, xx)
+        proj = lambda t, w: jnp.einsum("bsd,dhk->bshk", t,
+                                       w.astype(x.dtype))
+        r, k, v = proj(x_r, tm["wr"]), proj(x_k, tm["wk"]), proj(x_v, tm["wv"])
+        g = jax.nn.silu(proj(x_g, tm["wg"]))
+        log_w = -jnp.exp(
+            tm["w0"].astype(jnp.float32)
+            + jnp.einsum("bsd,dl,le->bse", x_w.astype(jnp.float32),
+                         tm["wa"].astype(jnp.float32),
+                         tm["wb"].astype(jnp.float32)))
+        log_w = log_w.reshape(*log_w.shape[:2], H, hd)
+        return r, k, v, g, log_w
+
+    def _time_mix_out(self, tm: dict, o: Array, g: Array, x_dtype) -> Array:
+        """Per-head group norm, gate, output projection."""
+        o32 = o.astype(jnp.float32)
+        mu = o32.mean(-1, keepdims=True)
+        var = o32.var(-1, keepdims=True)
+        o32 = (o32 - mu) * jax.lax.rsqrt(var + 1e-5)
+        o32 = (o32 * tm["ln_x"]["gamma"] + tm["ln_x"]["beta"])
+        o = (o32.astype(x_dtype) * g)
+        return jnp.einsum("bshk,hkd->bsd", o, tm["wo"].astype(x_dtype))
+
+    # -- blocks ----------------------------------------------------------------
+    def _block(self, p: dict, x: Array, state: dict | None):
+        """state: {"x_tm": (B,d), "x_cm": (B,d), "s": (B,H,hd,hd)} or None."""
+        cfg, ctx = self.cfg, self.ctx
+        tm, cm = p["tm"], p["cm"]
+        new_state = {}
+
+        # --- time mix ---
+        xn = layer_norm(x, p["ln1"]["gamma"], p["ln1"]["beta"])
+        x_prev = None if state is None else state["x_tm"]
+        xx = _shift(xn, x_prev) - xn
+        r, k, v, g, log_w = self._time_mix_proj(tm, xn, xx)
+        r = ctx.constrain(r, "batch", None, "heads", None)
+        if state is None:
+            o, s_final = chunked_la(r, k, v, log_w,
+                                    u=tm["u"].astype(jnp.float32),
+                                    inclusive=False, chunk=cfg.ssm.chunk)
+            new_state["s"] = s_final
+            new_state["x_tm"] = xn[:, -1]
+        else:
+            o1, s_new = la_step(state["s"], r[:, 0], k[:, 0], v[:, 0],
+                                log_w[:, 0],
+                                u=tm["u"].astype(jnp.float32),
+                                inclusive=False)
+            o = o1[:, None]
+            new_state["s"] = s_new
+            new_state["x_tm"] = xn[:, -1]
+        x = x + self._time_mix_out(tm, o, g, x.dtype)
+        x = ctx.constrain(x, "batch", "seq", None)
+
+        # --- channel mix ---
+        xn = layer_norm(x, p["ln2"]["gamma"], p["ln2"]["beta"])
+        x_prev = None if state is None else state["x_cm"]
+        xx = _shift(xn, x_prev) - xn
+        xk = xn + xx * cm["mu_k"].astype(x.dtype)
+        xr = xn + xx * cm["mu_r"].astype(x.dtype)
+        h = jnp.square(jax.nn.relu(dense(xk, cm["wk"])))
+        h = ctx.constrain(h, "batch", None, "mlp")
+        out = jax.nn.sigmoid(dense(xr, cm["wr"])) * dense(h, cm["wv"])
+        new_state["x_cm"] = xn[:, -1]
+        x = x + out
+        return ctx.constrain(x, "batch", "seq", None), new_state
+
+    # -- LM interface -----------------------------------------------------------
+    def forward(self, params, tokens: Array, positions=None,
+                extra_embeds=None) -> tuple[Array, Array]:
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+        x = layer_norm(x, params["ln0"]["gamma"], params["ln0"]["beta"])
+        x = self.ctx.constrain(x, "batch", "seq", None)
+
+        def body(h, layer_params):
+            out, _ = self._block(layer_params, h, None)
+            return out, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        x = layer_norm(x, params["final_norm"]["gamma"],
+                       params["final_norm"]["beta"])
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            params["lm_head"].astype(x.dtype))
+        logits = self.ctx.constrain(logits.astype(jnp.float32),
+                                    "batch", None, "vocab")
+        return logits, jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch: dict) -> tuple[Array, dict]:
+        logits, _ = self.forward(params, batch["tokens"])
+        targets = batch["tokens"][:, 1:]
+        logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+        nll = -jnp.take_along_axis(
+            logp, targets[..., None].astype(jnp.int32), axis=-1)[..., 0]
+        ce = nll.mean()
+        zl = 1e-4 * jnp.square(jax.nn.logsumexp(logits[:, :-1],
+                                                axis=-1)).mean()
+        return ce + zl, {"ce": ce, "aux": jnp.zeros(()), "zloss": zl}
+
+    # -- serving ------------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int = 0, dtype=jnp.bfloat16):
+        """Recurrent state — O(1) in sequence length (max_len unused)."""
+        cfg = self.cfg
+        H, hd = self.n_heads_ssm, self.head_dim
+        one = dict(
+            x_tm=jnp.zeros((batch, cfg.d_model), dtype),
+            x_cm=jnp.zeros((batch, cfg.d_model), dtype),
+            s=jnp.zeros((batch, H, hd, hd), jnp.float32))
+        return {"layers": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape).copy(),
+            one)}
+
+    def cache_axes(self):
+        return {"layers": dict(
+            x_tm=("layers", "batch", None),
+            x_cm=("layers", "batch", None),
+            s=("layers", "batch", "heads", None, None))}
+
+    def prefill(self, params, tokens: Array, positions=None,
+                max_len: int = 0, extra_embeds=None):
+        """Full-prompt pass returning (last logits, recurrent state cache)."""
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+        x = layer_norm(x, params["ln0"]["gamma"], params["ln0"]["beta"])
+
+        def body(h, layer_params):
+            out, st = self._block(layer_params, h, None)
+            return out, st
+
+        x, states = jax.lax.scan(body, x, params["layers"])
+        x = layer_norm(x, params["final_norm"]["gamma"],
+                       params["final_norm"]["beta"])
+        logits = jnp.einsum("bsd,dv->bsv", x[:, -1:],
+                            params["lm_head"].astype(x.dtype))
+        states = dict(states)
+        states["x_tm"] = states["x_tm"].astype(jnp.bfloat16)
+        states["x_cm"] = states["x_cm"].astype(jnp.bfloat16)
+        return logits.astype(jnp.float32), {"layers": states}
+
+    def decode_step(self, params, cache, tokens: Array,
+                    positions=None) -> tuple[Array, dict]:
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+        x = layer_norm(x, params["ln0"]["gamma"], params["ln0"]["beta"])
+
+        def body(h, xs):
+            layer_params, layer_state = xs
+            out, new_state = self._block(layer_params, h, layer_state)
+            return out, new_state
+
+        x, new_states = jax.lax.scan(body, x,
+                                     (params["layers"], cache["layers"]))
+        x = layer_norm(x, params["final_norm"]["gamma"],
+                       params["final_norm"]["beta"])
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            params["lm_head"].astype(x.dtype))
+        return logits.astype(jnp.float32), {"layers": new_states}

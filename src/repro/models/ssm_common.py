@@ -1,0 +1,123 @@
+"""Chunked linear attention with per-channel decay — shared SSM engine.
+
+Both assigned recurrent families reduce to the same state-space recurrence
+
+    S_t = diag(w_t) S_{t-1} + k_t (x) v_t          S in R^{Dk x Dv}
+    o_t = q_t . S_{t-1} + bonus                    (RWKV6: strict + u-bonus)
+    o_t = q_t . S_t                                (Mamba2: inclusive, w scalar)
+
+TPU adaptation: instead of a length-S sequential scan (VPU-bound outer
+products), sequences are processed in chunks of 16: within a chunk the
+pairwise decay ratios become an (c, c) masked matmul on the MXU, and only
+one (Dk, Dv) state hand-off per chunk is sequential.  Decay products are
+evaluated as ``exp(L_t - L_i)`` around a mid-chunk normalizer in f32 —
+with ``log w`` clamped to [-4, 0] and c = 16 every factor stays finite
+(|exponent| <= 32 per factor, products of valid pairs <= 1).
+
+``chunked_la`` (training/prefill) and ``la_step`` (single-token decode) are
+the only two entry points; RWKV6 uses per-channel decay + u-bonus, Mamba2
+uses a per-head scalar decay broadcast over channels + inclusive diagonal.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+LOG_W_MIN = -4.0    # decay clamp; see module docstring for the numerics
+
+
+def chunked_la(q: Array, k: Array, v: Array, log_w: Array, *,
+               u: Array | None = None, inclusive: bool = False,
+               chunk: int = 16,
+               initial_state: Array | None = None) -> tuple[Array, Array]:
+    """q, k, log_w (B, S, H, Dk); v (B, S, H, Dv); u (H, Dk) or None.
+
+    Returns (o (B, S, H, Dv), final_state (B, H, Dk, Dv)).
+    S % chunk == 0 required (configs pick chunk sizes that divide).
+    """
+    B, S, H, Dk = q.shape
+    Dv = v.shape[-1]
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        # Zero-pad the tail: k=v=0 adds nothing to the state, log_w=0
+        # (w=1) leaves it untouched; padded q rows are sliced off below.
+        pz = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        o, s_final = chunked_la(pz(q), pz(k), pz(v), pz(log_w), u=u,
+                                inclusive=inclusive, chunk=c,
+                                initial_state=initial_state)
+        return o[:, :S], s_final
+    nc = S // c
+
+    def resh(a):
+        return (a.reshape(B, nc, c, H, a.shape[-1])
+                 .transpose(1, 0, 3, 2, 4).astype(jnp.float32))
+
+    qc, kc, vc, lw = resh(q), resh(k), resh(v), resh(log_w)
+    lw = jnp.clip(lw, LOG_W_MIN, 0.0)
+    l_inc = jnp.cumsum(lw, axis=-2)                     # (nc,B,H,c,Dk)
+    l_exc = l_inc - lw
+    l_last = l_inc[..., -1:, :]                         # (nc,B,H,1,Dk)
+    l_q = l_inc if inclusive else l_exc
+    mid = l_inc[..., c // 2, :][..., None, :]           # normalizer
+
+    q_state = qc * jnp.exp(l_q)                         # vs incoming state
+    q_n = qc * jnp.exp(l_q - mid)
+    k_n = kc * jnp.exp(mid - l_inc)
+    k_state = kc * jnp.exp(l_last - l_inc)              # into outgoing state
+
+    att = jnp.einsum("nbhtd,nbhsd->nbhts", q_n, k_n)    # (nc,B,H,c,c)
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    mask = (t_idx >= s_idx) if inclusive else (t_idx > s_idx)
+    att = jnp.where(mask, att, 0.0)
+    o_intra = jnp.einsum("nbhts,nbhsv->nbhtv", att, vc)
+
+    if u is not None:
+        diag = jnp.einsum("nbhtd,nbhtd->nbht",
+                          qc * u.astype(jnp.float32)[None, None, :, None, :],
+                          kc)
+        o_intra = o_intra + diag[..., None] * vc
+
+    if initial_state is None:
+        s0 = jnp.zeros((B, H, Dk, Dv), jnp.float32)
+    else:
+        s0 = initial_state.astype(jnp.float32)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def chunk_step(s, xs):
+        q_st, k_st, v_ch, decay = xs
+        o_inter = jnp.einsum("bhtd,bhdv->bhtv", q_st, s)
+        s_new = (s * jnp.exp(decay[..., 0, :])[..., None]
+                 + jnp.einsum("bhtd,bhtv->bhdv", k_st, v_ch))
+        return s_new, o_inter
+
+    s_final, o_inter = jax.lax.scan(chunk_step, s0,
+                                    (q_state, k_state, vc, l_last))
+    o = o_intra + o_inter                               # (nc,B,H,c,Dv)
+    o = o.transpose(1, 0, 3, 2, 4).reshape(B, S, H, Dv)
+    return o.astype(q.dtype), s_final
+
+
+def la_step(state: Array, q: Array, k: Array, v: Array, log_w: Array, *,
+            u: Array | None = None,
+            inclusive: bool = False) -> tuple[Array, Array]:
+    """Single-token recurrence.  state (B, H, Dk, Dv);
+    q, k, log_w (B, H, Dk); v (B, H, Dv).  Returns (o (B,H,Dv), new state).
+    """
+    s = state.astype(jnp.float32)
+    qf, kf, vf = (a.astype(jnp.float32) for a in (q, k, v))
+    w = jnp.exp(jnp.clip(log_w.astype(jnp.float32), LOG_W_MIN, 0.0))
+    kv = kf[..., :, None] * vf[..., None, :]            # (B,H,Dk,Dv)
+    if inclusive:
+        s_new = s * w[..., None] + kv
+        o = jnp.einsum("bhd,bhdv->bhv", qf, s_new)
+    else:
+        bonus = kv * u.astype(jnp.float32)[None, :, :, None]
+        o = jnp.einsum("bhd,bhdv->bhv", qf, s + bonus)
+        s_new = s * w[..., None] + kv
+    return o.astype(q.dtype), s_new

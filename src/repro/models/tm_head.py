@@ -1,0 +1,82 @@
+"""CoTM readout head — the paper's technique as a first-class LM feature.
+
+Attaches to any backbone in the zoo: pooled hidden states are booleanized
+(thermometer encoding over standardized features, original + negated bits,
+exactly the paper's data-preparation step) and classified by the CoTM
+clause/class computation.  Inference uses the Pallas kernels (clause
+crossbar + class crossbar); training uses the CoTM feedback from
+``repro.core.train`` on frozen backbone features.
+
+This is the honest integration point for a *discriminative Boolean
+classifier* into a generative stack (sequence classification / reranking);
+see DESIGN.md §Arch-applicability for why it does not replace the LM head.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..core.booleanize import booleanize
+from ..core.cotm import CoTMConfig, CoTMParams, include_mask
+from ..core.train import train_step_batch
+from ..kernels import ops
+from .config import TMHeadConfig
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TMHead:
+    cfg: TMHeadConfig
+    d_features: int
+
+    @property
+    def cotm_cfg(self) -> CoTMConfig:
+        return CoTMConfig(
+            n_literals=2 * self.d_features * self.cfg.bits_per_feature,
+            n_clauses=self.cfg.n_clauses,
+            n_classes=self.cfg.n_classes,
+            n_states=self.cfg.n_states,
+            threshold=self.cfg.threshold)
+
+    def init(self, key: Array) -> CoTMParams:
+        return self.cotm_cfg.init(key)
+
+    def booleanize(self, features: Array) -> Array:
+        """features (B, d) -> literals (B, 2*d*bits) bool.
+
+        Features are squashed to (0, 1) with a logistic over their own
+        scale so thermometer thresholds are calibration-free.
+        """
+        f32 = features.astype(jnp.float32)
+        mu = f32.mean(axis=-1, keepdims=True)
+        sd = f32.std(axis=-1, keepdims=True) + 1e-6
+        squashed = jax.nn.sigmoid((f32 - mu) / sd)
+        return booleanize(squashed, n_bits=self.cfg.bits_per_feature)
+
+    def scores(self, params: CoTMParams, features: Array, *,
+               impl: str = "pallas") -> Array:
+        """Class scores via the fused clause+class kernel."""
+        lits = self.booleanize(features)
+        inc = include_mask(params.ta_state, self.cotm_cfg.n_states)
+        return ops.fused_cotm(lits, inc, params.weights.T, impl=impl)
+
+    def predict(self, params: CoTMParams, features: Array, *,
+                impl: str = "pallas") -> Array:
+        return jnp.argmax(self.scores(params, features, impl=impl), axis=-1)
+
+    def train_step(self, params: CoTMParams, features: Array,
+                   labels: Array, key: Array) -> CoTMParams:
+        """One CoTM feedback step on frozen backbone features."""
+        lits = self.booleanize(features)
+        return train_step_batch(params, lits, labels, key, self.cotm_cfg)
+
+
+def pool_features(hidden: Array, mask: Array | None = None) -> Array:
+    """Mean-pool (B, S, d) -> (B, d) over valid positions."""
+    if mask is None:
+        return hidden.mean(axis=1)
+    m = mask.astype(hidden.dtype)[..., None]
+    return (hidden * m).sum(axis=1) / jnp.maximum(m.sum(axis=1), 1.0)

@@ -1,0 +1,327 @@
+"""Decoder-only transformer assembly (dense / moe / vlm / audio families).
+
+Layers are stacked on a leading "layers" axis and executed with
+``jax.lax.scan`` (small HLO, fast multi-pod compiles) with per-layer
+``jax.checkpoint`` rematerialization.  Heterogeneous leading layers (e.g.
+DeepSeek's dense first layer) sit outside the scan.
+
+The modality frontends for the [vlm]/[audio] architectures are STUBS per
+the assignment: ``qwen2-vl`` consumes precomputed patch embeddings
+(concatenated before the text tokens, M-RoPE positions supplied by the
+caller) and ``musicgen`` consumes EnCodec token streams (``n_codebooks``
+parallel vocabularies, embedded and summed, one output head per codebook).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attn_decls, attn_forward, init_attn_cache
+from .base import (NULL_CTX, P, ShardCtx, abstract_tree, axes_tree,
+                   count_params, dense, init_tree, layer_norm, rms_norm)
+from .config import ModelConfig
+from .ffn import decls_mlp, decls_moe, mlp_forward, moe_forward
+
+Array = jax.Array
+
+
+def _stack(decls: Any, n: int) -> Any:
+    """Add a leading stacked-layer axis to every declaration in the tree."""
+    return jax.tree.map(
+        lambda p: P((n,) + p.shape, ("layers",) + p.axes, p.dtype,
+                    p.init, p.scale),
+        decls, is_leaf=lambda x: isinstance(x, P))
+
+
+def _norm_decl(cfg: ModelConfig) -> dict:
+    if cfg.norm == "layer":
+        return {"gamma": P((cfg.d_model,), (None,), init="ones"),
+                "beta": P((cfg.d_model,), (None,), init="zeros")}
+    return {"gamma": P((cfg.d_model,), (None,), init="zeros")}
+
+
+def _norm(p: dict, x: Array, cfg: ModelConfig) -> Array:
+    if cfg.norm == "layer":
+        return layer_norm(x, p["gamma"], p["beta"])
+    return rms_norm(x, p["gamma"])
+
+
+class TransformerLM:
+    """Functional LM; every method takes explicit params."""
+
+    def __init__(self, cfg: ModelConfig, ctx: ShardCtx = NULL_CTX):
+        self.cfg = cfg
+        self.ctx = ctx
+
+    # -- declarations -------------------------------------------------------
+    def _block_decls(self, moe_layer: bool) -> dict:
+        cfg = self.cfg
+        d = {
+            "ln1": _norm_decl(cfg),
+            "ln2": _norm_decl(cfg),
+            "attn": attn_decls(cfg),
+        }
+        if moe_layer:
+            d["moe"] = decls_moe(cfg)
+        else:
+            ff = cfg.d_ff
+            if cfg.moe is not None and cfg.moe.d_ff_dense:
+                ff = cfg.moe.d_ff_dense
+            d["mlp"] = decls_mlp(cfg.d_model, ff, cfg.mlp_gated)
+        return d
+
+    def decls(self) -> dict:
+        cfg = self.cfg
+        n_front = cfg.moe.first_dense_layers if cfg.moe else 0
+        decls: dict[str, Any] = {
+            "embed": P((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                       scale=1.0),
+            "final_norm": _norm_decl(cfg),
+            "layers": _stack(self._block_decls(cfg.moe is not None),
+                             cfg.n_layers - n_front),
+        }
+        if cfg.modality == "audio" and cfg.n_codebooks > 1:
+            decls["embed"] = P((cfg.n_codebooks, cfg.vocab, cfg.d_model),
+                               (None, "vocab", "embed"), scale=1.0)
+        if n_front:
+            decls["front"] = [self._block_decls(False)
+                              for _ in range(n_front)]
+        if not cfg.tie_embeddings:
+            shape = (cfg.d_model, cfg.vocab)
+            if cfg.modality == "audio" and cfg.n_codebooks > 1:
+                decls["lm_head"] = P((cfg.n_codebooks,) + shape,
+                                     (None, "embed", "vocab"))
+            else:
+                decls["lm_head"] = P(shape, ("embed", "vocab"))
+        return decls
+
+    def init(self, key: Array):
+        return init_tree(self.decls(), key)
+
+    def abstract(self, dtype=None):
+        return abstract_tree(self.decls(), dtype)
+
+    def axes(self):
+        return axes_tree(self.decls())
+
+    def n_params(self) -> int:
+        return count_params(self.decls())
+
+    # -- blocks --------------------------------------------------------------
+    def _block(self, p: dict, x: Array, positions: Array, *,
+               moe_layer: bool, cache: dict | None = None,
+               fill_len: int | None = None):
+        cfg, ctx = self.cfg, self.ctx
+        h, new_cache = attn_forward(p["attn"], _norm(p["ln1"], x, cfg),
+                                    positions, cfg, ctx, cache=cache,
+                                    fill_len=fill_len)
+        x = x + h
+        aux = jnp.zeros((), jnp.float32)
+        if moe_layer:
+            h, aux = moe_forward(p["moe"], _norm(p["ln2"], x, cfg), cfg, ctx)
+        else:
+            h = mlp_forward(p["mlp"], _norm(p["ln2"], x, cfg), cfg.act, ctx)
+        return x + h, aux, new_cache
+
+    # -- embedding / head ----------------------------------------------------
+    def embed(self, params, tokens: Array,
+              extra_embeds: Array | None = None) -> Array:
+        cfg = self.cfg
+        emb = params["embed"]
+        if cfg.modality == "audio" and cfg.n_codebooks > 1:
+            # tokens (B, S, n_codebooks) -> summed codebook embeddings.
+            x = sum(jnp.take(emb[c], tokens[..., c], axis=0)
+                    for c in range(cfg.n_codebooks))
+        else:
+            x = jnp.take(emb, tokens, axis=0)
+        x = x.astype(cfg.dtype)
+        if cfg.tie_embeddings:
+            x = x * math.sqrt(cfg.d_model)
+        if extra_embeds is not None:
+            # vlm stub: precomputed patch embeddings prepended to the text.
+            x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+        return self.ctx.constrain(x, "batch", "seq", None)
+
+    def logits(self, params, x: Array) -> Array:
+        cfg = self.cfg
+        x = _norm(params["final_norm"], x, cfg)
+        if cfg.tie_embeddings:
+            out = jnp.einsum("bsd,vd->bsv", x,
+                             params["embed"].astype(x.dtype))
+        elif cfg.modality == "audio" and cfg.n_codebooks > 1:
+            out = jnp.einsum("bsd,cdv->bscv", x,
+                             params["lm_head"].astype(x.dtype))
+        else:
+            out = jnp.einsum("bsd,dv->bsv", x,
+                             params["lm_head"].astype(x.dtype))
+        return self.ctx.constrain(out.astype(jnp.float32),
+                                  *(("batch", None, None, "vocab")
+                                    if out.ndim == 4
+                                    else ("batch", None, "vocab")))
+
+    # -- full forward ---------------------------------------------------------
+    def forward(self, params, tokens: Array, positions: Array,
+                extra_embeds: Array | None = None) -> tuple[Array, Array]:
+        """-> (logits, aux_loss)."""
+        cfg = self.cfg
+        x = self.embed(params, tokens, extra_embeds)
+
+        for p_front in params.get("front", []):
+            def front_blk(p, h):
+                out, aux, _ = self._block(p, h, positions, moe_layer=False)
+                return out, aux
+            if cfg.remat:
+                front_blk = jax.checkpoint(front_blk)
+            x, _ = front_blk(p_front, x)
+
+        moe_layer = cfg.moe is not None
+
+        def body(carry, layer_params):
+            h, aux = carry
+            out, a, _ = self._block(layer_params, h, positions,
+                                    moe_layer=moe_layer)
+            return (out, aux + a), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        if cfg.scan_layers:
+            (x, aux), _ = jax.lax.scan(
+                body, (x, jnp.zeros((), jnp.float32)), params["layers"])
+        else:
+            aux = jnp.zeros((), jnp.float32)
+            n_scan = jax.tree.leaves(params["layers"])[0].shape[0]
+            for i in range(n_scan):
+                layer = jax.tree.map(lambda a: a[i], params["layers"])
+                (x, aux), _ = body((x, aux), layer)
+        return self.logits(params, x), aux
+
+    # -- loss ------------------------------------------------------------------
+    def loss(self, params, batch: dict) -> tuple[Array, dict]:
+        """Next-token CE.  batch: tokens (B, S[, C]), optional loss_mask,
+        positions, extra_embeds."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        positions = batch.get("positions")
+        if positions is None:
+            positions = jnp.arange(tokens.shape[1])[None, :]
+        logits, aux = self.forward(params, tokens, positions,
+                                   batch.get("extra_embeds"))
+        if batch.get("extra_embeds") is not None:
+            logits = logits[:, -tokens.shape[1]:]   # text positions only
+        targets = tokens[:, 1:]
+        logits = logits[:, :-1]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None].astype(jnp.int32),
+                                   axis=-1)[..., 0]
+        mask = batch.get("loss_mask")
+        if mask is not None:
+            mask = mask[:, 1:].astype(jnp.float32)
+            if nll.ndim == 3:                       # audio codebooks
+                mask = mask[..., None]
+            ce = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+        else:
+            ce = nll.mean()
+        # z-loss keeps the softmax normalizer bounded (stability at scale).
+        zl = 1e-4 * jnp.square(jax.nn.logsumexp(logits, axis=-1)).mean()
+        return ce + zl + aux, {"ce": ce, "aux": aux, "zloss": zl}
+
+    # -- serving ----------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        one = init_attn_cache(cfg, batch, max_len, dtype)
+        n_front = cfg.moe.first_dense_layers if cfg.moe else 0
+        cache = {"layers": jax.tree.map(
+            lambda a: jnp.broadcast_to(
+                a, (cfg.n_layers - n_front,) + a.shape).copy(), one)}
+        if n_front:
+            cache["front"] = [jax.tree.map(jnp.copy, one)
+                              for _ in range(n_front)]
+        return cache
+
+    def cache_axes(self):
+        """Logical axes for the cache pytree (for shardings)."""
+        cfg = self.cfg
+
+        def leaf_axes(path_leaf):
+            name, arr = path_leaf
+            if name == "len":
+                return ("batch",)
+            if name in ("ckv", "kr"):
+                # Compressed-latent cache: shard the latent dim over model
+                # (no head axis exists to shard).
+                return ("batch", None, "head_dim")
+            # KV heads shard over model when they divide it; otherwise the
+            # head_dim picks up the model axis (ShardCtx used-set fallback).
+            return ("batch", None, "kv", "head_dim")
+
+        one = {k: leaf_axes((k, None))
+               for k in (("ckv", "kr", "len") if cfg.mla else ("k", "v",
+                                                               "len"))}
+        stacked = {k: ("layers",) + v for k, v in one.items()}
+        cache_axes = {"layers": stacked}
+        n_front = cfg.moe.first_dense_layers if cfg.moe else 0
+        if n_front:
+            cache_axes["front"] = [one for _ in range(n_front)]
+        return cache_axes
+
+    def prefill(self, params, tokens: Array, positions: Array,
+                max_len: int, extra_embeds: Array | None = None):
+        """Process a full prompt, returning (last-position logits, cache
+        padded to max_len)."""
+        cfg = self.cfg
+        x = self.embed(params, tokens, extra_embeds)
+
+        new_front = []
+        for p_front in params.get("front", []):
+            x, _, c = self._block(p_front, x, positions, moe_layer=False,
+                                  fill_len=max_len)
+            new_front.append(c)
+
+        moe_layer = cfg.moe is not None
+
+        def body(h, layer_params):
+            out, _, c = self._block(layer_params, h, positions,
+                                    moe_layer=moe_layer, fill_len=max_len)
+            return out, c
+
+        x, layer_cache = jax.lax.scan(body, x, params["layers"])
+        cache = {"layers": layer_cache}
+        if new_front:
+            cache["front"] = new_front
+        logits = self.logits(params, x[:, -1:])
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens: Array,
+                    positions: Array) -> tuple[Array, dict]:
+        """One decode step: tokens (B, 1[, C]) -> (logits (B, 1, V[, C]),
+        updated cache)."""
+        cfg = self.cfg
+        x = self.embed(params, tokens)
+
+        new_front = []
+        for p_front, c_front in zip(params.get("front", []),
+                                    cache.get("front", [])):
+            x, _, c = self._block(p_front, x, positions, moe_layer=False,
+                                  cache=c_front)
+            new_front.append(c)
+
+        moe_layer = cfg.moe is not None
+
+        def body(h, xs):
+            layer_params, layer_cache = xs
+            out, _, new_cache = self._block(layer_params, h, positions,
+                                            moe_layer=moe_layer,
+                                            cache=layer_cache)
+            return out, new_cache
+
+        x, new_layer_cache = jax.lax.scan(
+            body, x, (params["layers"], cache["layers"]))
+        new_cache = {"layers": new_layer_cache}
+        if new_front:
+            new_cache["front"] = new_front
+        return self.logits(params, x), new_cache

@@ -1,0 +1,345 @@
+"""Zamba2 hybrid: Mamba2 backbone + ONE shared full-attention block.
+
+Per arXiv:2411.15242 the attention block's weights are SHARED across all of
+its invocations (every ``hybrid_attn_every`` mamba layers); its input is the
+concat of the current hidden state and the original embeddings (2*d wide),
+projected back to d by the output projection.  Adaptations recorded in
+DESIGN.md: per-invocation LoRA deltas on the shared weights are omitted,
+and decode uses a RING-BUFFER KV cache (window 8192) per invocation so the
+long_500k cell fits HBM — the Mamba2 state carries long-range information,
+the shared-attention window carries local syntax (the standard hybrid
+serving trade-off).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .attention import chunked_attention
+from .base import (NULL_CTX, P, ShardCtx, abstract_tree, axes_tree,
+                   count_params, count_params as _cp, dense, init_tree,
+                   rms_norm)
+from .config import ModelConfig
+from .ffn import decls_mlp, mlp_forward
+from .mamba2 import decls_mamba, init_mamba_state, mamba_forward
+from .rope import apply_rope, rope_angles
+from .transformer import _stack
+
+Array = jax.Array
+
+ATTN_WINDOW = 8192     # decode ring-buffer length per shared-block invocation
+
+
+class Zamba2LM:
+    def __init__(self, cfg: ModelConfig, ctx: ShardCtx = NULL_CTX):
+        assert cfg.ssm is not None and cfg.hybrid_attn_every > 0
+        self.cfg = cfg
+        self.ctx = ctx
+        self.d_concat = 2 * cfg.d_model
+        self.attn_head_dim = self.d_concat // cfg.n_heads
+        self.n_invocations = cfg.n_layers // cfg.hybrid_attn_every
+
+    # -- declarations ----------------------------------------------------------
+    def _shared_decls(self) -> dict:
+        cfg = self.cfg
+        dc, hq, hd = self.d_concat, cfg.n_heads, self.attn_head_dim
+        return {
+            "ln_in": P((dc,), (None,), init="zeros"),
+            "wq": P((dc, hq, hd), ("embed", "heads", None)),
+            "wk": P((dc, hq, hd), ("embed", "heads", None)),
+            "wv": P((dc, hq, hd), ("embed", "heads", None)),
+            "wo": P((hq, hd, cfg.d_model), ("heads", None, "embed")),
+            "ln_mlp": P((cfg.d_model,), (None,), init="zeros"),
+            "mlp": decls_mlp(cfg.d_model, cfg.d_ff),
+        }
+
+    def _mamba_block_decls(self) -> dict:
+        return {"ln": P((self.cfg.d_model,), (None,), init="zeros"),
+                "mamba": decls_mamba(self.cfg)}
+
+    def decls(self) -> dict:
+        cfg = self.cfg
+        return {
+            "embed": P((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                       scale=1.0),
+            "final_norm": P((cfg.d_model,), (None,), init="zeros"),
+            "lm_head": P((cfg.d_model, cfg.vocab), ("embed", "vocab")),
+            "shared_attn": self._shared_decls(),
+            "layers": _stack(self._mamba_block_decls(), cfg.n_layers),
+        }
+
+    def init(self, key):
+        return init_tree(self.decls(), key)
+
+    def abstract(self, dtype=None):
+        return abstract_tree(self.decls(), dtype)
+
+    def axes(self):
+        return axes_tree(self.decls())
+
+    def n_params(self) -> int:
+        return count_params(self.decls())
+
+    # -- shared attention block ---------------------------------------------------
+    def _shared_attn(self, p: dict, x: Array, x0: Array, positions: Array,
+                     cache: dict | None = None,
+                     fill_window: int | None = None):
+        """Full-attention block on concat(x, x0); returns (delta_x, cache)."""
+        cfg, ctx = self.cfg, self.ctx
+        hd = self.attn_head_dim
+        scale = 1.0 / math.sqrt(hd)
+        xc = jnp.concatenate([x, x0], axis=-1)
+        xc = rms_norm(xc, p["ln_in"])
+
+        proj = lambda w: jnp.einsum("bsd,dhk->bshk", xc, w.astype(x.dtype))
+        q, k, v = proj(p["wq"]), proj(p["wk"]), proj(p["wv"])
+        q = ctx.constrain(q, "batch", None, "heads", None)
+        k = ctx.constrain(k, "batch", None, "heads", None)
+        ang = rope_angles(positions, hd, cfg.rope_theta)
+        q, k = apply_rope(q, ang), apply_rope(k, ang)
+
+        new_cache = None
+        if cache is None:
+            S = x.shape[1]
+            o = chunked_attention(q, k, v, scale=scale,
+                                  q_chunk=min(cfg.attn_chunk_q, S),
+                                  k_chunk=min(cfg.attn_chunk_k, S),
+                                  ctx=ctx)
+            if fill_window is not None:
+                # Ring-buffer fill: keep the last min(W, S) positions at
+                # their pos % W slots.
+                W = fill_window
+                n_keep = min(W, S)
+                keep_pos = jnp.arange(S - n_keep, S)
+                slots = keep_pos % W
+                B = x.shape[0]
+                mk = jnp.zeros((B, W) + k.shape[2:], jnp.bfloat16)
+                mk = mk.at[:, slots].set(
+                    k[:, -n_keep:].astype(jnp.bfloat16))
+                mv = jnp.zeros((B, W) + v.shape[2:], jnp.bfloat16)
+                mv = mv.at[:, slots].set(
+                    v[:, -n_keep:].astype(jnp.bfloat16))
+                pos_buf = jnp.full((B, W), -10 ** 9, jnp.int32)
+                pos_buf = pos_buf.at[:, slots].set(
+                    jnp.broadcast_to(keep_pos, (B, n_keep)))
+                new_cache = dict(k=mk, v=mv, pos=pos_buf,
+                                 len=jnp.full((B,), S, jnp.int32))
+        else:
+            # Ring buffer: slot = pos % W; valid entries are the last
+            # min(len, W) positions.
+            W = cache["k"].shape[1]
+            pos = cache["len"]                              # (B,) tokens so far
+            slot = pos % W
+            upd = lambda c, u: jax.vmap(
+                lambda cc, uu, i: jax.lax.dynamic_update_slice(
+                    cc, uu, (i, 0, 0)))(c, u.astype(c.dtype), slot)
+            k_cache = upd(cache["k"], k)
+            v_cache = upd(cache["v"], v)
+            slot_pos = cache["pos"].at[jnp.arange(pos.shape[0]), slot].set(
+                pos)
+            valid = (slot_pos <= pos[:, None]) & (
+                slot_pos > (pos[:, None] - W))
+            qh = q[:, 0].astype(jnp.bfloat16)               # (B,H,hd)
+            logits = jnp.einsum("bhd,bkhd->bhk", qh,
+                                k_cache.astype(jnp.bfloat16),
+                                preferred_element_type=jnp.float32) * scale
+            logits = jnp.where(valid[:, None, :], logits, -jnp.inf)
+            pr = jax.nn.softmax(logits, axis=-1)
+            o = jnp.einsum("bhk,bkhd->bhd", pr.astype(jnp.bfloat16),
+                           v_cache.astype(jnp.bfloat16),
+                           preferred_element_type=jnp.float32)[:, None]
+            o = o.astype(x.dtype)
+            new_cache = dict(k=k_cache, v=v_cache, pos=slot_pos,
+                             len=pos + 1)
+
+        o = ctx.constrain(o, "batch", None, "heads", None)
+        h = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+        x = x + h
+        x = x + mlp_forward(p["mlp"], rms_norm(x, p["ln_mlp"]), cfg.act,
+                            self.ctx)
+        return x, new_cache
+
+    # -- forward ---------------------------------------------------------------------
+    def forward(self, params, tokens: Array, positions=None,
+                extra_embeds=None) -> tuple[Array, Array]:
+        cfg = self.cfg
+        every = cfg.hybrid_attn_every
+        if positions is None:
+            positions = jnp.arange(tokens.shape[1])[None, :]
+        x0 = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+        x0 = self.ctx.constrain(x0, "batch", "seq", None)
+        x = x0
+
+        def mamba_body(h, layer_params):
+            out, _ = mamba_forward(
+                layer_params["mamba"],
+                rms_norm(h, layer_params["ln"]), cfg, self.ctx)
+            return h + out, None
+
+        if cfg.remat:
+            mamba_body = jax.checkpoint(mamba_body)
+
+        # Scan mamba layers group-by-group; shared attention in between.
+        stacked = params["layers"]
+        n_groups = cfg.n_layers // every
+        rem = cfg.n_layers - n_groups * every
+        for g in range(n_groups):
+            group = jax.tree.map(
+                lambda a: jax.lax.slice_in_dim(a, g * every, (g + 1) * every),
+                stacked)
+            x, _ = jax.lax.scan(mamba_body, x, group)
+            x, _ = self._shared_attn(params["shared_attn"], x, x0, positions)
+        if rem:
+            tail = jax.tree.map(
+                lambda a: jax.lax.slice_in_dim(a, n_groups * every,
+                                               cfg.n_layers), stacked)
+            x, _ = jax.lax.scan(mamba_body, x, tail)
+
+        x = rms_norm(x, params["final_norm"])
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            params["lm_head"].astype(x.dtype))
+        logits = self.ctx.constrain(logits.astype(jnp.float32),
+                                    "batch", None, "vocab")
+        return logits, jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch: dict) -> tuple[Array, dict]:
+        logits, _ = self.forward(params, batch["tokens"])
+        targets = batch["tokens"][:, 1:]
+        logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+        nll = -jnp.take_along_axis(
+            logp, targets[..., None].astype(jnp.int32), axis=-1)[..., 0]
+        ce = nll.mean()
+        zl = 1e-4 * jnp.square(jax.nn.logsumexp(logits[:, :-1],
+                                                axis=-1)).mean()
+        return ce + zl, {"ce": ce, "aux": jnp.zeros(()), "zloss": zl}
+
+    # -- serving -----------------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        W = min(ATTN_WINDOW, max_len)
+        hq, hd = cfg.n_heads, self.attn_head_dim
+        one_m = init_mamba_state(cfg, batch, dtype)
+        attn_one = dict(
+            k=jnp.zeros((batch, W, hq, hd), dtype),
+            v=jnp.zeros((batch, W, hq, hd), dtype),
+            pos=jnp.full((batch, W), -10 ** 9, jnp.int32),
+            len=jnp.zeros((batch,), jnp.int32))
+        return {
+            "mamba": jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a, (cfg.n_layers,) + a.shape).copy(), one_m),
+            "attn": jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a, (self.n_invocations,) + a.shape).copy(), attn_one),
+            "x0": jnp.zeros((batch, cfg.d_model), dtype),
+        }
+
+    def cache_axes(self):
+        return {
+            "mamba": dict(conv=("layers", "batch", None, "mlp"),
+                          s=("layers", "batch", "heads", None, None)),
+            "attn": dict(k=(None, "batch", None, "heads", "head_dim"),
+                         v=(None, "batch", None, "heads", "head_dim"),
+                         pos=(None, "batch", None),
+                         len=(None, "batch")),
+            "x0": ("batch", None),
+        }
+
+    def prefill(self, params, tokens: Array, positions: Array,
+                max_len: int, extra_embeds=None):
+        """Full-prompt pass -> (last logits, {mamba states, attn ring
+        caches, x0 tail})."""
+        cfg = self.cfg
+        every = cfg.hybrid_attn_every
+        W = min(ATTN_WINDOW, max_len)
+        if positions is None:
+            positions = jnp.arange(tokens.shape[1])[None, :]
+        x0 = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+        x = x0
+
+        def mamba_body(h, layer_params):
+            out, st = mamba_forward(
+                layer_params["mamba"], rms_norm(h, layer_params["ln"]),
+                cfg, self.ctx)
+            return h + out, st
+
+        stacked = params["layers"]
+        n_groups = cfg.n_layers // every
+        rem = cfg.n_layers - n_groups * every
+        mamba_states, attn_caches = [], []
+        for g in range(n_groups):
+            sl = lambda a: jax.lax.slice_in_dim(a, g * every,
+                                                (g + 1) * every)
+            x, st = jax.lax.scan(mamba_body, x, jax.tree.map(sl, stacked))
+            mamba_states.append(st)
+            x, c = self._shared_attn(params["shared_attn"], x, x0,
+                                     positions, fill_window=W)
+            attn_caches.append(c)
+        if rem:
+            sl = lambda a: jax.lax.slice_in_dim(a, n_groups * every,
+                                                cfg.n_layers)
+            x, st = jax.lax.scan(mamba_body, x, jax.tree.map(sl, stacked))
+            mamba_states.append(st)
+
+        cache = {
+            "mamba": jax.tree.map(lambda *a: jnp.concatenate(a, axis=0),
+                                  *mamba_states),
+            "attn": jax.tree.map(lambda *a: jnp.stack(a, axis=0),
+                                 *attn_caches),
+            "x0": x0[:, -1],
+        }
+        x = rms_norm(x[:, -1:], params["final_norm"])
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            params["lm_head"].astype(x.dtype))
+        return logits.astype(jnp.float32), cache
+
+    def decode_step(self, params, cache, tokens: Array,
+                    positions: Array) -> tuple[Array, dict]:
+        cfg = self.cfg
+        every = cfg.hybrid_attn_every
+        x0 = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+        x = x0
+
+        def mamba_body(h, xs):
+            layer_params, layer_state = xs
+            out, new_state = mamba_forward(
+                layer_params["mamba"], rms_norm(h, layer_params["ln"]),
+                cfg, self.ctx, state=layer_state)
+            return h + out, new_state
+
+        stacked, states = params["layers"], cache["mamba"]
+        n_groups = cfg.n_layers // every
+        rem = cfg.n_layers - n_groups * every
+        new_mamba, new_attn = [], []
+        for g in range(n_groups):
+            sl = lambda a: jax.lax.slice_in_dim(a, g * every,
+                                                (g + 1) * every)
+            x, ns = jax.lax.scan(mamba_body, x,
+                                 (jax.tree.map(sl, stacked),
+                                  jax.tree.map(sl, states)))
+            new_mamba.append(ns)
+            attn_cache_g = jax.tree.map(lambda a: a[g], cache["attn"])
+            x, nc = self._shared_attn(params["shared_attn"], x,
+                                      x0, positions, cache=attn_cache_g)
+            new_attn.append(nc)
+        if rem:
+            sl = lambda a: jax.lax.slice_in_dim(a, n_groups * every,
+                                                cfg.n_layers)
+            x, ns = jax.lax.scan(mamba_body, x,
+                                 (jax.tree.map(sl, stacked),
+                                  jax.tree.map(sl, states)))
+            new_mamba.append(ns)
+
+        new_cache = {
+            "mamba": jax.tree.map(
+                lambda *a: jnp.concatenate(a, axis=0), *new_mamba),
+            "attn": jax.tree.map(lambda *a: jnp.stack(a, axis=0),
+                                 *new_attn),
+            "x0": x0[:, 0] if x0.ndim == 3 else x0,
+        }
+        x = rms_norm(x, params["final_norm"])
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            params["lm_head"].astype(x.dtype))
+        return logits.astype(jnp.float32), new_cache

@@ -1,0 +1,4 @@
+"""Serving: prefill/decode engine + request batching."""
+from .engine import BatchingQueue, Engine, Request, ServeConfig
+
+__all__ = ["Engine", "ServeConfig", "BatchingQueue", "Request"]

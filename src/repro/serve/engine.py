@@ -1,0 +1,126 @@
+"""Serving engine: batched prefill + decode with KV/recurrent caches.
+
+One engine drives every family in the zoo — attention models carry KV
+caches (MLA: compressed latents; zamba2: ring buffers + SSM states; rwkv6:
+O(1) recurrent state).  The jitted ``prefill`` and ``decode_step``
+functions are the same entry points the multi-pod dry-run lowers, so what
+serves here is exactly what was proven to shard.
+
+Request batching: ``generate`` takes equal-length prompt batches (the
+benchmark/test regime).  ``BatchingQueue`` provides the production front:
+requests accumulate until ``max_batch`` or ``max_wait_s`` and are padded to
+a shared length with a validity mask (continuous batching — slot reuse on
+completion — is scoped in DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 512
+    temperature: float = 0.0        # 0 => greedy
+    eos_id: int | None = None
+
+
+class Engine:
+    def __init__(self, model, params, cfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self._prefill = jax.jit(
+            lambda p, toks, pos: model.prefill(p, toks, pos, cfg.max_len))
+        self._decode = jax.jit(
+            lambda p, cache, toks, pos: model.decode_step(
+                p, cache, toks, pos),
+            donate_argnums=(1,))
+
+    def _sample(self, logits: Array, key: Array) -> Array:
+        """logits (B, 1, V) or (B, 1, C, V) -> next tokens (B, 1[, C])."""
+        if self.cfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.cfg.temperature, axis=-1).astype(jnp.int32)
+
+    def generate(self, prompts: Array, n_tokens: int, *,
+                 seed: int = 0) -> tuple[Array, dict]:
+        """prompts (B, S[, C]) -> (generated (B, n_tokens[, C]), stats)."""
+        B, S = prompts.shape[:2]
+        t0 = time.time()
+        pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        logits, cache = self._prefill(self.params, prompts, pos)
+        jax.block_until_ready(logits)
+        t_prefill = time.time() - t0
+
+        key = jax.random.PRNGKey(seed)
+        tok = self._sample(logits, key)
+        out = [tok]
+        t0 = time.time()
+        for i in range(n_tokens - 1):
+            key, sub = jax.random.split(key)
+            p = jnp.full((B, 1), S + i, jnp.int32)
+            logits, cache = self._decode(self.params, cache, tok, p)
+            tok = self._sample(logits, sub)
+            out.append(tok)
+        jax.block_until_ready(tok)
+        t_decode = time.time() - t0
+        gen = jnp.concatenate(out, axis=1)
+        stats = dict(
+            prefill_s=t_prefill, decode_s=t_decode,
+            tokens=B * n_tokens,
+            decode_tok_per_s=B * max(n_tokens - 1, 1) / max(t_decode, 1e-9))
+        return gen, stats
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray
+    max_new: int
+    arrived: float = dataclasses.field(default_factory=time.time)
+
+
+class BatchingQueue:
+    """Request accumulator: flushes when full or stale."""
+
+    def __init__(self, max_batch: int = 8, max_wait_s: float = 0.05):
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self.pending: list[Request] = []
+
+    def add(self, req: Request):
+        self.pending.append(req)
+
+    def ready(self) -> bool:
+        if not self.pending:
+            return False
+        if len(self.pending) >= self.max_batch:
+            return True
+        return (time.time() - self.pending[0].arrived) >= self.max_wait_s
+
+    def take(self) -> list[Request]:
+        batch, self.pending = (self.pending[:self.max_batch],
+                               self.pending[self.max_batch:])
+        return batch
+
+    @staticmethod
+    def pad(batch: list[Request], pad_id: int = 0):
+        """Right-align prompts into (B, S_max) + validity mask."""
+        s_max = max(r.tokens.shape[0] for r in batch)
+        toks = np.full((len(batch), s_max), pad_id, np.int32)
+        mask = np.zeros((len(batch), s_max), bool)
+        for i, r in enumerate(batch):
+            s = r.tokens.shape[0]
+            toks[i, s_max - s:] = r.tokens
+            mask[i, s_max - s:] = True
+        return jnp.asarray(toks), jnp.asarray(mask)

@@ -1,0 +1,4 @@
+"""Distribution: logical-axis rule tables (see rules.py docstring)."""
+from .rules import act_rules, merged_rules, opt_rules, param_rules
+
+__all__ = ["param_rules", "opt_rules", "act_rules", "merged_rules"]

@@ -1,0 +1,82 @@
+"""Logical-axis -> mesh-axis rule tables.
+
+One table serves all 10 architectures because ``ShardCtx`` applies rules
+with divisibility fallbacks per tensor (e.g. "experts" -> "model" only when
+the expert count divides the model axis; otherwise the expert hidden dim
+picks up "model" — grok's 8 experts get tensor parallelism inside each
+expert, deepseek's 64 get expert parallelism, from the same table).
+
+Three tables:
+
+* ``param_rules``    — weights.  ``zero3=True`` additionally shards the
+  d_model ("embed") dims over the data axes (ZeRO-3 / FSDP; grok-314b).
+* ``opt_rules``      — optimizer moments: always ZeRO (sharded over data),
+  regardless of the param posture (ZeRO-1 when params are replicated).
+* ``act_rules``      — activations: batch over (pod, data), sequence over
+  "model" at layer boundaries (Megatron-style sequence parallelism: the
+  model-axis all-reduce of TP decomposes into reduce-scatter + all-gather
+  around the norm), heads/mlp/experts over "model" inside blocks.
+
+The Fig. 14 correspondence (see DESIGN.md): sharding the literal axis over
+"model" and psumming violation counts IS the paper's partial-clause digital
+AND; sharding the clause axis and psumming partial class sums IS the ADC +
+digital adder tree.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+DP_SINGLE = ("data",)
+DP_MULTI = ("pod", "data")
+
+
+def _dp(mesh) -> tuple[str, ...]:
+    return DP_MULTI if "pod" in mesh.shape else DP_SINGLE
+
+
+def param_rules(mesh, *, zero3: bool = False) -> dict[str, Any]:
+    dp = _dp(mesh)
+    return {
+        "vocab": "model",
+        "embed": dp if zero3 else None,
+        "heads": "model",
+        "kv": "model",
+        "head_dim": "model",   # fallback when kv/heads don't divide model
+        "mlp": "model",
+        "experts": "model",
+        "moe_mlp": "model",
+        "layers": None,
+        "batch": dp,
+    }
+
+
+def opt_rules(mesh) -> dict[str, Any]:
+    """Optimizer state: always fully ZeRO-sharded over the data axes."""
+    rules = param_rules(mesh, zero3=True)
+    return rules
+
+
+def act_rules(mesh, *, seq_parallel: bool = True) -> dict[str, Any]:
+    dp = _dp(mesh)
+    return {
+        "batch": dp,
+        "seq": "model" if seq_parallel else None,
+        "heads": "model",
+        "kv": "model",
+        "head_dim": "model",
+        "mlp": "model",
+        "experts": "model",
+        "moe_mlp": "model",
+        "vocab": "model",
+    }
+
+
+def merged_rules(mesh, *, zero3: bool = False,
+                 seq_parallel: bool = True) -> dict[str, Any]:
+    """One table usable for both params and activations (model code paths
+    call ``ctx.constrain`` with activation tags and ``param_shardings``
+    with param tags; the tag sets only overlap on compatible entries)."""
+    rules = act_rules(mesh, seq_parallel=seq_parallel)
+    rules.update({k: v for k, v in param_rules(mesh, zero3=zero3).items()
+                  if k not in rules})
+    return rules

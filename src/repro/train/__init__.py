@@ -1,0 +1,13 @@
+"""Training substrate: optimizer, step, checkpointing, compression, FT."""
+from .checkpoint import CheckpointManager
+from .compression import compressed_grad_allreduce, int8_psum
+from .optimizer import AdamWConfig, TrainState, apply_updates, init_state
+from .runtime import RuntimeConfig, SimulatedFailure, TrainLoop
+from .step import cast_tree, make_train_step
+
+__all__ = [
+    "AdamWConfig", "TrainState", "apply_updates", "init_state",
+    "make_train_step", "cast_tree", "CheckpointManager",
+    "compressed_grad_allreduce", "int8_psum", "RuntimeConfig",
+    "SimulatedFailure", "TrainLoop",
+]

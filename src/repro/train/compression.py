@@ -1,0 +1,91 @@
+"""Gradient compression: int8 ring all-reduce with error feedback.
+
+For data-parallel traffic on slow inter-pod links, gradients are exchanged
+as int8 with a shared per-tensor scale.  The all-reduce is decomposed so
+the WIRE format is int8 in both phases (the accumulation happens locally
+in int32):
+
+    1. shared scale     = pmax(max|v|) / 127
+    2. reduce-scatter   : all_to_all of the int8 shards; each device sums
+                          its shard in int32 and REQUANTIZES to int8
+                          (second scale = pmax of shard maxima)
+    3. all-gather       : int8 shards gathered, dequantized once
+
+Error feedback (Seide et al. / 1-bit SGD lineage): each device carries the
+quantization residual ``e`` and adds it to the next step's gradient, so
+the compression bias cancels over steps instead of accumulating — the
+property test in ``tests/test_compression.py`` checks exactly this.
+
+Wire bytes: 1/4 of f32 (plus two scalar scales), at <1% relative error per
+step on typical gradient distributions.  Used by the shard_map-based DP
+trainer in ``examples/train_lm.py --compress-grads``; the GSPMD paths keep
+XLA's native collectives.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _quantize(v: Array, scale: Array) -> Array:
+    q = jnp.round(v / jnp.maximum(scale, 1e-30))
+    return jnp.clip(q, -127, 127).astype(jnp.int8)
+
+
+def int8_psum(v: Array, axis_name: str) -> Array:
+    """All-reduce ``v`` over ``axis_name`` with int8 wire format.
+
+    Must be called inside shard_map/pmap with ``axis_name`` bound.
+    The leading dimension of the flattened tensor is padded to the axis
+    size for the all_to_all phase.
+    """
+    n = jax.lax.axis_size(axis_name)
+    shape = v.shape
+    flat = v.reshape(-1)
+    pad = (-flat.size) % n
+    flat = jnp.pad(flat, (0, pad))
+
+    # Phase 1: shared input scale.
+    scale1 = jax.lax.pmax(jnp.max(jnp.abs(flat)), axis_name) / 127.0
+    q = _quantize(flat, scale1).reshape(n, -1)
+
+    # Phase 2: reduce-scatter via all_to_all (int8 on the wire).
+    shards = jax.lax.all_to_all(q, axis_name, split_axis=0, concat_axis=0,
+                                tiled=False)            # (n, chunk) int8
+    local_sum = shards.astype(jnp.int32).sum(axis=0)    # my shard, int32
+    local_f = local_sum.astype(jnp.float32) * scale1
+
+    # Phase 3: requantize + all-gather (int8 on the wire).
+    scale2 = jax.lax.pmax(jnp.max(jnp.abs(local_f)), axis_name) / 127.0
+    q2 = _quantize(local_f, scale2)
+    gathered = jax.lax.all_gather(q2, axis_name)        # (n, chunk) int8
+    out = gathered.astype(jnp.float32).reshape(-1) * scale2
+    return out[:flat.size - pad if pad else None][:v.size].reshape(shape)
+
+
+def compressed_grad_allreduce(grads, errors, axis_name: str):
+    """Error-feedback wrapper: returns (summed grads, new error state)."""
+    def one(g, e):
+        v = g.astype(jnp.float32) + e
+        total = int8_psum(v, axis_name)
+        # Residual = what this device meant to send minus what survived
+        # phase-1 quantization (the part it can still correct next step).
+        e_new = v - _roundtrip(v, axis_name)
+        return total, e_new
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(errors)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]))
+
+
+def _roundtrip(v: Array, axis_name: str) -> Array:
+    """This device's contribution as it survives quantization (phase-1
+    quantize/dequantize) — the error-feedback residual reference."""
+    flat = v.reshape(-1)
+    scale1 = jax.lax.pmax(jnp.max(jnp.abs(flat)), axis_name) / 127.0
+    q = _quantize(flat, scale1)
+    return (q.astype(jnp.float32) * scale1).reshape(v.shape)

@@ -1,0 +1,94 @@
+"""AdamW with mixed-precision master weights and dtype-configurable moments.
+
+Implemented from scratch (no optax in this container).  The TrainState
+holds f32 master params plus first/second moments whose dtype is set per
+architecture (bf16 for grok-314b — the only way 3x314B optimizer tensors
+fit one 256-chip v5e pod; see DESIGN.md memory posture table).
+
+Sharding: the launcher places ``state.params`` with the param rule table
+(ZeRO-3 for grok) and the moments with the ZeRO opt table — GSPMD then
+reduce-scatters gradients into the shard and all-gathers updated params,
+i.e. textbook ZeRO-1/3 without hand-written collectives.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    moment_dtype: Any = jnp.float32
+
+    def schedule(self, step: Array) -> Array:
+        """Linear warmup -> constant (cosine handled by the launcher)."""
+        warm = jnp.minimum(step.astype(jnp.float32) / max(self.warmup_steps,
+                                                          1), 1.0)
+        return self.lr * warm
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    step: Array          # () int32
+    params: PyTree       # f32 master
+    m: PyTree            # first moment (moment_dtype)
+    v: PyTree            # second moment (moment_dtype)
+
+
+def init_state(params: PyTree, cfg: AdamWConfig) -> TrainState:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def global_norm(tree: PyTree) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def apply_updates(state: TrainState, grads: PyTree,
+                  cfg: AdamWConfig) -> tuple[TrainState, dict]:
+    """One AdamW step; returns (new state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = cfg.schedule(step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        update = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        p_new = p - lr * (update + cfg.weight_decay * p)
+        return p_new, m32.astype(cfg.moment_dtype), v32.astype(
+            cfg.moment_dtype)
+
+    flat_p, treedef = jax.tree.flatten(state.params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v)
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return (TrainState(step=step, params=new_p, m=new_m, v=new_v),
+            {"grad_norm": gnorm, "lr": lr})

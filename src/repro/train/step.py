@@ -1,0 +1,78 @@
+"""Training step: bf16 compute over f32 master, grad accumulation, ZeRO.
+
+``make_train_step(model, opt_cfg, grad_shardings)`` returns a function
+
+    train_step(state, batch, seed) -> (state, metrics)
+
+* the batch carries a leading gradient-accumulation axis; microbatches are
+  consumed by a ``lax.scan`` so activation memory is bounded by one
+  microbatch regardless of the global batch;
+* master params are f32; each microbatch casts to the model's compute
+  dtype (bf16) INSIDE the grad function, so gradients accumulate in f32
+  with the cast folded into the backward pass;
+* the f32 gradient accumulator is sharding-constrained to the optimizer
+  (ZeRO) layout, so GSPMD reduce-scatters each microbatch's gradients
+  instead of all-reducing them and the accumulator occupies 1/|data| of
+  each parameter — required for grok-314b to fit.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import AdamWConfig, TrainState, apply_updates
+
+Array = jax.Array
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating)
+        else a, tree)
+
+
+def make_train_step(model, opt_cfg: AdamWConfig,
+                    grad_shardings=None) -> Callable:
+    cfg = model.cfg
+
+    def loss_fn(master_params, microbatch):
+        params = cast_tree(master_params, cfg.dtype)
+        loss, metrics = model.loss(params, microbatch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def constrain_grads(grads):
+        if grad_shardings is None:
+            return grads
+        return jax.tree.map(
+            lambda g, s: g if s is None
+            else jax.lax.with_sharding_constraint(g, s),
+            grads, grad_shardings)
+
+    accum_dtype = jnp.dtype(getattr(cfg, "grad_accum_dtype", "float32"))
+
+    def train_step(state: TrainState, batch: dict, seed: Array):
+        accum = jax.tree.leaves(batch)[0].shape[0]
+
+        def micro(carry, microbatch):
+            g_acc, l_acc = carry
+            (loss, _), grads = grad_fn(state.params, microbatch)
+            grads = constrain_grads(grads)
+            g_acc = jax.tree.map(
+                lambda a, g: a + g.astype(accum_dtype), g_acc, grads)
+            return (g_acc, l_acc + loss), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype),
+                          state.params)
+        g0 = constrain_grads(g0)
+        (grads, loss_sum), _ = jax.lax.scan(micro, (g0, jnp.zeros(())),
+                                            batch)
+        grads = jax.tree.map(lambda g: g / accum, grads)
+        new_state, opt_metrics = apply_updates(state, grads, opt_cfg)
+        metrics = {"loss": loss_sum / accum, **opt_metrics}
+        return new_state, metrics
+
+    return train_step

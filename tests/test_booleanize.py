@@ -1,0 +1,38 @@
+"""Booleanization properties (the paper's data-preparation step)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import booleanize, n_literals, with_negations
+from repro.core.booleanize import thermometer_thresholds, threshold_bits
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), F=st.integers(1, 30),
+       bits=st.integers(1, 5))
+def test_negation_pairing(seed, F, bits):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.random((7, F)), jnp.float32)
+    lits = booleanize(x, n_bits=bits)
+    assert lits.shape == (7, n_literals(F, bits))
+    half = lits.shape[-1] // 2
+    np.testing.assert_array_equal(np.asarray(lits[..., half:]),
+                                  ~np.asarray(lits[..., :half]))
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), bits=st.integers(1, 6))
+def test_thermometer_monotone(seed, bits):
+    """More bits set for larger feature values (thermometer code)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(np.sort(rng.random(16)), jnp.float32)[None, :]
+    t = thermometer_thresholds(bits)
+    b = np.asarray(threshold_bits(x, t)).reshape(16, bits)
+    counts = b.sum(-1)
+    assert (np.diff(counts) >= 0).all()
+
+
+def test_thresholds_strictly_inside():
+    t = np.asarray(thermometer_thresholds(5, 0.0, 1.0))
+    assert (t > 0).all() and (t < 1).all()
+    assert (np.diff(t) > 0).all()

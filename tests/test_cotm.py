@@ -1,0 +1,77 @@
+"""CoTM inference vs the literal numpy oracle + algebraic properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CoTMConfig, CoTMParams, class_scores, clause_outputs,
+                        include_mask, predict, to_unipolar, violation_counts)
+from repro.core.ref import (class_scores_ref, clause_outputs_ref,
+                            predict_ref, violation_counts_ref)
+
+
+def _random_model(rng, K=64, n=32, m=4, density=0.1):
+    cfg = CoTMConfig(n_literals=K, n_clauses=n, n_classes=m)
+    ta = rng.integers(1, 2 * cfg.n_states + 1, (K, n)).astype(np.int32)
+    # sparsify includes like a trained model (paper Fig. 10: 2.3% include)
+    mask = rng.random((K, n)) < density
+    ta = np.where(mask, ta, np.minimum(ta, cfg.n_states))
+    w = rng.integers(-40, 40, (m, n)).astype(np.int32)
+    return cfg, CoTMParams(ta_state=jnp.asarray(ta), weights=jnp.asarray(w))
+
+
+def test_inference_matches_oracle(rng):
+    cfg, params = _random_model(rng)
+    lits = rng.random((16, cfg.n_literals)) < 0.5
+    inc = np.asarray(include_mask(params.ta_state, cfg.n_states))
+    got_c = np.asarray(clause_outputs(jnp.asarray(lits), jnp.asarray(inc)))
+    want_c = clause_outputs_ref(lits, inc)
+    np.testing.assert_array_equal(got_c, want_c)
+
+    got_v = np.asarray(violation_counts(jnp.asarray(lits), jnp.asarray(inc)))
+    np.testing.assert_array_equal(got_v, violation_counts_ref(lits, inc))
+
+    got_p = np.asarray(predict(params, jnp.asarray(lits), cfg))
+    want_p = predict_ref(lits, inc, np.asarray(params.weights))
+    np.testing.assert_array_equal(got_p, want_p)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), K=st.integers(2, 100),
+       n=st.integers(1, 60), m=st.integers(2, 8),
+       density=st.floats(0.0, 0.6))
+def test_inference_matches_oracle_hypothesis(seed, K, n, m, density):
+    rng = np.random.default_rng(seed)
+    cfg, params = _random_model(rng, K, n, m, density)
+    lits = rng.random((4, K)) < rng.random()
+    inc = np.asarray(include_mask(params.ta_state, cfg.n_states))
+    got = np.asarray(clause_outputs(jnp.asarray(lits), jnp.asarray(inc)))
+    np.testing.assert_array_equal(got, clause_outputs_ref(lits, inc))
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_unipolar_shift_preserves_argmax(seed):
+    """The paper's W' = W + |W_min| transform (Fig. 6) must preserve the
+    classification decision for any clause pattern."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.integers(-100, 100, (6, 40)), jnp.int32)
+    clauses = jnp.asarray(rng.random((8, 40)) < 0.4)
+    w_uni, shift = to_unipolar(w)
+    assert int(jnp.min(w_uni)) >= 0
+    s_signed = class_scores(clauses, w)
+    s_uni = class_scores(clauses, w_uni)
+    # Shift adds the same constant (shift * #fired) to every class.
+    np.testing.assert_array_equal(
+        np.argmax(np.asarray(s_signed), -1),
+        np.argmax(np.asarray(s_uni), -1))
+
+
+def test_empty_clause_semantics(rng):
+    """Empty clauses (no includes) vote 1 in training, 0 at inference."""
+    K, n = 8, 4
+    inc = jnp.zeros((K, n), bool)
+    lits = jnp.asarray(rng.random((5, K)) < 0.5)
+    assert not np.asarray(clause_outputs(lits, inc, training=False)).any()
+    assert np.asarray(clause_outputs(lits, inc, training=True)).all()

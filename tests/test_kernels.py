@@ -1,0 +1,128 @@
+"""Pallas kernel sweeps: every kernel vs its pure-jnp oracle.
+
+Kernels run in interpret mode on CPU (the kernel body executes in Python),
+so these are exact-semantics checks of the TPU kernels' block/grid logic,
+including the padding paths in ``ops``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+SHAPES = [
+    # (B, K, N, M) — mix of aligned and ragged
+    (1, 128, 128, 10),
+    (8, 300, 77, 3),
+    (37, 512, 500, 10),       # paper's clause/class dims (cropped)
+    (128, 1568, 500, 10),     # paper MNIST shape
+    (5, 130, 257, 17),
+]
+
+
+def _inputs(B, K, N, M, seed=0, density=0.05):
+    rng = np.random.default_rng(seed)
+    lit = rng.random((B, K)) < 0.5
+    inc = rng.random((K, N)) < density
+    w = rng.integers(-50, 420, (N, M)).astype(np.int32)
+    return jnp.asarray(lit), jnp.asarray(inc), jnp.asarray(w)
+
+
+@pytest.mark.parametrize("B,K,N,M", SHAPES)
+def test_clause_eval_matches_oracle(B, K, N, M):
+    lit, inc, _ = _inputs(B, K, N, M)
+    ne = inc.any(axis=0)
+    got = ops.clause_eval(lit, inc, ne)
+    want = ref.clause_eval_ref(lit, inc, ne)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("B,K,N,M", SHAPES)
+def test_clause_viol_matches_oracle(B, K, N, M):
+    lit, inc, _ = _inputs(B, K, N, M)
+    got = ops.clause_eval(lit, inc, mode="viol")
+    want = ref.clause_viol_ref(lit, inc)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("B,K,N,M", SHAPES)
+def test_class_sum_matches_oracle(B, K, N, M):
+    lit, inc, w = _inputs(B, K, N, M)
+    clauses = ref.clause_eval_ref(lit, inc)
+    got = ops.class_sum(clauses, w)
+    want = ref.class_sum_ref(clauses, w)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("B,K,N,M", SHAPES)
+def test_fused_cotm_matches_oracle(B, K, N, M):
+    lit, inc, w = _inputs(B, K, N, M)
+    got = ops.fused_cotm(lit, inc, w)
+    want = ref.fused_cotm_ref(lit, inc, w, inc.any(0))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("B,K,N,M", SHAPES[:3])
+def test_crossbar_mvm_matches_oracle(B, K, N, M):
+    rng = np.random.default_rng(1)
+    drive = jnp.asarray(rng.random((B, K)), jnp.float32)
+    g = jnp.asarray(10.0 ** rng.uniform(-9, -5.6, (K, N)), jnp.float32)
+    got = ops.crossbar_mvm(drive, g)
+    want = ref.crossbar_mvm_ref(drive, g)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    B=st.integers(1, 20), K=st.integers(1, 300), N=st.integers(1, 200),
+    M=st.integers(1, 16), density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_fused_cotm_hypothesis(B, K, N, M, density, seed):
+    rng = np.random.default_rng(seed)
+    lit = jnp.asarray(rng.random((B, K)) < 0.5)
+    inc = jnp.asarray(rng.random((K, N)) < density)
+    w = jnp.asarray(rng.integers(-128, 421, (N, M)).astype(np.int32))
+    got = ops.fused_cotm(lit, inc, w)
+    want = ref.fused_cotm_ref(lit, inc, w, inc.any(0))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    B=st.integers(1, 16), K=st.integers(1, 256), N=st.integers(1, 160),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_clause_eval_hypothesis(B, K, N, seed):
+    rng = np.random.default_rng(seed)
+    lit = jnp.asarray(rng.random((B, K)) < rng.random())
+    inc = jnp.asarray(rng.random((K, N)) < rng.random())
+    got = ops.clause_eval(lit, inc)
+    want = ref.clause_eval_ref(lit, inc, inc.any(0))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_int8_dtype_inputs():
+    """Kernels accept int8/bool/int32 literal encodings identically."""
+    lit, inc, w = _inputs(16, 256, 128, 10)
+    a = ops.fused_cotm(lit, inc, w)
+    b = ops.fused_cotm(lit.astype(jnp.int8), inc.astype(jnp.int8), w)
+    c = ops.fused_cotm(lit.astype(jnp.int32), inc.astype(jnp.int32), w)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_block_size_invariance():
+    """Different BlockSpec tilings must not change results."""
+    lit, inc, w = _inputs(64, 640, 384, 10)
+    base = ops.fused_cotm(lit, inc, w)
+    for bb, bn in [(128, 128), (256, 384)]:
+        got = ops.fused_cotm(lit, inc, w, block_b=bb, block_n=bn)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+    base2 = ops.clause_eval(lit, inc)
+    for bk in [128, 256, 640]:
+        got = ops.clause_eval(lit, inc, block_k=bk)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(base2))

@@ -1,0 +1,99 @@
+"""Per-architecture smoke tests: reduced configs, forward/train/decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, cells, get_config
+from repro.models import build
+from repro.train import AdamWConfig, init_state, make_train_step
+
+
+def _batch(cfg, B=2, S=64, key=0):
+    k = jax.random.key(key)
+    if cfg.modality == "audio":
+        tokens = jax.random.randint(k, (B, S, cfg.n_codebooks), 0,
+                                    cfg.vocab)
+    else:
+        tokens = jax.random.randint(k, (B, S), 0, cfg.vocab)
+    batch = {"tokens": tokens}
+    if cfg.rope_style == "mrope":
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(S)[None, None, :], (3, B, S))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_loss(arch):
+    cfg = get_config(arch).smoke()
+    model = build(cfg)
+    params = model.init(jax.random.key(0))
+    loss, metrics = model.loss(params, _batch(cfg))
+    assert jnp.isfinite(loss), arch
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step(arch):
+    cfg = get_config(arch).smoke()
+    model = build(cfg)
+    params = model.init(jax.random.key(0))
+    B = 2
+    cache = model.init_cache(B, max_len=32)
+    tok = (jnp.zeros((B, 1, cfg.n_codebooks), jnp.int32)
+           if cfg.modality == "audio" else jnp.zeros((B, 1), jnp.int32))
+    pos = (jnp.zeros((3, B, 1), jnp.int32) if cfg.rope_style == "mrope"
+           else jnp.zeros((B, 1), jnp.int32))
+    logits, cache2 = model.decode_step(params, cache, tok, pos)
+    assert jnp.isfinite(logits).all(), arch
+    assert logits.shape[:2] == (B, 1)
+    # cache structure preserved
+    assert (jax.tree_util.tree_structure(cache)
+            == jax.tree_util.tree_structure(cache2))
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "deepseek-v2-lite-16b",
+                                  "rwkv6-7b", "zamba2-7b"])
+def test_train_step_reduces_loss(arch):
+    """A few optimizer steps on repeated data must reduce the loss."""
+    cfg = get_config(arch).smoke()
+    model = build(cfg)
+    params = model.init(jax.random.key(0))
+    opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=1, weight_decay=0.0)
+    state = init_state(params, opt_cfg)
+    step = jax.jit(make_train_step(model, opt_cfg))
+    b = _batch(cfg, B=2, S=32)
+    batch = jax.tree.map(lambda a: a[None], b)   # accum axis of 1
+    losses = []
+    for i in range(8):
+        state, metrics = step(state, batch, i * 0 + 1)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.1, losses
+
+
+def test_param_counts_match_published():
+    expected = {
+        "grok-1-314b": (300e9, 330e9),
+        "deepseek-v2-lite-16b": (14e9, 17e9),
+        "qwen2-vl-2b": (1.4e9, 2.3e9),     # backbone only (frontend stub)
+        "musicgen-large": (2.0e9, 3.5e9),  # backbone only
+        "llama3-8b": (7.5e9, 8.5e9),
+        "qwen3-8b": (7.5e9, 8.7e9),
+        "gemma-7b": (8.0e9, 9.0e9),
+        "starcoder2-3b": (2.8e9, 3.5e9),
+        "rwkv6-7b": (7.0e9, 8.2e9),
+        "zamba2-7b": (6.3e9, 7.7e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = build(get_config(arch)).n_params()
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_cell_assignment():
+    """40 assigned cells: 32 runnable + 8 long_500k skips."""
+    flat = [(a, s, ok) for a in ARCH_IDS for s, ok in cells(a).items()]
+    assert len(flat) == 40
+    assert sum(ok for _, _, ok in flat) == 34 - 2  # 32 runnable
+    skips = [(a, s) for a, s, ok in flat if not ok]
+    assert all(s == "long_500k" for _, s in skips)
+    assert len(skips) == 8

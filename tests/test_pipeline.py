@@ -1,0 +1,72 @@
+"""End-to-end IMPACT system: accuracy preservation + Fig. 14 tiling
+invariance (the paper's multi-crossbar scaling scheme)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CoTMConfig, predict, train_epochs
+from repro.data.synthetic import prototype
+from repro.impact import IMPACTConfig, build_system
+
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg = CoTMConfig(n_literals=128, n_clauses=64, n_classes=4,
+                     n_states=64, threshold=16, specificity=4.0)
+    x, y = prototype(768, n_classes=4, n_features=64, flip=0.05)
+    lits = jnp.asarray(np.concatenate([x, 1 - x], -1).astype(bool))
+    labels = jnp.asarray(y)
+    params = train_epochs(cfg.init(jax.random.key(0)), lits, labels,
+                          jax.random.key(1), cfg, epochs=8, batch_size=64)
+    sw_acc = float((predict(params, lits, cfg) == labels).mean())
+    return cfg, params, lits, labels, sw_acc
+
+
+def test_software_baseline_accuracy(trained):
+    *_, sw_acc = trained
+    assert sw_acc > 0.9, sw_acc
+
+
+def test_impact_preserves_software_accuracy(trained):
+    """Hardware mapping under full C2C/D2D variability must track the
+    software model (the paper's central §4 claim: 96.31% hw vs 96.3% sw)."""
+    cfg, params, lits, labels, sw_acc = trained
+    system = build_system(params, cfg, jax.random.key(2))
+    hw_acc = float((system.predict(lits) == labels).mean())
+    assert hw_acc >= sw_acc - 0.03, (sw_acc, hw_acc)
+
+
+def test_fig14_tile_split_invariance(trained):
+    """Splitting literals/clauses across tiles (partial clauses combined
+    by digital AND; partial class sums summed after ADC) must give
+    identical predictions with variability disabled."""
+    cfg, params, lits, labels, _ = trained
+    base_cfg = IMPACTConfig(variability=False, finetune=False,
+                            max_tile_rows=2048, max_tile_cols=512,
+                            max_class_rows=2048)
+    split_cfg = IMPACTConfig(variability=False, finetune=False,
+                             max_tile_rows=32, max_tile_cols=16,
+                             max_class_rows=16)
+    sys_one = build_system(params, cfg, jax.random.key(3), base_cfg)
+    sys_many = build_system(params, cfg, jax.random.key(3), split_cfg)
+    p1 = np.asarray(sys_one.predict(lits[:128]))
+    p2 = np.asarray(sys_many.predict(lits[:128]))
+    np.testing.assert_array_equal(p1, p2)
+    assert sys_many.clause_g.shape[0] > 1     # literals actually split
+    assert sys_many.class_g.shape[0] > 1      # clauses actually split
+
+
+def test_energy_report(trained):
+    cfg, params, lits, labels, _ = trained
+    system = build_system(params, cfg, jax.random.key(4))
+    preds, report = system.infer_with_report(lits[:64])
+    assert report.read_energy_j > 0
+    assert report.energy_per_datapoint_j > 0
+    assert report.gops > 0
+    assert report.tops_per_w > 0
+    # energy per datapoint should be in the paper's pJ regime (loose).
+    e_pj = report.energy_per_datapoint_j * 1e12
+    assert 0.1 < e_pj < 1e4, e_pj

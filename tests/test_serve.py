@@ -1,0 +1,96 @@
+"""Serving: prefill+decode must agree with the full forward pass; engine
+and batching driver behave."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import build
+from repro.serve import BatchingQueue, Engine, Request, ServeConfig
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_matches_forward(arch):
+    cfg = get_config(arch).smoke()
+    model = build(cfg)
+    params = model.init(jax.random.key(0))
+    B, S = 2, 33
+    if cfg.modality == "audio":
+        toks = jax.random.randint(jax.random.key(2), (B, S,
+                                                      cfg.n_codebooks),
+                                  0, cfg.vocab)
+    else:
+        toks = jax.random.randint(jax.random.key(2), (B, S), 0, cfg.vocab)
+    pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    if cfg.rope_style == "mrope":
+        pos = jnp.broadcast_to(jnp.arange(S)[None, None, :], (3, B, S))
+    logits_full, _ = model.forward(params, toks, pos)
+
+    lp, cache = model.prefill(params, toks[:, :S - 1], pos[..., :S - 1], 96)
+    scale = float(jnp.abs(logits_full[:, S - 2]).max()) + 1e-6
+    rel_prefill = float(jnp.abs(lp[:, 0]
+                                - logits_full[:, S - 2]).max()) / scale
+    # MoE capacity dropping depends on sequence length, so prefill(S-1)
+    # can legitimately route differently than forward(S).
+    tol = 0.35 if cfg.moe is not None else 0.05
+    assert rel_prefill < tol, (arch, rel_prefill)
+
+    dpos = (jnp.full((3, B, 1), S - 1, jnp.int32)
+            if cfg.rope_style == "mrope"
+            else jnp.full((B, 1), S - 1, jnp.int32))
+    ld, _ = model.decode_step(params, cache, toks[:, S - 1:S], dpos)
+    scale = float(jnp.abs(logits_full[:, S - 1]).max()) + 1e-6
+    rel = float(jnp.abs(ld[:, 0] - logits_full[:, S - 1]).max()) / scale
+    if cfg.n_layers * (3 if cfg.hybrid_attn_every else 1) > 8:
+        # Deep stacks (zamba2: 81 sequential mamba layers) amplify bf16
+        # op-order differences between the fused-forward and step-decode
+        # paths; the serving-relevant property is the decoded
+        # distribution's top-1 (exact agreement holds in f32 — verified:
+        # rel 1e-3 with dtype=float32).
+        np.testing.assert_array_equal(
+            np.asarray(jnp.argmax(ld[:, 0], -1)),
+            np.asarray(jnp.argmax(logits_full[:, S - 1], -1)))
+        assert rel < 0.5, (arch, rel)
+    else:
+        assert rel < tol + 0.08, (arch, rel)
+
+
+def test_engine_generate_greedy_deterministic():
+    cfg = get_config("qwen3-8b").smoke()
+    model = build(cfg)
+    params = model.init(jax.random.key(0))
+    eng = Engine(model, params, ServeConfig(max_len=64, temperature=0.0))
+    prompts = jax.random.randint(jax.random.key(1), (2, 16), 0, cfg.vocab)
+    g1, s1 = eng.generate(prompts, 6)
+    g2, _ = eng.generate(prompts, 6)
+    np.testing.assert_array_equal(np.asarray(g1), np.asarray(g2))
+    assert g1.shape == (2, 6)
+    assert s1["decode_tok_per_s"] > 0
+
+
+def test_engine_long_decode_recurrent():
+    """RWKV6 decodes with O(1) state — generate far past the prompt."""
+    cfg = get_config("rwkv6-7b").smoke()
+    model = build(cfg)
+    params = model.init(jax.random.key(0))
+    eng = Engine(model, params, ServeConfig(max_len=8, temperature=0.7))
+    prompts = jax.random.randint(jax.random.key(1), (2, 8), 0, cfg.vocab)
+    gen, _ = eng.generate(prompts, 24, seed=3)   # 3x the "max_len"
+    assert gen.shape == (2, 24)
+    assert (np.asarray(gen) >= 0).all()
+
+
+def test_batching_queue():
+    q = BatchingQueue(max_batch=2, max_wait_s=10.0)
+    assert not q.ready()
+    q.add(Request(1, np.arange(5, dtype=np.int32), 4))
+    assert not q.ready()                      # not full, not stale
+    q.add(Request(2, np.arange(3, dtype=np.int32), 4))
+    assert q.ready()                          # full
+    batch = q.take()
+    toks, mask = BatchingQueue.pad(batch)
+    assert toks.shape == (2, 5)
+    assert bool(mask[0].all()) and int(mask[1].sum()) == 3
+    # right-aligned padding
+    np.testing.assert_array_equal(np.asarray(toks[1, 2:]), np.arange(3))

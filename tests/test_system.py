@@ -1,0 +1,59 @@
+"""End-to-end system test: the paper's full pipeline at MNIST-like scale.
+
+Train CoTM on synthetic digit glyphs -> map onto Y-Flash crossbars with
+full variability -> verify hardware inference tracks software accuracy and
+the Pallas kernels reproduce the digital-twin decisions.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CoTMConfig, booleanize, include_mask, predict,
+                        to_unipolar, train_epochs)
+from repro.data.synthetic import digits
+from repro.impact import build_system
+from repro.kernels import ops
+
+
+@pytest.fixture(scope="module")
+def mnist_like():
+    # Paper dims (K=1568, n=500, m=10); 7 epochs on 6k synthetic glyphs
+    # instead of the paper's 25 on 60k MNIST (test-time budget) — the
+    # full-budget run lives in benchmarks/table5 (see artifacts).
+    cfg = CoTMConfig(n_literals=1568, n_clauses=500, n_classes=10,
+                     n_states=128, threshold=96, specificity=8.0)
+    x_tr, y_tr = digits(6000, seed=1, jitter=2)
+    x_te, y_te = digits(500, seed=2, jitter=2)
+    lit_tr = booleanize(jnp.asarray(x_tr))
+    lit_te = booleanize(jnp.asarray(x_te))
+    params = train_epochs(cfg.init(jax.random.key(0)), lit_tr,
+                          jnp.asarray(y_tr), jax.random.key(1), cfg,
+                          epochs=7, batch_size=32)
+    return cfg, params, lit_te, jnp.asarray(y_te)
+
+
+@pytest.mark.slow
+def test_software_accuracy(mnist_like):
+    cfg, params, lits, labels = mnist_like
+    acc = float((predict(params, lits, cfg) == labels).mean())
+    assert acc > 0.8, acc    # paper: 96.3% at 500 clauses / 25 epochs
+
+
+@pytest.mark.slow
+def test_hardware_tracks_software(mnist_like):
+    cfg, params, lits, labels = mnist_like
+    sw_acc = float((predict(params, lits, cfg) == labels).mean())
+    system = build_system(params, cfg, jax.random.key(7))
+    hw_acc = float((system.predict(lits) == labels).mean())
+    assert hw_acc >= sw_acc - 0.03, (sw_acc, hw_acc)
+
+
+@pytest.mark.slow
+def test_pallas_kernels_match_software_decisions(mnist_like):
+    cfg, params, lits, labels = mnist_like
+    inc = include_mask(params.ta_state, cfg.n_states)
+    scores = ops.fused_cotm(lits[:128], inc, params.weights.T)
+    sw = predict(params, lits[:128], cfg)
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(scores, -1)),
+                                  np.asarray(sw))

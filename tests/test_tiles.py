@@ -1,0 +1,92 @@
+"""Crossbar tile encoding fidelity (paper Figs. 9, 11-13)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CoTMConfig, to_unipolar
+from repro.core.ref import clause_outputs_ref
+from repro.impact import yflash
+from repro.impact.tiles import (ClassTile, ClauseTile, encode_class_tile,
+                                encode_clause_tile, weight_targets)
+
+
+def test_clause_tile_reproduces_software_clauses(rng):
+    K, n, B = 128, 64, 32
+    include = jnp.asarray(rng.random((K, n)) < 0.05)
+    tile, stats = encode_clause_tile(include, jax.random.key(0))
+    lits = jnp.asarray(rng.random((B, K)) < 0.5)
+    got = np.asarray(tile.clauses(lits))
+    want = clause_outputs_ref(np.asarray(lits), np.asarray(include))
+    assert (got == want).mean() == 1.0
+
+
+def test_clause_tile_worst_case_margin(rng):
+    """Paper Fig. 5c: 1024 excluded cells driven at V_R must NOT trip the
+    CSA; one included cell driven must trip it."""
+    K = 2048
+    include = jnp.zeros((K, 1), bool)
+    tile, _ = encode_clause_tile(include, jax.random.key(1))
+    lits = jnp.concatenate([jnp.zeros((1, K // 2), bool),
+                            jnp.ones((1, K // 2), bool)], axis=1)
+    current = float(tile.currents(lits)[0, 0])
+    assert current < yflash.I_CSA_THRESHOLD, current  # no false trip
+
+    include2 = jnp.zeros((K, 1), bool).at[0, 0].set(True)
+    tile2, _ = encode_clause_tile(include2, jax.random.key(2))
+    lits2 = jnp.zeros((1, K), bool)          # literal 0 everywhere
+    current2 = float(tile2.currents(lits2)[0, 0])
+    assert current2 > yflash.I_CSA_THRESHOLD, current2
+
+
+def test_weight_targets_monotone():
+    w = jnp.arange(0, 420)
+    t = np.asarray(weight_targets(w, 419))
+    assert (np.diff(t) > 0).all()
+    assert t.min() >= yflash.G_RANGE_LO * 0.999
+    assert t.max() <= yflash.G_RANGE_HI * 1.001
+
+
+def test_class_tile_preserves_argmax(rng):
+    """Analog weight mapping must keep the winning class (Fig. 13:
+    96.2% accuracy after pre-tune alone)."""
+    n, m, B = 128, 10, 64
+    w = jnp.asarray(rng.integers(-40, 40, (m, n)), jnp.int32)
+    w_uni, _ = to_unipolar(w)
+    tile, stats = encode_class_tile(w_uni.T, jax.random.key(3))
+    clauses = jnp.asarray(rng.random((B, n)) < 0.3)
+    got = np.asarray(tile.predict(clauses))
+    want = np.argmax(np.asarray(clauses, np.int64)
+                     @ np.asarray(w_uni.T, np.int64), -1)
+    agreement = (got == want).mean()
+    assert agreement >= 0.9, agreement
+
+
+def test_finetune_improves_mapping(rng):
+    """Fig. 13b: fine-tuning reduces conductance error vs target."""
+    n, m = 64, 10
+    w = jnp.asarray(rng.integers(0, 300, (n, m)), jnp.int32)
+    target = np.asarray(weight_targets(w, int(w.max())))
+    t_pre, _ = encode_class_tile(w, jax.random.key(4), finetune=False)
+    t_fine, _ = encode_class_tile(w, jax.random.key(4), finetune=True)
+    err_pre = np.abs(np.asarray(t_pre.g) - target).mean()
+    err_fine = np.abs(np.asarray(t_fine.g) - target).mean()
+    assert err_fine <= err_pre * 1.05, (err_pre, err_fine)
+
+
+def test_adaptive_controller_beats_two_phase(rng):
+    """Beyond paper: the width-selecting closed-loop programmer reaches a
+    tighter mapping with fewer pulses than the fixed two-phase schedule."""
+    n, m = 64, 10
+    w = jnp.asarray(rng.integers(0, 300, (n, m)), jnp.int32)
+    target = np.asarray(weight_targets(w, int(w.max())))
+    t_two, s_two = encode_class_tile(w, jax.random.key(5), finetune=True)
+    t_ad, s_ad = encode_class_tile(w, jax.random.key(5), adaptive=True)
+    err_two = np.abs(np.asarray(t_two.g) - target).mean()
+    err_ad = np.abs(np.asarray(t_ad.g) - target).mean()
+    pulses_two = float((s_two["pretune_prog"] + s_two["pretune_erase"]
+                        + s_two["finetune_prog"]
+                        + s_two["finetune_erase"]).mean())
+    pulses_ad = float((s_ad["pretune_prog"] + s_ad["pretune_erase"]).mean())
+    assert err_ad <= err_two * 1.1, (err_two, err_ad)
+    assert pulses_ad <= pulses_two, (pulses_two, pulses_ad)

@@ -1,0 +1,64 @@
+"""CoTM training: invariants + learnability."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CoTMConfig, CoTMParams, predict, train_epochs,
+                        train_step_batch, train_step_sequential)
+from repro.data.synthetic import prototype
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_ta_states_stay_in_bounds(seed):
+    cfg = CoTMConfig(n_literals=24, n_clauses=16, n_classes=3, n_states=8)
+    key = jax.random.key(seed)
+    params = cfg.init(key)
+    rng = np.random.default_rng(seed)
+    lits = jnp.asarray(rng.random((32, 24)) < 0.5)
+    labels = jnp.asarray(rng.integers(0, 3, 32), jnp.int32)
+    for i in range(5):
+        params = train_step_batch(params, lits, labels,
+                                  jax.random.fold_in(key, i), cfg)
+    ta = np.asarray(params.ta_state)
+    assert ta.min() >= 1 and ta.max() <= 2 * cfg.n_states
+
+
+def _learn(step_fn, seed=0, epochs=12):
+    cfg = CoTMConfig(n_literals=64, n_clauses=40, n_classes=4,
+                     n_states=64, threshold=16, specificity=4.0)
+    x, y = prototype(512, n_classes=4, n_features=32, flip=0.05, seed=seed)
+    lits = jnp.asarray(np.concatenate([x, 1 - x], -1).astype(bool))
+    labels = jnp.asarray(y)
+    params = cfg.init(jax.random.key(seed))
+    key = jax.random.key(seed + 1)
+    for ep in range(epochs):
+        for b in range(0, 512, 64):
+            key, k = jax.random.split(key)
+            params = step_fn(params, lits[b:b + 64], labels[b:b + 64],
+                             k, cfg)
+    acc = float((predict(params, lits, cfg) == labels).mean())
+    return acc
+
+
+def test_batch_training_learns():
+    assert _learn(train_step_batch) > 0.9
+
+
+@pytest.mark.slow
+def test_sequential_training_learns():
+    assert _learn(train_step_sequential, epochs=4) > 0.9
+
+
+def test_train_epochs_api():
+    cfg = CoTMConfig(n_literals=32, n_clauses=20, n_classes=3,
+                     n_states=32, threshold=8)
+    x, y = prototype(192, n_classes=3, n_features=16, flip=0.05)
+    lits = jnp.asarray(np.concatenate([x, 1 - x], -1).astype(bool))
+    params = train_epochs(cfg.init(jax.random.key(0)), lits,
+                          jnp.asarray(y), jax.random.key(1), cfg,
+                          epochs=6, batch_size=32)
+    acc = float((predict(params, lits, cfg) == jnp.asarray(y)).mean())
+    assert acc > 0.85
