@@ -1,0 +1,82 @@
+"""IMPACT serving throughput: einsum-vs-Pallas analog inference sweep.
+
+Measures ``IMPACTSystem.predict`` samples/s at the paper's MNIST dims
+(K=1568, n=500, m=10) across batch sizes, for both ``impl="xla"`` (the
+einsum oracle) and ``impl="pallas"`` (the fused crossbar kernel —
+interpret mode on CPU, so CPU numbers gauge correctness plumbing and
+XLA-vs-kernel dispatch overhead rather than TPU speed), plus the batched
+``IMPACTEngine`` front end to expose queueing + padding overhead.
+
+CSV rows:  impact_throughput/<impl>_b<B>, us_per_batch, samples_per_s
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit
+
+from repro.core import CoTMConfig
+from repro.impact import IMPACTConfig, build_system
+from repro.serve import IMPACTEngine
+
+BATCH_SIZES = (32, 128, 512)
+REPEATS = 3
+
+
+def _random_cotm(key, K=1568, n=500, m=10, n_states=128, density=0.05):
+    """Random (untrained) CoTM at paper dims — throughput does not depend
+    on training quality, and this keeps the benchmark CPU-budget friendly."""
+    cfg = CoTMConfig(n_literals=K, n_clauses=n, n_classes=m,
+                     n_states=n_states)
+    k1, k2 = jax.random.split(key)
+    ta = jnp.where(jax.random.bernoulli(k1, density, (K, n)),
+                   n_states + 1, n_states).astype(jnp.int32)
+    w = jax.random.randint(k2, (m, n), -40, 40).astype(jnp.int32)
+    params = cfg.init(key)
+    params = type(params)(ta_state=ta, weights=w)
+    return cfg, params
+
+
+def _time_predict(system, lits, impl: str) -> float:
+    preds = system.predict(lits, impl=impl)          # compile + warm cache
+    jax.block_until_ready(preds)
+    t0 = time.time()
+    for _ in range(REPEATS):
+        jax.block_until_ready(system.predict(lits, impl=impl))
+    return (time.time() - t0) / REPEATS
+
+
+def main() -> None:
+    key = jax.random.key(0)
+    cfg, params = _random_cotm(key)
+    # Ideal devices: benchmark the inference path, not encode stochasticity.
+    system = build_system(params, cfg, jax.random.key(1),
+                          IMPACTConfig(variability=False, finetune=False))
+
+    rng = np.random.default_rng(0)
+    for B in BATCH_SIZES:
+        lits = jnp.asarray(rng.random((B, cfg.n_literals)) < 0.5)
+        for impl in ("xla", "pallas"):
+            dt = _time_predict(system, lits, impl)
+            emit(f"impact_throughput/{impl}_b{B}", dt * 1e6,
+                 f"{B / dt:.1f}")
+
+    # Batched front end: request burst through queue + bucket padding.
+    B = max(BATCH_SIZES)
+    lits = np.asarray(rng.random((B, cfg.n_literals)) < 0.5)
+    eng = IMPACTEngine(system, impl="xla", max_batch=128,
+                       meter_energy=False)
+    eng.warmup()
+    t0 = time.time()
+    _, stats = eng.run(lits)
+    dt = time.time() - t0
+    emit("impact_throughput/engine_xla_burst", dt * 1e6 / stats["batches"],
+         f"{B / dt:.1f}")
+
+
+if __name__ == "__main__":
+    main()

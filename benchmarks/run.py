@@ -15,8 +15,9 @@ def main() -> None:
                     help="comma-separated section names to run")
     args = ap.parse_args()
 
-    from . import (fig7_8_variability, fig13_tuning_sweep, roofline,
-                   table4_energy, table5_datasets, table6_comparison)
+    from . import (fig7_8_variability, fig13_tuning_sweep, impact_throughput,
+                   roofline, table4_energy, table5_datasets,
+                   table6_comparison)
     sections = {
         "table4": table4_energy.main,
         "table5": table5_datasets.main,
@@ -24,6 +25,7 @@ def main() -> None:
         "fig7_8": fig7_8_variability.main,
         "fig13": fig13_tuning_sweep.main,
         "roofline": roofline.main,
+        "impact_throughput": impact_throughput.main,
     }
     chosen = (args.only.split(",") if args.only else list(sections))
     print("name,us_per_call,derived")

@@ -1,0 +1,33 @@
+"""jax version shims shared across the package.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to ``jax.shard_map``
+and renamed ``check_rep`` to ``check_vma``; route through whichever this
+jax build provides so call sites can use the modern spelling.
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    _impl = jax.shard_map
+    _REP_KW = "check_vma"
+except AttributeError:                       # older jax: experimental home
+    from jax.experimental.shard_map import shard_map as _impl
+    _REP_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              check_vma: bool | None = None, **kw):
+    if check_vma is not None:
+        kw[_REP_KW] = check_vma
+    return _impl(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def axis_size(axis_name) -> jax.Array:
+    """``jax.lax.axis_size`` fallback: psum of 1 over the bound axis."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+__all__ = ["shard_map", "axis_size"]

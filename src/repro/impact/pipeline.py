@@ -11,16 +11,32 @@ The same split is the `model`-axis sharding used by the distributed runtime
 (the digital AND == psum of violation bits; the ADC+add == psum of partial
 sums), so this module is both the hardware simulator and the reference
 semantics for the multi-pod lowering.
+
+Inference is Pallas-backed: ``build_system`` converts conductances to
+per-cell read currents ONCE (``yflash.read_current`` hoisted out of the
+per-call path), and every entry point — ``clause_bits``, ``class_scores``,
+``predict``, ``infer_with_report`` — is a jitted function with an
+``impl={"pallas", "xla"}`` switch.  ``impl="pallas"`` (the default) routes
+``predict`` through the fused ``kernels.fused_impact`` crossbar->CSA->
+class-sum kernel (clause bits stay in VMEM; interpret mode on CPU like the
+other kernels) and the staged entry points through ``kernels.crossbar_mvm``
+per shard; ``impl="xla"`` runs the pure-einsum oracles from ``kernels.ref``
+for A/B testing.  Energy accounting rides the staged path, where the shard
+column currents the paper meters are explicit.
 """
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core.cotm import CoTMConfig, CoTMParams, include_mask, to_unipolar
+from ..kernels import ops, ref
+from ..kernels.ref import pad_to as _pad_to
 from . import energy as energy_mod
 from .energy import EnergyReport
 from .tiles import (ClassTile, ClauseTile, encode_class_tile,
@@ -41,13 +57,71 @@ class IMPACTConfig:
     encode_pulse_width: float = 1e-3
 
 
-def _pad_to(x: Array, size: int, axis: int, value=0) -> Array:
-    pad = size - x.shape[axis]
-    if pad <= 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths, constant_values=value)
+# --- jitted inference entry points (module level => shared trace cache) ----
+
+@partial(jax.jit, static_argnames=("impl", "thresh"))
+def _clause_bits(literals: Array, clause_i: Array, nonempty: Array, *,
+                 impl: str, thresh: float) -> tuple[Array, Array]:
+    """-> (fired (B, C*tc) bool, shard column currents (B, R, C, tc))."""
+    if impl == "xla":
+        return ref.impact_clause_bits_ref(literals, clause_i, nonempty,
+                                          thresh=thresh)
+    B = literals.shape[0]
+    R, C, tr, tc = clause_i.shape
+    lit = _pad_to(literals.astype(jnp.float32), R * tr, axis=1, value=1)
+    drive = (1.0 - lit).reshape(B, R, tr)
+    cols = []
+    for r in range(R):                          # static shard unroll
+        cur = clause_i[r].transpose(1, 0, 2).reshape(tr, C * tc)
+        cols.append(ops.crossbar_mvm(drive[:, r], cur, v_read=1.0,
+                                     cutoff=0.0))
+    i_col = jnp.stack(cols, axis=1).reshape(B, R, C, tc)
+    fired = jnp.all(i_col < thresh, axis=1).reshape(B, C * tc)
+    return jnp.logical_and(fired, nonempty.astype(bool)), i_col
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def _class_scores(clauses: Array, class_i: Array, *,
+                  impl: str) -> tuple[Array, Array]:
+    """-> (scores (B, m) = summed shard currents, currents (B, S, m))."""
+    if impl == "xla":
+        return ref.impact_class_scores_ref(clauses, class_i)
+    B = clauses.shape[0]
+    S, sr, m = class_i.shape
+    drive = _pad_to(clauses.astype(jnp.float32), S * sr, axis=1)
+    drive = drive[:, :S * sr].reshape(B, S, sr)
+    i_col = jnp.stack(
+        [ops.crossbar_mvm(drive[:, s], class_i[s], v_read=1.0, cutoff=0.0)
+         for s in range(S)], axis=1)            # per-shard ADC
+    return i_col.sum(axis=1), i_col             # digital add
+
+
+@partial(jax.jit, static_argnames=("impl", "thresh"))
+def _predict(literals: Array, clause_i: Array, nonempty: Array,
+             class_i: Array, *, impl: str, thresh: float) -> Array:
+    scores = ops.fused_impact(literals, clause_i, nonempty, class_i,
+                              thresh=thresh, impl=impl)
+    return jnp.argmax(scores, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("impl", "thresh"))
+def _infer_metered(literals: Array, clause_i: Array, nonempty: Array,
+                   class_i: Array, valid: Array | None, *, impl: str,
+                   thresh: float) -> tuple[Array, Array, Array]:
+    """Staged inference with current metering: -> (preds, sum I_clause,
+    sum I_class).  The current sums are the paper's measured quantities;
+    reducing them inside the jit keeps the (B, R, n_pad) current tensor
+    transient.  ``valid`` (B,) masks batch-padding lanes out of the
+    meters: an all-1 literal pad lane draws no CLAUSE current (every row
+    floats) but fires every nonempty clause, so unmasked it would bill
+    phantom class-tile energy."""
+    fired, i_clause = _clause_bits(literals, clause_i, nonempty,
+                                   impl=impl, thresh=thresh)
+    if valid is not None:
+        fired = jnp.logical_and(fired, valid[:, None])
+        i_clause = i_clause * valid[:, None, None, None]
+    scores, i_class = _class_scores(fired, class_i, impl=impl)
+    return jnp.argmax(scores, axis=-1), i_clause.sum(), i_class.sum()
 
 
 @dataclasses.dataclass
@@ -56,62 +130,74 @@ class IMPACTSystem:
     clause_g: Array        # (R, C, tr, tc) conductances
     nonempty: Array        # (n_pad,) digital empty-clause mask
     class_g: Array         # (S, sr, m) conductances
+    clause_i: Array        # (R, C, tr, tc) per-cell read currents (hoisted)
+    class_i: Array         # (S, sr, m) per-cell read currents (hoisted)
     n_literals: int
     n_clauses: int
     n_classes: int
     cfg: IMPACTConfig
     encode_stats: dict[str, Any]
 
-    # -- inference ----------------------------------------------------------
-    def clause_bits(self, literals: Array) -> tuple[Array, Array]:
-        """(B, K) -> (clauses (B, n_pad) bool, clause tile currents)."""
-        B = literals.shape[0]
-        R, C, tr, tc = self.clause_g.shape
-        lit = _pad_to(literals.astype(jnp.float32), R * tr, axis=1, value=1)
-        drive = (1.0 - lit).reshape(B, R, tr)
-        i_cell = read_current(self.clause_g)                    # (R,C,tr,tc)
-        i_col = jnp.einsum("brk,rckj->brcj", drive, i_cell)     # (B,R,C,tc)
-        partial = i_col < I_CSA_THRESHOLD                       # CSA per shard
-        fired = jnp.all(partial, axis=1).reshape(B, C * tc)     # digital AND
+    def _nonempty_eff(self) -> Array:
         if self.cfg.mask_empty:
-            fired = jnp.logical_and(fired, self.nonempty)
-        return fired, i_col
+            return self.nonempty
+        return jnp.ones_like(self.nonempty)
 
-    def class_scores(self, clauses: Array) -> tuple[Array, Array]:
+    @staticmethod
+    def _check_impl(impl: str) -> None:
+        if impl not in ("pallas", "xla"):
+            raise ValueError(
+                f"impl must be 'pallas' or 'xla', got {impl!r}")
+
+    # -- inference ----------------------------------------------------------
+    def clause_bits(self, literals: Array, *,
+                    impl: str = "pallas") -> tuple[Array, Array]:
+        """(B, K) -> (clauses (B, n_pad) bool, clause tile currents)."""
+        self._check_impl(impl)
+        return _clause_bits(literals, self.clause_i, self._nonempty_eff(),
+                            impl=impl, thresh=I_CSA_THRESHOLD)
+
+    def class_scores(self, clauses: Array, *,
+                     impl: str = "pallas") -> tuple[Array, Array]:
         """(B, n_pad) -> (scores (B, m) = summed shard currents, currents)."""
-        B = clauses.shape[0]
-        S, sr, m = self.class_g.shape
-        drive = _pad_to(clauses.astype(jnp.float32), S * sr, axis=1)
-        drive = drive.reshape(B, S, sr)
-        i_cell = read_current(self.class_g)                     # (S,sr,m)
-        i_col = jnp.einsum("bsn,snm->bsm", drive, i_cell)       # per-shard ADC
-        return i_col.sum(axis=1), i_col                         # digital add
+        self._check_impl(impl)
+        return _class_scores(clauses, self.class_i, impl=impl)
 
-    def predict(self, literals: Array) -> Array:
-        clauses, _ = self.clause_bits(literals)
-        scores, _ = self.class_scores(clauses)
-        return jnp.argmax(scores, axis=-1)
+    def predict(self, literals: Array, *, impl: str = "pallas") -> Array:
+        """Fast path: fused Pallas crossbar->CSA->class-sum kernel."""
+        self._check_impl(impl)
+        return _predict(literals, self.clause_i, self._nonempty_eff(),
+                        self.class_i, impl=impl, thresh=I_CSA_THRESHOLD)
 
-    def infer_with_report(self, literals: Array) -> tuple[Array, EnergyReport]:
-        B = literals.shape[0]
-        clauses, i_clause = self.clause_bits(literals)
-        scores, i_class = self.class_scores(clauses)
-        preds = jnp.argmax(scores, axis=-1)
+    def infer_with_report(self, literals: Array, *,
+                          impl: str = "pallas",
+                          valid: Array | None = None,
+                          ) -> tuple[Array, EnergyReport]:
+        """``valid`` (B,) bool marks real lanes in a padded batch; padding
+        lanes are excluded from the energy/ops/datapoint accounting (their
+        predictions still come back and are dropped by the caller)."""
+        self._check_impl(impl)
+        B = (literals.shape[0] if valid is None
+             else int(np.asarray(valid).sum()))
+        preds, i_clause_sum, i_class_sum = _infer_metered(
+            literals, self.clause_i, self._nonempty_eff(), self.class_i,
+            valid if valid is None else jnp.asarray(valid),
+            impl=impl, thresh=I_CSA_THRESHOLD)
 
-        e_clause = float((V_READ * i_clause * T_READ).sum())
-        e_class = float((V_READ * i_class * T_READ).sum())
+        e_clause = float(V_READ * i_clause_sum * T_READ)
+        e_class = float(V_READ * i_class_sum * T_READ)
         R, C, tr, tc = self.clause_g.shape
         lat = energy_mod.inference_latency(
             n_clause_cols=min(tc, self.n_clauses), n_class_cols=self.n_classes,
             clause_tiles_parallel=1)
-        ops = B * (self.n_literals * self.n_clauses
-                   + self.n_clauses * self.n_classes)
+        ops_xp = B * (self.n_literals * self.n_clauses
+                      + self.n_clauses * self.n_classes)
         report = EnergyReport(
             read_energy_j=e_clause + e_class,
             clause_energy_j=e_clause, class_energy_j=e_class,
             program_energy_j=self.encode_stats["program_energy_j"],
             erase_energy_j=self.encode_stats["erase_energy_j"],
-            latency_s=lat, ops_crosspoint=ops, datapoints=B)
+            latency_s=lat, ops_crosspoint=ops_xp, datapoints=B)
         return preds, report
 
     # -- metrics ------------------------------------------------------------
@@ -172,6 +258,9 @@ def build_system(params: CoTMParams, cfg: CoTMConfig, key: Array,
                  program_energy_j=e_prog_cl + e_prog_w,
                  erase_energy_j=e_er_cl + e_er_w)
     nonempty = _pad_to(include.any(axis=0), C * tc, 0)
+    # Conductance -> read-current conversion happens ONCE here; every
+    # inference call (jitted above) consumes the precomputed currents.
     return IMPACTSystem(
         clause_g=clause_g, nonempty=nonempty, class_g=class_g,
+        clause_i=read_current(clause_g), class_i=read_current(class_g),
         n_literals=K, n_clauses=n, n_classes=m, cfg=ic, encode_stats=stats)

@@ -89,15 +89,20 @@ def encode_clause_tile(include: Array, key: Array, *,
     k_var, k_init, k_pulse = jax.random.split(key, 3)
     var = (DeviceVariation.sample(k_var, (K, n)) if variability
            else DeviceVariation.none((K, n)))
-    # Freshly erased array: HCS with mild spread.
-    g0 = 2.5e-6 * jnp.exp(0.05 * jax.random.normal(k_init, (K, n)))
+    # Freshly erased array: HCS with mild spread.  ``variability=False``
+    # means IDEAL devices: uniform start, no C2C noise — encoding becomes a
+    # deterministic per-cell function of the target, so the same logical
+    # model maps to the same conductances under ANY tile split (the
+    # invariance behind Fig. 14 scaling).
+    g0 = (2.5e-6 * jnp.exp(0.05 * jax.random.normal(k_init, (K, n)))
+          if variability else jnp.full((K, n), 2.5e-6))
 
     target_lo = jnp.where(include, G_HCS_BOOL, 0.0)
     target_hi = jnp.where(include, jnp.inf, G_LCS)
     g, n_prog, n_erase = yflash.pulse_until(
         g0, target_lo=target_lo, target_hi=target_hi,
         width_prog=pulse_width, width_erase=pulse_width,
-        var=var, key=k_pulse, max_pulses=max_pulses)
+        var=var, key=k_pulse, max_pulses=max_pulses, c2c=variability)
 
     stats = dict(prog_pulses=n_prog, erase_pulses=n_erase,
                  include_fraction=include.mean(),
@@ -147,13 +152,16 @@ def encode_class_tile(weights_unipolar: Array, key: Array, *,
     var = (DeviceVariation.sample(k_var, (n, m)) if variability
            else DeviceVariation.none((n, m)))
     # Paper: all cells erased to HCS before mapping for a uniform transition.
-    g0 = 2.5e-6 * jnp.exp(0.05 * jax.random.normal(k_init, (n, m)))
+    # Ideal devices (variability=False) start uniform and tune noiselessly —
+    # see ``encode_clause_tile`` for why determinism matters.
+    g0 = (2.5e-6 * jnp.exp(0.05 * jax.random.normal(k_init, (n, m)))
+          if variability else jnp.full((n, m), 2.5e-6))
 
     if adaptive:
         tol = finetune_tol_segments * seg
         g2, p_a, e_a = yflash.tune_adaptive(
             g0, target, jnp.asarray(tol), var=var, key=k_pre,
-            max_pulses=max_pulses)
+            max_pulses=max_pulses, c2c=variability)
         stats = dict(pretune_prog=p_a, pretune_erase=e_a,
                      segment_size=seg, w_max=w_max, adaptive=True)
         return ClassTile(g=g2), stats
@@ -162,7 +170,7 @@ def encode_class_tile(weights_unipolar: Array, key: Array, *,
     g1, p_pre, e_pre = yflash.pulse_until(
         g0, target_lo=target - tol_pre, target_hi=target + tol_pre,
         width_prog=pretune_width, width_erase=pretune_width,
-        var=var, key=k_pre, max_pulses=max_pulses)
+        var=var, key=k_pre, max_pulses=max_pulses, c2c=variability)
 
     stats = dict(pretune_prog=p_pre, pretune_erase=e_pre,
                  segment_size=seg, w_max=w_max)
@@ -171,7 +179,7 @@ def encode_class_tile(weights_unipolar: Array, key: Array, *,
         g2, p_f, e_f = yflash.pulse_until(
             g1, target_lo=target - tol_fine, target_hi=target + tol_fine,
             width_prog=finetune_width, width_erase=finetune_width,
-            var=var, key=k_fine, max_pulses=max_pulses)
+            var=var, key=k_fine, max_pulses=max_pulses, c2c=variability)
         stats.update(finetune_prog=p_f, finetune_erase=e_f)
     else:
         g2 = g1

@@ -111,12 +111,16 @@ def read_current(g: Array, v_read: float = V_READ) -> Array:
 def pulse_until(g: Array, *, target_lo: Array, target_hi: Array,
                 width_prog: float, width_erase: float,
                 var: DeviceVariation, key: Array,
-                max_pulses: int = 128) -> tuple[Array, Array, Array]:
+                max_pulses: int = 128, c2c: bool = True,
+                ) -> tuple[Array, Array, Array]:
     """Vectorised program/erase loop: drive every cell into
     [target_lo, target_hi].  Returns (G, prog_pulse_counts, erase_pulse_counts).
 
     This is the primitive behind both the Boolean encode (Fig. 9-10) and the
-    analog pre-tune / fine-tune phases (Figs. 6, 12).
+    analog pre-tune / fine-tune phases (Figs. 6, 12).  ``c2c=False`` turns
+    off the per-pulse cycle-to-cycle noise, making the trajectory a
+    deterministic function of the start/target conductances — the ideal
+    device twin used when all variability is disabled.
     """
     def cond(state):
         g, _, _, i, _ = state
@@ -128,8 +132,8 @@ def pulse_until(g: Array, *, target_lo: Array, target_hi: Array,
         k, kp, ke = jax.random.split(k, 3)
         too_high = g > target_hi
         too_low = g < target_lo
-        g_p = program_pulse(g, width_prog, var, kp)
-        g_e = erase_pulse(g, width_erase, var, ke)
+        g_p = program_pulse(g, width_prog, var, kp if c2c else None)
+        g_e = erase_pulse(g, width_erase, var, ke if c2c else None)
         g = jnp.where(too_high, g_p, jnp.where(too_low, g_e, g))
         return (g, np_ + too_high.astype(jnp.int32),
                 ne_ + too_low.astype(jnp.int32), i + 1, k)
@@ -143,7 +147,8 @@ def pulse_until(g: Array, *, target_lo: Array, target_hi: Array,
 def tune_adaptive(g: Array, target: Array, tol: Array, *,
                   var: DeviceVariation, key: Array,
                   widths: tuple[float, ...] = (500e-6, 50e-6, 5e-6),
-                  max_pulses: int = 64) -> tuple[Array, Array, Array]:
+                  max_pulses: int = 64, c2c: bool = True,
+                  ) -> tuple[Array, Array, Array]:
     """Closed-loop programmer with per-pulse WIDTH SELECTION (beyond
     paper).  The paper's two-phase schedule applies one fixed width per
     phase; real lab programmers pick, per cell per step, the widest pulse
@@ -178,8 +183,9 @@ def tune_adaptive(g: Array, target: Array, tol: Array, *,
         best = jnp.argmin(err, axis=0)                   # (2W index per cell)
         is_prog = (best % 2) == 0
         width = jnp.take(jnp.asarray(widths_arr), best // 2)
-        # Re-apply the chosen move WITH C2C noise.
-        noise = jnp.exp(C2C_SIGMA * jax.random.normal(k1, g.shape))
+        # Re-apply the chosen move WITH C2C noise (unless ideal devices).
+        noise = (jnp.exp(C2C_SIGMA * jax.random.normal(k1, g.shape))
+                 if c2c else jnp.ones(g.shape))
         floor = G_MIN * var.g_floor
         ceil = G_MAX * var.g_ceil
         decay = jnp.exp(-width / (TAU_PROG * var.tau_prog)) * noise

@@ -5,12 +5,14 @@ Layout (one module per kernel + shared wrappers/oracles):
 * ``clause_eval.py``  — clause crossbar: binary matmul + CSA ``==0`` epilogue
 * ``class_sum.py``    — class crossbar: weighted vote accumulation
 * ``fused_cotm.py``   — both crossbars fused in one VMEM residency
+* ``fused_impact.py`` — fused ANALOG path: cell currents + CSA + periphery
 * ``crossbar_mvm.py`` — analog conductance MVM with read nonlinearity
 * ``ops.py``          — public jit'd wrappers (padding, interpret fallback)
 * ``ref.py``          — pure-jnp oracles (the test ground truth)
 """
 from . import ops, ref
-from .ops import class_sum, clause_eval, crossbar_mvm, fused_cotm
+from .ops import (class_sum, clause_eval, crossbar_mvm, fused_cotm,
+                  fused_impact)
 
 __all__ = ["ops", "ref", "class_sum", "clause_eval", "crossbar_mvm",
-           "fused_cotm"]
+           "fused_cotm", "fused_impact"]

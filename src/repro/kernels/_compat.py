@@ -1,0 +1,13 @@
+"""Version shims for the Pallas TPU API surface.
+
+``pltpu.TPUCompilerParams`` was renamed ``CompilerParams`` upstream; pick
+whichever this jax build provides so the kernels run on both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+__all__ = ["CompilerParams"]

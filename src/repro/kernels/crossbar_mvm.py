@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import _compat
+
 Array = jax.Array
 
 BLOCK_B = 128
@@ -75,7 +77,7 @@ def crossbar_mvm(drive: Array, g: Array, *, v_read: float = 2.0,
         out_specs=pl.BlockSpec((block_b, block_n), lambda b, n, k: (b, n)),
         out_shape=jax.ShapeDtypeStruct((B, N), jnp.float32),
         scratch_shapes=[pltpu.VMEM((block_b, block_n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(drive, g)

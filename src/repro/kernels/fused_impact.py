@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: fused ANALOG IMPACT inference (both crossbars).
+
+Digital twin of the paper's two-crossbar datapath with the Fig. 14 modular
+scaling baked into the tiling.  Where ``fused_cotm`` fuses the *logical*
+CoTM (include mask + integer weights), this kernel fuses the *physical*
+simulation — per-cell Y-Flash read currents, the CSA threshold, and the
+digital periphery — in one VMEM residency:
+
+    per clause-column chunk n:
+        for each of the R literal row-shards r:
+            I_col[r]  = drive[r] @ I_cell[r][:, n]     # Kirchhoff column sum
+            partial_r = I_col[r] < I_CSA_THRESHOLD     # CSA latch
+        fired   = AND_r partial_r  &  nonempty[n]      # digital AND (Fig. 14)
+        scores += fired @ I_class[n, :]                # class column currents
+
+The Boolean clause chunk ``fired`` never leaves VMEM: the (B, n_pad) clause
+matrix — the largest intermediate of the un-fused path — is never
+materialized in HBM.  The class crossbar's S row-shards are flattened onto
+the clause-chunk axis, so the per-shard ADC + digital add is subsumed by
+the chunk accumulation (exact: the class read is linear in the drive).
+
+Layouts (prepared by ``ops.fused_impact``):
+  drive   (R, B, tr)   f32   1 - literal, row-shard major; padding rows 0
+  ccur    (R, tr, N)   f32   clause-cell read currents, columns flattened
+  ne      (1, N)       int8  digital empty-clause mask
+  wcur    (N, M)       f32   class-cell read currents, S shards flattened
+  out     (B, M)       f32   class column currents (argmax = prediction)
+
+R stays whole per block (the digital AND needs every shard's partial bit),
+mirroring ``fused_cotm`` keeping K whole; this bounds R*tr at a few
+thousand rows — exactly the regime of a physical crossbar column height.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import _compat
+
+Array = jax.Array
+
+BLOCK_B = 128
+BLOCK_N = 256
+
+
+def _fused_impact_kernel(drive_ref, ccur_ref, ne_ref, wcur_ref, out_ref,
+                         acc_ref, *, n_n: int, n_r: int, thresh: float):
+    n = pl.program_id(1)
+
+    @pl.when(n == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bb = drive_ref.shape[1]
+    bn = ne_ref.shape[1]
+    fired = jnp.broadcast_to(ne_ref[...] != 0, (bb, bn))
+    for r in range(n_r):                       # static unroll over row shards
+        i_col = jax.lax.dot_general(
+            drive_ref[r], ccur_ref[r],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        fired = fired & (i_col < thresh)       # CSA + digital AND, in VMEM
+    acc_ref[...] += jax.lax.dot_general(
+        fired.astype(jnp.float32), wcur_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(n == n_n - 1)
+    def _epilogue():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("thresh", "block_b", "block_n", "interpret"))
+def fused_impact(drive: Array, ccur: Array, nonempty: Array, wcur: Array, *,
+                 thresh: float, block_b: int = BLOCK_B,
+                 block_n: int = BLOCK_N, interpret: bool = False) -> Array:
+    """drive (R, B, tr) f32, ccur (R, tr, N) f32, nonempty (1, N) int8,
+    wcur (N, M) f32 -> class currents (B, M) f32.
+
+    B % block_b == 0, N % block_n == 0, tr % 128 == 0, M % 128 == 0 required
+    (``ops.fused_impact`` pads arbitrary shapes and shard layouts).
+    """
+    R, B, tr = drive.shape
+    R2, tr2, N = ccur.shape
+    N2, M = wcur.shape
+    assert R == R2 and tr == tr2 and N == N2 and nonempty.shape == (1, N)
+    assert (B % block_b == 0 and N % block_n == 0 and tr % 128 == 0
+            and M % 128 == 0), (B, R, tr, N, M)
+    n_n = N // block_n
+
+    return pl.pallas_call(
+        functools.partial(_fused_impact_kernel, n_n=n_n, n_r=R,
+                          thresh=thresh),
+        grid=(B // block_b, n_n),
+        in_specs=[
+            pl.BlockSpec((R, block_b, tr), lambda b, n: (0, b, 0)),
+            pl.BlockSpec((R, tr, block_n), lambda b, n: (0, 0, n)),
+            pl.BlockSpec((1, block_n), lambda b, n: (0, n)),
+            pl.BlockSpec((block_n, M), lambda b, n: (n, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, M), lambda b, n: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, M), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_b, M), jnp.float32)],
+        compiler_params=_compat.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(drive, ccur, nonempty, wcur)

@@ -24,6 +24,7 @@ from . import clause_eval as _clause_kernel
 from . import class_sum as _class_kernel
 from . import crossbar_mvm as _mvm_kernel
 from . import fused_cotm as _fused_kernel
+from . import fused_impact as _impact_kernel
 from . import ref
 
 Array = jax.Array
@@ -126,6 +127,60 @@ def fused_cotm(literals: Array, include: Array, weights: Array,
     out = _fused_kernel.fused_cotm(
         lit, inc, ne, w, block_b=block_b, block_n=block_n,
         interpret=interpret)
+    return out[:B, :M]
+
+
+def fused_impact(literals: Array, clause_i: Array, nonempty: Array,
+                 class_i: Array, *, thresh: float, impl: str = "pallas",
+                 interpret: bool | None = None, block_b: int = 128,
+                 block_n: int = 256) -> Array:
+    """Fused analog IMPACT inference: literals -> class currents (B, M) f32.
+
+    literals (B, K) bool/{0,1}; clause_i (R, C, tr, tc) f32 per-cell clause
+    crossbar read currents in the ``IMPACTSystem`` shard layout; nonempty
+    (C*tc,) digital mask; class_i (S, sr, M) f32 class crossbar currents.
+    ``thresh`` is the CSA decision current (``yflash.I_CSA_THRESHOLD``).
+
+    Padding is semantically neutral: padded literal rows drive 0 V (a
+    floating row contributes no current), padded clause columns carry
+    nonempty=0, padded class rows carry 0 S conductance.
+    """
+    B, K = literals.shape
+    R, C, tr, tc = clause_i.shape
+    S, sr, M = class_i.shape
+    n_clause = C * tc
+    assert nonempty.shape == (n_clause,), (nonempty.shape, n_clause)
+    if impl == "xla":
+        return ref.fused_impact_ref(literals, clause_i, nonempty, class_i,
+                                    thresh=thresh)
+    if interpret is None:
+        interpret = _interpret_default()
+
+    # Unify the clause-column axis of both crossbars: the clause tile pads
+    # n to C*tc, the class tile to S*sr; dead columns (>= n) fire 0.
+    N = max(n_clause, S * sr)
+    block_n = min(block_n, max(128, -(-N // 128) * 128))
+    tr_pad = max(128, -(-tr // 128) * 128)
+
+    lit = _pad_axis(literals.astype(jnp.float32), R * tr, 1, 1)
+    drive = (1.0 - lit).reshape(B, R, tr).transpose(1, 0, 2)   # (R, B, tr)
+    drive = _pad_axis(_pad_axis(drive, block_b, 1, 0.0), tr_pad, 2, 0.0)
+
+    ccur = clause_i.astype(jnp.float32).transpose(0, 2, 1, 3)  # (R,tr,C,tc)
+    ccur = ccur.reshape(R, tr, n_clause)
+    ccur = _pad_axis(_pad_axis(ccur, tr_pad, 1, 0.0), block_n, 2, 0.0)
+    if N > n_clause:
+        ccur = _pad_axis(ccur, -(-N // block_n) * block_n, 2, 0.0)
+
+    ne = _pad_axis(nonempty.astype(jnp.int8)[None, :],
+                   -(-N // block_n) * block_n, 1, 0)
+
+    wcur = class_i.astype(jnp.float32).reshape(S * sr, M)
+    wcur = _pad_axis(_pad_axis(wcur, ne.shape[1], 0, 0.0), 128, 1, 0.0)
+
+    out = _impact_kernel.fused_impact(
+        drive, ccur, ne, wcur, thresh=thresh, block_b=block_b,
+        block_n=block_n, interpret=interpret)
     return out[:B, :M]
 
 

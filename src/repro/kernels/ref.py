@@ -44,6 +44,64 @@ def fused_cotm_ref(literals: Array, include: Array, weights: Array,
     return class_sum_ref(fired, weights)
 
 
+def pad_to(x: Array, size: int, axis: int, value=0) -> Array:
+    """Pad ``axis`` up to an absolute ``size`` (no-op when already there).
+    Shared by the oracles and ``impact.pipeline``."""
+    pad = size - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def impact_clause_bits_ref(literals: Array, clause_i: Array,
+                           nonempty: Array, *, thresh: float,
+                           ) -> tuple[Array, Array]:
+    """Analog clause stage on per-cell read currents (Fig. 14 row shards).
+
+    literals (B, K) {0,1}; clause_i (R, C, tr, tc) f32 cell currents;
+    nonempty (C*tc,) -> (fired (B, C*tc) bool, column currents (B,R,C,tc)).
+    Only literal==0 rows are driven; a column's CSA reads "no violation"
+    iff its current stays below ``thresh``; shard partials AND digitally.
+    """
+    B = literals.shape[0]
+    R, C, tr, tc = clause_i.shape
+    lit = pad_to(literals.astype(jnp.float32), R * tr, 1, 1)
+    drive = (1.0 - lit).reshape(B, R, tr)
+    i_col = jnp.einsum("brk,rckj->brcj", drive, clause_i)
+    partial = i_col < thresh
+    fired = jnp.all(partial, axis=1).reshape(B, C * tc)
+    fired = jnp.logical_and(fired, nonempty.astype(bool))
+    return fired, i_col
+
+
+def impact_class_scores_ref(clauses: Array, class_i: Array,
+                            ) -> tuple[Array, Array]:
+    """Analog class stage: clauses (B, n) {0,1}; class_i (S, sr, M) f32
+    cell currents -> (scores (B, M) f32 summed shard currents, per-shard
+    column currents (B, S, M)).  Columns beyond S*sr (clause-tile padding)
+    are dead by construction and dropped.
+    """
+    B = clauses.shape[0]
+    S, sr, M = class_i.shape
+    drive = pad_to(clauses.astype(jnp.float32), S * sr, 1, 0)
+    drive = drive[:, :S * sr].reshape(B, S, sr)
+    i_col = jnp.einsum("bsn,snm->bsm", drive, class_i)
+    return i_col.sum(axis=1), i_col
+
+
+def fused_impact_ref(literals: Array, clause_i: Array, nonempty: Array,
+                     class_i: Array, *, thresh: float) -> Array:
+    """Analog literals -> class currents, shard-structured oracle for the
+    fused IMPACT kernel (clause bits never leave "VMEM" here either —
+    they are just an intermediate)."""
+    fired, _ = impact_clause_bits_ref(literals, clause_i, nonempty,
+                                      thresh=thresh)
+    scores, _ = impact_class_scores_ref(fired, class_i)
+    return scores
+
+
 def crossbar_mvm_ref(drive: Array, g: Array, *, v_read: float = 2.0,
                      nonlin: float = 1.5, cutoff: float = 10e-9) -> Array:
     """Analog crossbar column currents with the Y-Flash low-G nonlinearity.

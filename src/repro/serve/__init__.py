@@ -1,4 +1,6 @@
-"""Serving: prefill/decode engine + request batching."""
+"""Serving: prefill/decode engine, request batching, IMPACT inference."""
 from .engine import BatchingQueue, Engine, Request, ServeConfig
+from .impact_engine import BatchStats, IMPACTEngine, aggregate_reports
 
-__all__ = ["Engine", "ServeConfig", "BatchingQueue", "Request"]
+__all__ = ["Engine", "ServeConfig", "BatchingQueue", "Request",
+           "IMPACTEngine", "BatchStats", "aggregate_reports"]

@@ -1,0 +1,204 @@
+"""Batched IMPACT inference front: crossbar serving under request traffic.
+
+The LM zoo's ``Engine`` serves autoregressive token streams; this engine
+serves the other workload the paper targets — high-throughput CoTM
+classification on the Y-Flash crossbar twin.  Design:
+
+* requests (one literal vector each) accumulate in the LM ``BatchingQueue``
+  (same flush-on-full / flush-on-stale policy, so both fronts share the
+  batching semantics that the load generators and tests exercise);
+* a flushed batch is padded UP to a shape bucket and carries a validity
+  mask — ``IMPACTSystem.predict`` jits once per bucket, not once per
+  traffic pattern (padding literals with 1 drives no crossbar rows, so a
+  padded lane cannot perturb real lanes; the validity mask keeps its
+  fired-by-vacuity clause bits out of the energy meters);
+* every batch is metered: wall-clock latency, samples/s, and the paper's
+  energy accounting via ``infer_with_report``, aggregated over the run.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import time
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..impact.energy import EnergyReport
+from ..impact.pipeline import IMPACTSystem
+from .engine import BatchingQueue, Request
+
+Array = jax.Array
+
+DEFAULT_BUCKETS = (8, 32, 128, 512)
+
+
+def aggregate_reports(reports: Sequence[EnergyReport]) -> EnergyReport:
+    """Sum energy/op/datapoint accounting over per-batch reports; latency
+    is the serial crossbar time of the whole run (batches stream through
+    the same physical tiles)."""
+    assert reports, "no reports to aggregate"
+    return EnergyReport(
+        read_energy_j=sum(r.read_energy_j for r in reports),
+        clause_energy_j=sum(r.clause_energy_j for r in reports),
+        class_energy_j=sum(r.class_energy_j for r in reports),
+        program_energy_j=reports[0].program_energy_j,   # one-time encode
+        erase_energy_j=reports[0].erase_energy_j,
+        latency_s=sum(r.latency_s for r in reports),
+        ops_crosspoint=sum(r.ops_crosspoint for r in reports),
+        datapoints=sum(r.datapoints for r in reports),
+    )
+
+
+@dataclasses.dataclass
+class BatchStats:
+    bucket: int
+    n_valid: int
+    latency_s: float
+    samples_per_s: float
+    cold: bool = False     # first batch of this bucket: includes jit compile
+
+
+class IMPACTEngine:
+    """Batched crossbar inference with shape-bucketed jit.
+
+    ``submit`` enqueues a literal vector; ``step`` flushes at most one
+    ready batch and returns completed ``(rid, prediction)`` pairs;
+    ``run`` drives a whole request list to completion.  ``impl`` selects
+    the Pallas kernels (default) or the einsum oracles for A/B runs.
+
+    Note the metering/kernel interaction: with ``meter_energy=True`` (the
+    default) batches go through ``infer_with_report``, whose pallas impl
+    is the STAGED per-shard kernel path — metering needs the column
+    currents the fused kernel deliberately never materializes.  The fused
+    ``fused_impact`` kernel serves when ``meter_energy=False`` (the
+    max-throughput configuration).
+    """
+
+    def __init__(self, system: IMPACTSystem, *, impl: str = "pallas",
+                 max_batch: int = 128, max_wait_s: float = 0.01,
+                 buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 meter_energy: bool = True):
+        self.system = system
+        self.impl = impl
+        # Buckets above max_batch are unreachable (a flush never exceeds
+        # max_batch and max_batch itself is always a bucket) — drop them
+        # so warmup() doesn't compile dead shapes.
+        self.buckets = sorted(b for b in set(int(b) for b in buckets)
+                              | {max_batch} if b <= max_batch)
+        self.queue = BatchingQueue(max_batch=max_batch, max_wait_s=max_wait_s)
+        self.meter_energy = meter_energy
+        self.batch_stats: list[BatchStats] = []
+        self.reports: list[EnergyReport] = []
+        self._next_rid = 0
+        self._warm: set[int] = set()
+
+    def warmup(self) -> None:
+        """Pre-compile every shape bucket so no serving batch pays jit
+        latency (throughput stats then have no cold batches)."""
+        ones = np.ones((1, self.system.n_literals), np.int8)
+        n_reports = len(self.reports)
+        for b in self.buckets:
+            lits, valid = self.pad_to_bucket(
+                [Request(-1, ones[0], max_new=0)], b,
+                self.system.n_literals)
+            jax.block_until_ready(self._infer(lits, valid))
+            self._warm.add(b)
+        del self.reports[n_reports:]       # warmup lanes are not traffic
+
+    # -- request plumbing ---------------------------------------------------
+    def submit(self, literals: np.ndarray) -> int:
+        """Enqueue one (K,) literal vector; returns the request id."""
+        lits = np.asarray(literals)
+        assert lits.shape == (self.system.n_literals,), lits.shape
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.add(Request(rid, lits.astype(np.int8), max_new=0))
+        return rid
+
+    def bucket_for(self, n: int) -> int:
+        """Smallest configured bucket >= n (largest bucket caps max_batch)."""
+        i = bisect.bisect_left(self.buckets, n)
+        return self.buckets[min(i, len(self.buckets) - 1)]
+
+    @staticmethod
+    def pad_to_bucket(batch: list[Request], bucket: int, n_literals: int,
+                      ) -> tuple[Array, np.ndarray]:
+        """Stack requests into (bucket, K) literals + validity mask.
+
+        Padding lanes are all-1 literals: every crossbar row floats ('Z'),
+        so they draw no current in the analog model.
+        """
+        lits = np.ones((bucket, n_literals), np.int8)
+        valid = np.zeros((bucket,), bool)
+        for i, r in enumerate(batch):
+            lits[i] = r.tokens
+            valid[i] = True
+        return jnp.asarray(lits), valid
+
+    # -- execution ----------------------------------------------------------
+    def _infer(self, lits: Array, valid: np.ndarray) -> Array:
+        if self.meter_energy:
+            preds, report = self.system.infer_with_report(
+                lits, impl=self.impl, valid=valid)
+            self.reports.append(report)
+            return preds
+        return self.system.predict(lits, impl=self.impl)
+
+    def step(self, *, force: bool = False) -> list[tuple[int, int]]:
+        """Flush at most one batch; returns completed (rid, pred) pairs."""
+        if not (self.queue.ready() or (force and self.queue.pending)):
+            return []
+        batch = self.queue.take()
+        bucket = self.bucket_for(len(batch))
+        lits, valid = self.pad_to_bucket(batch, bucket,
+                                         self.system.n_literals)
+        cold = bucket not in self._warm
+        self._warm.add(bucket)
+        t0 = time.time()
+        preds = np.asarray(jax.block_until_ready(self._infer(lits, valid)))
+        dt = time.time() - t0
+        self.batch_stats.append(BatchStats(
+            bucket=bucket, n_valid=len(batch), latency_s=dt,
+            samples_per_s=len(batch) / max(dt, 1e-9), cold=cold))
+        return [(r.rid, int(preds[i])) for i, r in enumerate(batch)
+                if valid[i]]
+
+    def run(self, literals: np.ndarray) -> tuple[np.ndarray, dict]:
+        """Serve a (B, K) request burst to completion; returns predictions
+        in submission order + statistics for THIS burst only (``stats()``
+        with no arguments reports engine-lifetime aggregates)."""
+        b0, r0 = len(self.batch_stats), len(self.reports)
+        rids = [self.submit(row) for row in np.asarray(literals)]
+        done: dict[int, int] = {}
+        while len(done) < len(rids):
+            out = self.step(force=not self.queue.ready())
+            done.update(out)
+        preds = np.asarray([done[r] for r in rids])
+        return preds, self.stats(since_batch=b0, since_report=r0)
+
+    def stats(self, *, since_batch: int = 0, since_report: int = 0) -> dict:
+        bs = self.batch_stats[since_batch:]
+        total = sum(s.n_valid for s in bs)
+        wall = sum(s.latency_s for s in bs)
+        # Throughput from WARM batches only — a bucket's first batch pays
+        # jit compile and would skew the serving-rate headline; fall back
+        # to all batches when everything was cold (e.g. a single burst).
+        warm = [s for s in bs if not s.cold] or bs
+        w_total = sum(s.n_valid for s in warm)
+        w_wall = sum(s.latency_s for s in warm)
+        out = dict(
+            batches=len(bs), samples=total, wall_s=wall,
+            cold_batches=sum(s.cold for s in bs),
+            samples_per_s=w_total / max(w_wall, 1e-9),
+            mean_batch_latency_s=w_wall / max(len(warm), 1),
+            buckets_used=sorted({s.bucket for s in bs}),
+        )
+        reports = self.reports[since_report:]
+        if reports:
+            agg = aggregate_reports(reports)
+            out["energy"] = agg
+            out["energy_per_datapoint_j"] = agg.energy_per_datapoint_j
+        return out

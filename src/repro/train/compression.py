@@ -26,6 +26,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .. import compat
+
 Array = jax.Array
 
 
@@ -41,7 +43,7 @@ def int8_psum(v: Array, axis_name: str) -> Array:
     The leading dimension of the flattened tensor is padded to the axis
     size for the all_to_all phase.
     """
-    n = jax.lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
     shape = v.shape
     flat = v.reshape(-1)
     pad = (-flat.size) % n

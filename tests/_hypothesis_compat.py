@@ -1,0 +1,107 @@
+"""Hypothesis shim: use the real library when installed, else a minimal
+deterministic fallback so the property tests still collect and run.
+
+The fallback implements only what this suite uses — ``@given`` with keyword
+strategies built from ``integers``/``floats``/``booleans``/``sampled_from``
+— and replays a fixed number of deterministically seeded examples per test
+(seeded from the test name, so outcomes are stable across runs and
+independent of test order).  ``@settings`` keeps its call signature but only
+``max_examples`` is honoured, capped so tier-1 stays fast without shrinking
+support.  Real-hypothesis features (shrinking, the example database,
+``assume``) are simply absent; install ``hypothesis`` to get them back.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import math
+import zlib
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import random
+
+    _FALLBACK_MAX_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+            # Log-uniform when the range spans decades (device conductances
+            # and pulse widths), uniform otherwise — mirrors how hypothesis
+            # explores wide float ranges enough for these tests.
+            def draw(rng: random.Random) -> float:
+                if min_value > 0 and max_value / min_value > 1e3:
+                    lo, hi = math.log(min_value), math.log(max_value)
+                    return math.exp(rng.uniform(lo, hi))
+                return rng.uniform(min_value, max_value)
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(elements) -> _Strategy:
+            pool = list(elements)
+            return _Strategy(lambda rng: pool[rng.randrange(len(pool))])
+
+    strategies = _Strategies()
+
+    def given(**strats):
+        for name, s in strats.items():
+            if not isinstance(s, _Strategy):
+                raise TypeError(f"unsupported strategy for {name!r}: {s!r}")
+
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = min(getattr(wrapper, "_max_examples",
+                                _FALLBACK_MAX_EXAMPLES),
+                        _FALLBACK_MAX_EXAMPLES)
+                base = zlib.crc32(fn.__qualname__.encode())
+                for i in range(n):
+                    rng = random.Random(base + i)
+                    drawn = {k: s.example(rng) for k, s in strats.items()}
+                    fn(*args, **kwargs, **drawn)
+
+            # pytest resolves test parameters by signature; hide the drawn
+            # params so only real fixtures (if any) are requested.
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items() if name not in strats
+            ])
+            del wrapper.__wrapped__
+            wrapper.hypothesis_fallback = True
+            return wrapper
+
+        return deco
+
+    def settings(*, max_examples: int | None = None, **_kw):
+        def deco(fn):
+            if max_examples is not None:
+                fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+
+st = strategies
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st", "strategies"]

@@ -1,7 +1,7 @@
 """Booleanization properties (the paper's data-preparation step)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import booleanize, n_literals, with_negations
 from repro.core.booleanize import thermometer_thresholds, threshold_bits

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (CoTMConfig, CoTMParams, class_scores, clause_outputs,
                         include_mask, predict, to_unipolar, violation_counts)

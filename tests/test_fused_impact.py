@@ -1,0 +1,188 @@
+"""Fused analog IMPACT kernel: parity vs the einsum oracle across shard
+layouts, plus the golden digital==analog end-to-end equivalence (Fig. 4).
+
+The sweep inputs live in the PHYSICAL current regime (HCS reads ~5 uA,
+LCS ~3 nA, CSA threshold 4.1 uA): column currents sit decades away from
+the decision boundary, so CSA bits and argmax must be EXACTLY equal
+between implementations; raw scores are float sums whose association
+order differs, so they get an allclose with tight rtol.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import CoTMConfig, predict, train_epochs
+from repro.core.cotm import clause_outputs, include_mask
+from repro.data.synthetic import prototype
+from repro.impact import IMPACTConfig, build_system
+from repro.impact.pipeline import IMPACTSystem
+from repro.impact.yflash import I_CSA_THRESHOLD, read_current
+from repro.kernels import ops, ref
+
+# (B, K, n, M, R, tr, C, tc, S, sr) — mix of single-tile, R>1/S>1 shard
+# splits, ragged (non-multiple-of-block) shapes, and unequal clause-axis
+# paddings between the clause tile (C*tc) and class tile (S*sr).
+SHARD_SHAPES = [
+    (4, 100, 50, 10, 1, 128, 1, 64, 1, 64),
+    (37, 300, 77, 3, 2, 150, 3, 30, 5, 16),       # R>1, S>1, ragged
+    (8, 520, 500, 10, 3, 200, 2, 256, 1, 2048),   # class pad >> clause pad
+    (1, 1568, 500, 10, 1, 2048, 1, 512, 1, 2048), # paper MNIST layout
+    (16, 64, 33, 4, 2, 32, 3, 11, 4, 9),          # tiny ragged everything
+]
+
+
+def _make_system(B, K, n, M, R, tr, C, tc, S, sr, seed=0, density=0.05):
+    """Synthetic programmed system in the physical current regime."""
+    rng = np.random.default_rng(seed)
+    lit = jnp.asarray(rng.random((B, K)) < 0.5)
+    include = rng.random((R * tr, C * tc)) < density
+    include[K:, :] = False                   # literal padding rows
+    include[:, n:] = False                   # clause padding columns
+    g = np.where(include, 2.5e-6 * (1 + 0.05 * rng.standard_normal(include.shape)),
+                 0.9e-9 * (1 + 0.05 * rng.standard_normal(include.shape)))
+    clause_g = jnp.asarray(g.reshape(R, tr, C, tc).transpose(0, 2, 1, 3),
+                           jnp.float32)
+    nonempty = jnp.asarray(include[:, :C * tc].any(axis=0))
+    wg = rng.uniform(1e-9, 2.5e-6, (S, sr, M))
+    wg[:, :, :] *= (np.arange(S * sr).reshape(S, sr, 1) < n)  # pad rows dead
+    class_g = jnp.asarray(wg, jnp.float32)
+    system = IMPACTSystem(
+        clause_g=clause_g, nonempty=nonempty, class_g=class_g,
+        clause_i=read_current(clause_g), class_i=read_current(class_g),
+        n_literals=K, n_clauses=n, n_classes=M, cfg=IMPACTConfig(),
+        encode_stats=dict(program_energy_j=0.0, erase_energy_j=0.0))
+    return lit, system
+
+
+@pytest.mark.parametrize("B,K,n,M,R,tr,C,tc,S,sr", SHARD_SHAPES)
+def test_fused_impact_matches_oracle(B, K, n, M, R, tr, C, tc, S, sr):
+    lit, sys_ = _make_system(B, K, n, M, R, tr, C, tc, S, sr)
+    want = ref.fused_impact_ref(lit, sys_.clause_i, sys_.nonempty,
+                                sys_.class_i, thresh=I_CSA_THRESHOLD)
+    got = ops.fused_impact(lit, sys_.clause_i, sys_.nonempty, sys_.class_i,
+                           thresh=I_CSA_THRESHOLD)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(got, -1)),
+                                  np.asarray(jnp.argmax(want, -1)))
+
+
+@pytest.mark.parametrize("B,K,n,M,R,tr,C,tc,S,sr", SHARD_SHAPES)
+def test_clause_bits_parity(B, K, n, M, R, tr, C, tc, S, sr):
+    """Staged pallas clause stage == einsum oracle, bit-exact."""
+    lit, sys_ = _make_system(B, K, n, M, R, tr, C, tc, S, sr, seed=1)
+    f_p, i_p = sys_.clause_bits(lit, impl="pallas")
+    f_x, i_x = sys_.clause_bits(lit, impl="xla")
+    np.testing.assert_array_equal(np.asarray(f_p), np.asarray(f_x))
+    # f32 chunked accumulation over up to R*tr rows reassociates the sum:
+    # worst-case relative drift ~n_rows * eps_f32 (~2e-4 at 2048 rows).
+    np.testing.assert_allclose(np.asarray(i_p), np.asarray(i_x), rtol=1e-3)
+
+
+@pytest.mark.parametrize("B,K,n,M,R,tr,C,tc,S,sr", SHARD_SHAPES[:3])
+def test_class_scores_parity(B, K, n, M, R, tr, C, tc, S, sr):
+    lit, sys_ = _make_system(B, K, n, M, R, tr, C, tc, S, sr, seed=2)
+    fired, _ = sys_.clause_bits(lit, impl="xla")
+    s_p, i_p = sys_.class_scores(fired, impl="pallas")
+    s_x, i_x = sys_.class_scores(fired, impl="xla")
+    np.testing.assert_allclose(np.asarray(s_p), np.asarray(s_x), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(i_p), np.asarray(i_x), rtol=1e-6)
+
+
+@pytest.mark.parametrize("B,K,n,M,R,tr,C,tc,S,sr", SHARD_SHAPES)
+def test_system_predict_parity(B, K, n, M, R, tr, C, tc, S, sr):
+    lit, sys_ = _make_system(B, K, n, M, R, tr, C, tc, S, sr, seed=3)
+    np.testing.assert_array_equal(
+        np.asarray(sys_.predict(lit, impl="pallas")),
+        np.asarray(sys_.predict(lit, impl="xla")))
+
+
+def test_all_empty_clause_columns():
+    """A tile with NO programmed clause must fire nothing and score zero
+    (every column current is pure LCS leakage, masked by nonempty)."""
+    B, K, n, M = 8, 96, 40, 5
+    lit, sys_ = _make_system(B, K, n, M, 2, 64, 1, 64, 1, 64,
+                             seed=4, density=0.0)
+    assert not bool(sys_.nonempty.any())
+    for impl in ("pallas", "xla"):
+        fired, _ = sys_.clause_bits(lit, impl=impl)
+        assert not bool(fired.any()), impl
+        scores = (ops.fused_impact(lit, sys_.clause_i, sys_.nonempty,
+                                   sys_.class_i, thresh=I_CSA_THRESHOLD)
+                  if impl == "pallas" else
+                  ref.fused_impact_ref(lit, sys_.clause_i, sys_.nonempty,
+                                       sys_.class_i,
+                                       thresh=I_CSA_THRESHOLD))
+        np.testing.assert_array_equal(np.asarray(scores),
+                                      np.zeros((B, M), np.float32))
+
+
+@settings(max_examples=15, deadline=None)
+@given(B=st.integers(1, 24), K=st.integers(1, 200), n=st.integers(1, 90),
+       M=st.integers(1, 12), R=st.integers(1, 3), S=st.integers(1, 3),
+       density=st.floats(0.0, 0.4), seed=st.integers(0, 2 ** 16))
+def test_fused_impact_property(B, K, n, M, R, S, density, seed):
+    """Property sweep: random shard factorizations stay oracle-exact."""
+    tr = -(-K // R)
+    C = 1 + seed % 3
+    tc = -(-n // C)
+    sr = -(-n // S)
+    lit, sys_ = _make_system(B, K, n, M, R, tr, C, tc, S, sr,
+                             seed=seed, density=density)
+    want = ref.fused_impact_ref(lit, sys_.clause_i, sys_.nonempty,
+                                sys_.class_i, thresh=I_CSA_THRESHOLD)
+    got = ops.fused_impact(lit, sys_.clause_i, sys_.nonempty, sys_.class_i,
+                           thresh=I_CSA_THRESHOLD)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(got, -1)),
+                                  np.asarray(jnp.argmax(want, -1)))
+
+
+# --- golden end-to-end: digital CoTM == analog IMPACT (paper Fig. 4) -------
+
+@pytest.fixture(scope="module")
+def golden_trained():
+    cfg = CoTMConfig(n_literals=128, n_clauses=64, n_classes=4,
+                     n_states=64, threshold=16, specificity=4.0)
+    x, y = prototype(768, n_classes=4, n_features=64, flip=0.05)
+    lits = jnp.asarray(np.concatenate([x, 1 - x], -1).astype(bool))
+    params = train_epochs(cfg.init(jax.random.key(0)), lits,
+                          jnp.asarray(y), jax.random.key(1), cfg,
+                          epochs=8, batch_size=64)
+    return cfg, params, lits
+
+
+@pytest.mark.parametrize("impl", ["pallas", "xla"])
+def test_golden_analog_matches_digital(golden_trained, impl):
+    """Ideal devices (variability=False) + fine-tuned weight mapping must
+    reproduce the digital CoTM decisions exactly — clause bits AND
+    predictions (the Fig. 4 crossbar/logic equivalence)."""
+    cfg, params, lits = golden_trained
+    system = build_system(params, cfg, jax.random.key(2),
+                          IMPACTConfig(variability=False, finetune=True))
+    dig_pred = np.asarray(predict(params, lits, cfg))
+    inc = include_mask(params.ta_state, cfg.n_states)
+    dig_clauses = np.asarray(clause_outputs(lits, inc))
+
+    ana_pred = np.asarray(system.predict(lits, impl=impl))
+    fired, _ = system.clause_bits(lits, impl=impl)
+    np.testing.assert_array_equal(
+        np.asarray(fired)[:, :cfg.n_clauses], dig_clauses)
+    np.testing.assert_array_equal(ana_pred, dig_pred)
+
+
+def test_infer_with_report_consistent_across_impls(golden_trained):
+    """Energy metering rides the staged path; both impls must report the
+    same physics (same currents => same joules) and the same preds."""
+    cfg, params, lits = golden_trained
+    system = build_system(params, cfg, jax.random.key(2),
+                          IMPACTConfig(variability=False, finetune=True))
+    p_p, rep_p = system.infer_with_report(lits[:64], impl="pallas")
+    p_x, rep_x = system.infer_with_report(lits[:64], impl="xla")
+    np.testing.assert_array_equal(np.asarray(p_p), np.asarray(p_x))
+    assert rep_p.read_energy_j > 0
+    np.testing.assert_allclose(rep_p.read_energy_j, rep_x.read_energy_j,
+                               rtol=1e-5)
+    np.testing.assert_allclose(rep_p.clause_energy_j, rep_x.clause_energy_j,
+                               rtol=1e-5)

@@ -49,10 +49,19 @@ def test_weight_targets_monotone():
 
 def test_class_tile_preserves_argmax(rng):
     """Analog weight mapping must keep the winning class (Fig. 13:
-    96.2% accuracy after pre-tune alone)."""
+    96.2% accuracy after pre-tune alone).
+
+    The paper's tolerance band is +/-5 SEGMENTS per cell, i.e. ~+/-5
+    weight units regardless of weight scale — so argmax survives exactly
+    when score margins clear the resulting ~sqrt(2*n_fired)*3 unit noise
+    floor.  Trained CoTMs have such margins (that is Fig. 13's regime);
+    i.i.d. random weights do not, they are mostly near-ties.  Model the
+    trained regime with class-distinctive weight blocks."""
     n, m, B = 128, 10, 64
-    w = jnp.asarray(rng.integers(-40, 40, (m, n)), jnp.int32)
-    w_uni, _ = to_unipolar(w)
+    w = rng.integers(-10, 10, (m, n))
+    for i in range(m):
+        w[i, i * (n // m):(i + 1) * (n // m)] += 120
+    w_uni, _ = to_unipolar(jnp.asarray(w, jnp.int32))
     tile, stats = encode_class_tile(w_uni.T, jax.random.key(3))
     clauses = jnp.asarray(rng.random((B, n)) < 0.3)
     got = np.asarray(tile.predict(clauses))
