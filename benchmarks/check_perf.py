@@ -1,0 +1,112 @@
+"""CI perf gate: fail when samples/s regresses against a committed baseline.
+
+Usage:
+    python benchmarks/check_perf.py CURRENT.json BASELINE.json \
+        [--max-regression 0.30] [--serve BENCH_serve.json]
+
+Compares the ``normalized`` samples/s ratios of ``BENCH_throughput.json``
+(each path's samples/s divided by its impl family's in-run reference at
+the smallest batch) rather than raw samples/s: a machine-speed difference
+between the baseline machine and the CI runner cancels out within a
+family (Pallas interpret mode and multithreaded XLA scale differently
+with core count, so families are never cross-ratioed), while a
+batch-scaling or engine-overhead regression local to one path does not.
+A key is a failure when its ratio drops more than ``--max-regression``
+(default 30%) below baseline, or when it disappears from the current
+run.  A cpu-count mismatch between baseline and current machines is
+printed as a warning — if the runner class changes, refresh
+``benchmarks/baselines/`` from the perf-smoke artifact of a trusted run.
+
+With ``--serve`` the gate also enforces the continuous-batching
+acceptance invariant recorded in ``BENCH_serve.json``: continuous p95
+per-request latency strictly below flush-to-completion p95 on the same
+Poisson trace.
+
+Stdlib-only on purpose — runs before (and regardless of) the jax install.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check_throughput(current: dict, baseline: dict,
+                     max_regression: float) -> list[str]:
+    failures = []
+    cur = current.get("normalized", {})
+    base = baseline.get("normalized", {})
+    if not base:
+        failures.append("baseline has no 'normalized' section")
+    b_cpu = baseline.get("machine", {}).get("cpu_count")
+    c_cpu = current.get("machine", {}).get("cpu_count")
+    if b_cpu != c_cpu:
+        print(f"  WARNING: baseline machine had cpu_count={b_cpu}, this "
+              f"run has {c_cpu} — within-family ratios should still hold, "
+              f"but refresh the baseline if the runner class changed")
+    for key, b in sorted(base.items()):
+        c = cur.get(key)
+        if c is None:
+            failures.append(f"{key}: missing from current run")
+            continue
+        floor = b * (1.0 - max_regression)
+        verdict = "FAIL" if c < floor else "ok"
+        print(f"  {key:24s} baseline {b:8.3f}  current {c:8.3f}  "
+              f"floor {floor:8.3f}  {verdict}")
+        if c < floor:
+            failures.append(
+                f"{key}: normalized samples/s {c:.3f} < floor {floor:.3f} "
+                f"(baseline {b:.3f}, max regression {max_regression:.0%})")
+    return failures
+
+
+def check_serve(serve: dict) -> list[str]:
+    p95_c = serve["continuous"]["p95_s"]
+    p95_f = serve["flush"]["p95_s"]
+    shed = serve["continuous"].get("shed", 0)
+    print(f"  serve p95: continuous {p95_c * 1e3:.2f} ms, "
+          f"flush {p95_f * 1e3:.2f} ms "
+          f"(ratio {serve.get('p95_ratio_flush_over_continuous', 0):.2f}x)")
+    failures = []
+    if not p95_c < p95_f:
+        failures.append(
+            f"continuous p95 {p95_c:.4f}s is not below flush p95 "
+            f"{p95_f:.4f}s")
+    if shed:
+        failures.append(f"continuous scheduler shed {shed} requests")
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="BENCH_throughput.json from this run")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("--max-regression", type=float, default=0.30,
+                    help="tolerated fractional drop in normalized "
+                         "samples/s (default 0.30)")
+    ap.add_argument("--serve", default=None,
+                    help="BENCH_serve.json to gate the continuous-vs-flush "
+                         "p95 invariant")
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    print(f"perf gate: {args.current} vs {args.baseline} "
+          f"(max regression {args.max_regression:.0%})")
+    failures = check_throughput(current, baseline, args.max_regression)
+    if args.serve:
+        with open(args.serve) as f:
+            failures += check_serve(json.load(f))
+    if failures:
+        print("\nPERF GATE FAILED:")
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+    print("perf gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

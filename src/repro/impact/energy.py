@@ -20,6 +20,7 @@ from __future__ import annotations
 import dataclasses
 
 import jax.numpy as jnp
+import numpy as np
 
 from .yflash import T_READ, V_READ
 
@@ -64,6 +65,36 @@ class EnergyReport:
 def read_energy_from_currents(currents: Array) -> Array:
     """E = V_R * I * t_read summed over columns — the paper's measurement."""
     return (V_READ * currents * T_READ).sum(axis=-1)
+
+
+def per_lane_read_energy(i_clause_lane: Array, i_class_lane: Array,
+                         ) -> tuple[Array, Array]:
+    """Per-request read-energy attribution: lane-summed crossbar currents
+    (B,) -> (clause joules (B,), class joules (B,)).  Same E = V_R * I *
+    t_read accounting as the batch meters, kept per lane so a serving
+    scheduler can bill each request for exactly the current its datapoint
+    drew (padding/invalid lanes arrive pre-masked to zero)."""
+    return (V_READ * i_clause_lane * T_READ,
+            V_READ * i_class_lane * T_READ)
+
+
+def report_from_lane_energies(e_clause_lanes: Array, e_class_lanes: Array, *,
+                              program_energy_j: float, erase_energy_j: float,
+                              latency_s: float, ops_per_datapoint: float,
+                              datapoints: int) -> "EnergyReport":
+    """Fold per-lane (per-request) read energies into a batch-level
+    ``EnergyReport`` — the aggregation point where request attribution and
+    the paper's per-batch accounting provably agree (sum of lanes == batch
+    meter)."""
+    e_cl = float(np.asarray(e_clause_lanes, dtype=np.float64).sum())
+    e_cs = float(np.asarray(e_class_lanes, dtype=np.float64).sum())
+    return EnergyReport(
+        read_energy_j=e_cl + e_cs,
+        clause_energy_j=e_cl, class_energy_j=e_cs,
+        program_energy_j=program_energy_j, erase_energy_j=erase_energy_j,
+        latency_s=latency_s,
+        ops_crosspoint=ops_per_datapoint * datapoints,
+        datapoints=datapoints)
 
 
 def encode_energy(n_program_pulses: Array, n_erase_pulses: Array,

@@ -23,6 +23,12 @@ other kernels) and the staged entry points through ``kernels.crossbar_mvm``
 per shard; ``impl="xla"`` runs the pure-einsum oracles from ``kernels.ref``
 for A/B testing.  Energy accounting rides the staged path, where the shard
 column currents the paper meters are explicit.
+
+``infer_step`` is the continuous-batching entry point: one crossbar sweep
+over a fixed-capacity slot-table buffer with a validity mask, returning
+per-lane (per-request) read energies so the serving scheduler
+(``serve.impact_engine``) can admit/release lanes between sweeps and bill
+each request individually.
 """
 from __future__ import annotations
 
@@ -104,6 +110,37 @@ def _predict(literals: Array, clause_i: Array, nonempty: Array,
     return jnp.argmax(scores, axis=-1)
 
 
+@partial(jax.jit, static_argnames=("impl", "thresh", "meter"))
+def _infer_step(literals: Array, clause_i: Array, nonempty: Array,
+                class_i: Array, valid: Array, *, impl: str, thresh: float,
+                meter: bool) -> tuple[Array, Array, Array]:
+    """One scheduler step over a fixed-capacity slot table: classify every
+    lane of the (capacity, K) literal buffer in a single crossbar sweep.
+
+    -> (preds (B,), per-lane clause read energy (B,) J, per-lane class
+    read energy (B,) J).  ``valid`` (B,) marks occupied lanes; free lanes
+    hold all-1 literals (rows float, no current) and are metered at
+    exactly zero, so admitting a request into a free slot mid-serve never
+    perturbs other lanes' scores or bills.  With ``meter=False`` the step
+    runs the fused kernel (max-throughput path) and the energy outputs are
+    zeros.
+    """
+    B = literals.shape[0]
+    if not meter:
+        scores = ops.fused_impact(literals, clause_i, nonempty, class_i,
+                                  thresh=thresh, impl=impl)
+        zeros = jnp.zeros((B,), jnp.float32)
+        return jnp.argmax(scores, axis=-1), zeros, zeros
+    fired, i_clause = _clause_bits(literals, clause_i, nonempty,
+                                   impl=impl, thresh=thresh)
+    fired = jnp.logical_and(fired, valid[:, None])
+    i_clause = i_clause * valid[:, None, None, None]
+    scores, i_class = _class_scores(fired, class_i, impl=impl)
+    e_cl, e_cs = energy_mod.per_lane_read_energy(
+        i_clause.sum(axis=(1, 2, 3)), i_class.sum(axis=(1, 2)))
+    return jnp.argmax(scores, axis=-1), e_cl, e_cs
+
+
 @partial(jax.jit, static_argnames=("impl", "thresh"))
 def _infer_metered(literals: Array, clause_i: Array, nonempty: Array,
                    class_i: Array, valid: Array | None, *, impl: str,
@@ -168,6 +205,39 @@ class IMPACTSystem:
         self._check_impl(impl)
         return _predict(literals, self.clause_i, self._nonempty_eff(),
                         self.class_i, impl=impl, thresh=I_CSA_THRESHOLD)
+
+    def infer_step(self, literals: Array, valid: Array, *,
+                   impl: str = "pallas", meter: bool = False,
+                   ) -> tuple[Array, Array, Array]:
+        """Per-step entry point for the continuous-batching scheduler: one
+        crossbar sweep over a fixed-shape slot-table buffer.  Jits once per
+        (capacity, impl, meter) — the host-side scheduler calls it every
+        step with the same shape, so admission patterns never retrace.
+
+        -> (preds (B,), per-lane clause energy (B,) J, per-lane class
+        energy (B,) J); energies are zeros when ``meter=False`` (fused
+        kernel path)."""
+        self._check_impl(impl)
+        return _infer_step(literals, self.clause_i, self._nonempty_eff(),
+                           self.class_i, jnp.asarray(valid), impl=impl,
+                           thresh=I_CSA_THRESHOLD, meter=meter)
+
+    def step_report(self, e_clause_lanes: Array, e_class_lanes: Array,
+                    datapoints: int) -> EnergyReport:
+        """Fold one step's per-lane read energies (from ``infer_step``)
+        into the paper's batch-level ``EnergyReport``; per-request
+        attribution sums exactly to the batch meter."""
+        lat = energy_mod.inference_latency(
+            n_clause_cols=min(self.clause_g.shape[3], self.n_clauses),
+            n_class_cols=self.n_classes, clause_tiles_parallel=1)
+        return energy_mod.report_from_lane_energies(
+            e_clause_lanes, e_class_lanes,
+            program_energy_j=self.encode_stats["program_energy_j"],
+            erase_energy_j=self.encode_stats["erase_energy_j"],
+            latency_s=lat,
+            ops_per_datapoint=(self.n_literals * self.n_clauses
+                               + self.n_clauses * self.n_classes),
+            datapoints=datapoints)
 
     def infer_with_report(self, literals: Array, *,
                           impl: str = "pallas",

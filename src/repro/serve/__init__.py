@@ -1,6 +1,12 @@
-"""Serving: prefill/decode engine, request batching, IMPACT inference."""
-from .engine import BatchingQueue, Engine, Request, ServeConfig
-from .impact_engine import BatchStats, IMPACTEngine, aggregate_reports
+"""Serving: prefill/decode engine, request batching + continuous-batching
+slot table, IMPACT crossbar inference."""
+from .engine import (Backpressure, BatchingQueue, Engine, Request,
+                     ServeConfig, SlotTable, latency_percentiles)
+from .impact_engine import (BatchStats, IMPACTEngine, RequestRecord,
+                            aggregate_reports, poisson_arrivals,
+                            replay_trace)
 
 __all__ = ["Engine", "ServeConfig", "BatchingQueue", "Request",
-           "IMPACTEngine", "BatchStats", "aggregate_reports"]
+           "SlotTable", "Backpressure", "latency_percentiles",
+           "IMPACTEngine", "BatchStats", "RequestRecord",
+           "aggregate_reports", "poisson_arrivals", "replay_trace"]

@@ -7,17 +7,22 @@ functions are the same entry points the multi-pod dry-run lowers, so what
 serves here is exactly what was proven to shard.
 
 Request batching: ``generate`` takes equal-length prompt batches (the
-benchmark/test regime).  ``BatchingQueue`` provides the production front:
-requests accumulate until ``max_batch`` or ``max_wait_s`` and are padded to
-a shared length with a validity mask (continuous batching — slot reuse on
-completion — is scoped in DESIGN.md).
+benchmark/test regime).  ``BatchingQueue`` provides the accumulate-and-
+flush front; ``SlotTable`` + ``Engine.serve_continuous`` provide the
+continuous-batching front — a fixed-capacity lane table where finished
+requests release their slot and new requests are admitted between decode
+steps, so a late arrival never waits out the whole in-flight batch.  The
+same ``SlotTable`` drives the IMPACT crossbar front
+(``serve.impact_engine``): both engines share admission, release, and
+per-request latency semantics.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from functools import partial
-from typing import Any, Callable
+from typing import Any, Callable, Iterator, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -26,11 +31,123 @@ import numpy as np
 Array = jax.Array
 
 
+class Backpressure(RuntimeError):
+    """Raised when an engine cannot accept more work: every slot is
+    occupied and the admission queue is at capacity.  Callers shed load or
+    retry after a ``step``; ``try_submit`` converts it to ``None``."""
+
+
+def latency_percentiles(latencies_s: Sequence[float]) -> dict[str, float]:
+    """Tail-latency summary (p50/p95/p99/mean/max seconds) of a sample."""
+    if len(latencies_s) == 0:
+        return {}
+    a = np.asarray(latencies_s, dtype=float)
+    return {
+        "p50_s": float(np.percentile(a, 50)),
+        "p95_s": float(np.percentile(a, 95)),
+        "p99_s": float(np.percentile(a, 99)),
+        "mean_s": float(a.mean()),
+        "max_s": float(a.max()),
+        "n": int(a.size),
+    }
+
+
+class SlotTable:
+    """Fixed-capacity lane table for continuous batching.
+
+    Each slot holds one in-flight request (any payload).  ``admit`` places
+    a payload in the lowest free slot (stable lane indices keep device-side
+    state — KV-cache lanes, literal buffers — aligned with the table);
+    ``release`` frees it; ``valid_mask`` derives the per-lane validity
+    vector from occupancy, which is exactly the mask the padded kernels
+    consume.  ``compact`` densifies occupied lanes into a prefix and
+    returns the (src, dst) moves so callers can permute device buffers the
+    same way.
+    """
+
+    def __init__(self, capacity: int):
+        if capacity <= 0:
+            raise ValueError(f"capacity must be positive, got {capacity}")
+        self.capacity = capacity
+        self.slots: list[Any | None] = [None] * capacity
+        self._n = 0
+
+    @property
+    def occupancy(self) -> int:
+        return self._n
+
+    @property
+    def free(self) -> int:
+        return self.capacity - self._n
+
+    def free_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def occupied(self) -> Iterator[tuple[int, Any]]:
+        return ((i, s) for i, s in enumerate(self.slots) if s is not None)
+
+    def admit(self, item: Any) -> int:
+        """Place ``item`` in the lowest free slot; raises Backpressure when
+        the table is full."""
+        for i, s in enumerate(self.slots):
+            if s is None:
+                self.slots[i] = item
+                self._n += 1
+                return i
+        raise Backpressure(f"all {self.capacity} slots occupied")
+
+    def release(self, i: int) -> Any:
+        item = self.slots[i]
+        if item is None:
+            raise KeyError(f"slot {i} is already free")
+        self.slots[i] = None
+        self._n -= 1
+        return item
+
+    def valid_mask(self) -> np.ndarray:
+        return np.array([s is not None for s in self.slots], dtype=bool)
+
+    def compact(self) -> list[tuple[int, int]]:
+        """Move occupied slots into a dense prefix (stable order); returns
+        the (src, dst) lane moves applied."""
+        moves: list[tuple[int, int]] = []
+        dst = 0
+        for src in range(self.capacity):
+            if self.slots[src] is None:
+                continue
+            if src != dst:
+                self.slots[dst] = self.slots[src]
+                self.slots[src] = None
+                moves.append((src, dst))
+            dst += 1
+        return moves
+
+
 @dataclasses.dataclass
 class ServeConfig:
     max_len: int = 512
     temperature: float = 0.0        # 0 => greedy
     eos_id: int | None = None
+
+
+def _scatter_cache(cache, cache_axes, new_cache, src_rows, dst_rows):
+    """Write lane ``src_rows[j]`` of ``new_cache`` into lane ``dst_rows[j]``
+    of ``cache`` on every leaf.  The batch axis is not leading on every
+    leaf (layer-stacked KV leaves are (layers, batch, ...)), so each leaf's
+    lane axis is located via the model's ``cache_axes`` pytree."""
+    leaves, treedef = jax.tree.flatten(cache)
+    new_leaves = jax.tree.leaves(new_cache)
+    ax_leaves = jax.tree.leaves(cache_axes,
+                                is_leaf=lambda x: isinstance(x, tuple))
+    assert len(leaves) == len(new_leaves) == len(ax_leaves)
+    src = jnp.asarray(src_rows)
+    dst = jnp.asarray(dst_rows)
+    out = []
+    for c, n, ax in zip(leaves, new_leaves, ax_leaves):
+        b = ax.index("batch")
+        pre = (slice(None),) * b
+        out.append(c.at[pre + (dst,)].set(n[pre + (src,)]))
+    return jax.tree.unflatten(treedef, out)
 
 
 class Engine:
@@ -81,6 +198,97 @@ class Engine:
             decode_tok_per_s=B * max(n_tokens - 1, 1) / max(t_decode, 1e-9))
         return gen, stats
 
+    # -- continuous batching ------------------------------------------------
+    def _is_eos(self, tok: np.ndarray) -> bool:
+        if self.cfg.eos_id is None:
+            return False
+        return int(np.asarray(tok).ravel()[0]) == self.cfg.eos_id
+
+    def serve_continuous(self, requests: list["Request"], *,
+                         capacity: int = 4, seed: int = 0,
+                         ) -> tuple[dict[int, np.ndarray], dict]:
+        """Continuous-batching decode: a ``SlotTable`` of ``capacity`` lanes
+        where a request releases its slot the step it finishes (``max_new``
+        or EOS) and queued requests are admitted into freed lanes between
+        decode steps — no flush-and-drain, so short requests never wait out
+        long co-batched ones.
+
+        Admission prefills the newcomers as a full-capacity batch (one
+        compiled prefill shape) and lane-scatters their cache into the live
+        cache at the admitted slots.  Prompts must share one length (the
+        equal-length regime ``generate`` serves); per-request end-to-end
+        latency percentiles come back in the stats.
+
+        Returns ({rid: generated tokens (n_i, ...)}, stats).
+        """
+        assert requests, "no requests"
+        S = requests[0].tokens.shape[0]
+        assert all(r.tokens.shape[0] == S for r in requests), \
+            "serve_continuous requires equal-length prompts"
+        axes = self.model.cache_axes()
+        table = SlotTable(capacity)
+        pending = collections.deque(requests)
+        trail = requests[0].tokens.shape[1:]
+        tok = np.zeros((capacity, 1) + trail, np.int32)
+        pos = np.zeros((capacity,), np.int32)
+        n_gen = np.zeros((capacity,), np.int32)
+        key = jax.random.PRNGKey(seed)
+        cache = None
+        out: dict[int, list[np.ndarray]] = {}
+        lat: dict[int, float] = {}
+        t0 = time.time()
+        steps = 0
+
+        def finish(slot: int, req: Request) -> None:
+            table.release(slot)
+            lat[req.rid] = time.time() - req.arrived
+
+        while pending or table.occupancy:
+            free = table.free_slots()
+            if pending and free:
+                k = min(len(free), len(pending))
+                reqs = [pending.popleft() for _ in range(k)]
+                # Full-capacity prefill batch (rows >= k repeat the last
+                # newcomer so the prefill jit sees exactly one shape);
+                # only rows < k are scattered into lanes.
+                ptoks = np.stack([reqs[min(i, k - 1)].tokens
+                                  for i in range(capacity)])
+                ppos = np.broadcast_to(np.arange(S)[None], (capacity, S))
+                key, sub = jax.random.split(key)
+                logits, new_cache = self._prefill(
+                    self.params, jnp.asarray(ptoks), jnp.asarray(ppos))
+                first = np.asarray(self._sample(logits, sub))
+                slots = [table.admit(r) for r in reqs]
+                base = cache if cache is not None else new_cache
+                cache = _scatter_cache(base, axes, new_cache,
+                                       np.arange(k), np.asarray(slots))
+                for i, (s, r) in enumerate(zip(slots, reqs)):
+                    out[r.rid] = [first[i]]
+                    tok[s] = first[i]
+                    pos[s] = S
+                    n_gen[s] = 1
+                    if n_gen[s] >= r.max_new or self._is_eos(first[i]):
+                        finish(s, r)
+            if table.occupancy:
+                key, sub = jax.random.split(key)
+                logits, cache = self._decode(
+                    self.params, cache, jnp.asarray(tok),
+                    jnp.asarray(pos)[:, None])
+                nxt = np.asarray(self._sample(logits, sub))
+                steps += 1
+                for s, r in list(table.occupied()):
+                    out[r.rid].append(nxt[s])
+                    tok[s] = nxt[s]
+                    pos[s] += 1
+                    n_gen[s] += 1
+                    if n_gen[s] >= r.max_new or self._is_eos(nxt[s]):
+                        finish(s, r)
+        gen = {rid: np.concatenate(toks, axis=0) for rid, toks in out.items()}
+        stats = dict(decode_steps=steps, wall_s=time.time() - t0,
+                     requests=len(requests), capacity=capacity,
+                     latency=latency_percentiles(list(lat.values())))
+        return gen, stats
+
 
 @dataclasses.dataclass
 class Request:
@@ -91,11 +299,15 @@ class Request:
 
 
 class BatchingQueue:
-    """Request accumulator: flushes when full or stale."""
+    """Request accumulator: flushes when full or stale.  ``clock`` is the
+    same injectable time source the owning engine stamps requests with, so
+    staleness is measured on one clock."""
 
-    def __init__(self, max_batch: int = 8, max_wait_s: float = 0.05):
+    def __init__(self, max_batch: int = 8, max_wait_s: float = 0.05,
+                 clock: Callable[[], float] = time.time):
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
+        self.clock = clock
         self.pending: list[Request] = []
 
     def add(self, req: Request):
@@ -106,11 +318,17 @@ class BatchingQueue:
             return False
         if len(self.pending) >= self.max_batch:
             return True
-        return (time.time() - self.pending[0].arrived) >= self.max_wait_s
+        return (self.clock() - self.pending[0].arrived) >= self.max_wait_s
 
     def take(self) -> list[Request]:
         batch, self.pending = (self.pending[:self.max_batch],
                                self.pending[self.max_batch:])
+        return batch
+
+    def take_n(self, n: int) -> list[Request]:
+        """Dequeue up to ``n`` requests FIFO (continuous-batching admission
+        takes exactly as many as there are free slots)."""
+        batch, self.pending = self.pending[:n], self.pending[n:]
         return batch
 
     @staticmethod

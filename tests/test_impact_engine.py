@@ -100,7 +100,8 @@ def test_bucket_selection():
 
 def test_flush_on_full_and_stale(small_system):
     system, lits = small_system
-    eng = IMPACTEngine(system, impl="xla", max_batch=4, max_wait_s=10.0)
+    eng = IMPACTEngine(system, impl="xla", mode="flush", max_batch=4,
+                       max_wait_s=10.0)
     for i in range(3):
         eng.submit(lits[i])
     assert eng.step() == []                # 3 < max_batch, not stale
