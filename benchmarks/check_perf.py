@@ -22,6 +22,12 @@ acceptance invariant recorded in ``BENCH_serve.json``: continuous p95
 per-request latency strictly below flush-to-completion p95 on the same
 Poisson trace.
 
+When the current run carries a ``sharded`` section (multi-device hosts:
+the CI multi-device leg runs the benchmark under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``), the gate also
+requires argmax parity between the shard_map crossbar lowering and the
+single-device kernel, and prints the sharded/single throughput ratios.
+
 Stdlib-only on purpose — runs before (and regardless of) the jax install.
 """
 from __future__ import annotations
@@ -60,6 +66,30 @@ def check_throughput(current: dict, baseline: dict,
     return failures
 
 
+def check_sharded(current: dict) -> list[str]:
+    """Gate the sharded-vs-single-device sweep when this run produced one
+    (multi-device hosts; the CI multi-device leg).  Argmax parity between
+    the shard_map lowering and the single-device kernel is a hard
+    invariant; throughput ratios are printed for the record but not
+    floored against a baseline (host-device psum overhead on CPU says
+    nothing about TPU ICI behaviour)."""
+    sharded = current.get("sharded")
+    if not sharded:
+        print("  (no sharded sweep in this run: single-device host)")
+        return []
+    mesh = sharded.get("mesh", {})
+    print(f"  sharded sweep: {sharded.get('n_devices')} devices, "
+          f"mesh {mesh}, grid {sharded.get('grid')}")
+    for b, ratio in sorted(
+            sharded.get("speedup_sharded_over_single", {}).items(),
+            key=lambda kv: int(kv[0].lstrip("b"))):
+        print(f"    {b:8s} sharded/single samples/s ratio {ratio:8.3f}")
+    if not sharded.get("parity_ok"):
+        return ["sharded sweep: shard_map predictions diverged from the "
+                "single-device kernel (parity_ok is false)"]
+    return []
+
+
 def check_serve(serve: dict) -> list[str]:
     p95_c = serve["continuous"]["p95_s"]
     p95_f = serve["flush"]["p95_s"]
@@ -96,6 +126,7 @@ def main(argv: list[str] | None = None) -> int:
     print(f"perf gate: {args.current} vs {args.baseline} "
           f"(max regression {args.max_regression:.0%})")
     failures = check_throughput(current, baseline, args.max_regression)
+    failures += check_sharded(current)
     if args.serve:
         with open(args.serve) as f:
             failures += check_serve(json.load(f))

@@ -20,9 +20,17 @@ Two measurements:
    acceptance artifact: continuous must show lower p95 at equal offered
    load.
 
+3. **Sharded sweep** (multi-device hosts only) — the same predict path
+   from a (data, model=2) mesh via ``sharding.crossbar`` on an R=2/S=2
+   split grid vs the identical split grid on one device, with argmax
+   parity asserted; lands under the ``"sharded"`` key of
+   ``BENCH_throughput.json`` and is exercised by the CI multi-device leg
+   under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
 ``--quick`` shrinks the sweep (B<=32) for the CI perf-smoke job.
 
 CSV rows:  impact_throughput/<impl>_b<B>, us_per_batch, samples_per_s
+           impact_sharded/<single|sharded>_xla_b<B>, us_per_batch, s/s
            impact_serve/<mode>, p95_us, samples_per_s
 """
 from __future__ import annotations
@@ -62,12 +70,12 @@ def _random_cotm(key, K=1568, n=500, m=10, n_states=128, density=0.05):
     return cfg, params
 
 
-def _time_predict(system, lits, impl: str) -> float:
-    preds = system.predict(lits, impl=impl)          # compile + warm cache
+def _time_predict(system, lits, impl: str, mesh=None) -> float:
+    preds = system.predict(lits, impl=impl, mesh=mesh)  # compile + warm
     jax.block_until_ready(preds)
     t0 = time.time()
     for _ in range(REPEATS):
-        jax.block_until_ready(system.predict(lits, impl=impl))
+        jax.block_until_ready(system.predict(lits, impl=impl, mesh=mesh))
     return (time.time() - t0) / REPEATS
 
 
@@ -120,6 +128,55 @@ def throughput_sweep(system, cfg, *, quick: bool) -> dict:
                     for k, v in results.items()})
 
 
+def sharded_sweep(cfg, params, *, quick: bool) -> dict | None:
+    """Sharded-vs-single-device ``predict`` at a Fig. 14 split layout.
+
+    The paper's MNIST layout fits one tile (R=S=1), so the grid is
+    rebuilt with R=2 literal row-shards and S=2 class row-shards and
+    served from a (data, model=2) mesh via ``sharding.crossbar``; the
+    same split system timed without a mesh is the baseline, and argmax
+    parity between the two is asserted and recorded.  Returns None on
+    single-device hosts (the CI multi-device leg runs this with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``; on CPU the
+    numbers gauge partitioning + psum overhead, not TPU speed).
+    """
+    n_dev = jax.device_count()
+    if n_dev < 2 or n_dev % 2:
+        return None
+    from repro.launch.mesh import make_crossbar_mesh
+
+    mesh = make_crossbar_mesh(n_model=2)
+    split = IMPACTConfig(variability=False, finetune=False,
+                         max_tile_rows=cfg.n_literals // 2,
+                         max_class_rows=-(-cfg.n_clauses // 2))
+    system = build_system(params, cfg, jax.random.key(1), split)
+    R, S = system.clause_g.shape[0], system.class_g.shape[0]
+    assert R == 2 and S == 2, (R, S)
+
+    rng = np.random.default_rng(0)
+    results: dict[str, dict] = {}
+    parity_ok = True
+    batch_sizes = QUICK_BATCH_SIZES if quick else BATCH_SIZES
+    for B in batch_sizes:
+        lits = jnp.asarray(rng.random((B, cfg.n_literals)) < 0.5)
+        p_single = np.asarray(system.predict(lits, impl="xla"))
+        p_shard = np.asarray(system.predict(lits, impl="xla", mesh=mesh))
+        parity_ok &= bool((p_single == p_shard).all())
+        for key, m in (("single", None), ("sharded", mesh)):
+            dt = _time_predict(system, lits, "xla", mesh=m)
+            results[f"{key}_xla_b{B}"] = dict(us_per_batch=dt * 1e6,
+                                              samples_per_s=B / dt)
+            emit(f"impact_sharded/{key}_xla_b{B}", dt * 1e6,
+                 f"{B / dt:.1f}")
+    speedup = {f"b{B}": (results[f"sharded_xla_b{B}"]["samples_per_s"]
+                         / results[f"single_xla_b{B}"]["samples_per_s"])
+               for B in batch_sizes}
+    return dict(
+        n_devices=n_dev, mesh={k: int(v) for k, v in mesh.shape.items()},
+        grid=dict(R=R, S=S), quick=quick, parity_ok=parity_ok,
+        results=results, speedup_sharded_over_single=speedup)
+
+
 def serve_comparison(system, cfg, *, n_requests: int, rate_rps: float,
                      capacity: int, flush_wait_s: float, seed: int,
                      impl: str = "xla") -> dict:
@@ -153,6 +210,9 @@ def main(quick: bool = False, json_dir: pathlib.Path | None = None) -> None:
                           IMPACTConfig(variability=False, finetune=False))
 
     bench = throughput_sweep(system, cfg, quick=quick)
+    sharded = sharded_sweep(cfg, params, quick=quick)
+    if sharded is not None:            # multi-device hosts only
+        bench["sharded"] = sharded
     with open(json_dir / "BENCH_throughput.json", "w") as f:
         json.dump(bench, f, indent=2, sort_keys=True)
 

@@ -43,6 +43,7 @@ class EnergyReport:
     latency_s: float
     ops_crosspoint: float
     datapoints: int
+    area_mm2: float | None = None  # occupied crossbar area (system-level)
 
     @property
     def energy_per_datapoint_j(self) -> float:
@@ -59,7 +60,17 @@ class EnergyReport:
 
     @property
     def tops_per_mm2(self) -> float:
-        return 0.0  # filled by the system-level report (needs area)
+        # MAC-equivalent throughput per occupied crossbar area (Table 4 /
+        # Table 6 convention).  Reports built by ``IMPACTSystem`` carry
+        # the system's area; a report without one cannot silently render
+        # a fake 0.0 metric.
+        if self.area_mm2 is None:
+            raise ValueError(
+                "tops_per_mm2 needs the crossbar area: this EnergyReport "
+                "was built without area_mm2 (use IMPACTSystem reports, or "
+                "set area_mm2 from IMPACTSystem.area_mm2())")
+        ops_per_dp = self.ops_crosspoint / max(self.datapoints, 1)
+        return (2 * ops_per_dp / self.latency_s) / 1e12 / self.area_mm2
 
 
 def read_energy_from_currents(currents: Array) -> Array:
@@ -81,7 +92,8 @@ def per_lane_read_energy(i_clause_lane: Array, i_class_lane: Array,
 def report_from_lane_energies(e_clause_lanes: Array, e_class_lanes: Array, *,
                               program_energy_j: float, erase_energy_j: float,
                               latency_s: float, ops_per_datapoint: float,
-                              datapoints: int) -> "EnergyReport":
+                              datapoints: int,
+                              area_mm2: float | None = None) -> "EnergyReport":
     """Fold per-lane (per-request) read energies into a batch-level
     ``EnergyReport`` — the aggregation point where request attribution and
     the paper's per-batch accounting provably agree (sum of lanes == batch
@@ -94,7 +106,7 @@ def report_from_lane_energies(e_clause_lanes: Array, e_class_lanes: Array, *,
         program_energy_j=program_energy_j, erase_energy_j=erase_energy_j,
         latency_s=latency_s,
         ops_crosspoint=ops_per_datapoint * datapoints,
-        datapoints=datapoints)
+        datapoints=datapoints, area_mm2=area_mm2)
 
 
 def encode_energy(n_program_pulses: Array, n_erase_pulses: Array,
@@ -111,6 +123,22 @@ def tile_area_mm2(rows: int, cols: int) -> float:
 
 def inference_latency(n_clause_cols: int, n_class_cols: int,
                       clause_tiles_parallel: int = 1) -> float:
-    """Clause columns stream through the CSA bank sequentially (5 ns each),
-    tiles in parallel; the class tile's m columns read concurrently after."""
-    return (n_clause_cols / max(clause_tiles_parallel, 1)) * T_COLUMN + T_COLUMN
+    """Fig. 14 timing model.  ``n_clause_cols`` counts ALL clause columns
+    of the system; the grid's C column-tiles stream their columns through
+    per-tile CSA banks in parallel (``clause_tiles_parallel = C``), each
+    column taking one 5 ns read cycle, so the clause stage runs for
+    ``ceil(n / C)`` cycles.  The R row-shards of a column evaluate
+    concurrently and AND digitally, so R does not appear.  The class
+    tile's ``n_class_cols`` columns all read concurrently afterwards:
+    one more cycle.
+
+    ``ceil(n / C)`` is the BALANCED column assignment — a deliberate
+    idealization.  ``build_system`` packs columns contiguously (tile 0
+    fills first), whose bottleneck tile streams ``min(tc, n)`` columns:
+    at most one ragged tile's worth (< tc cycles) more than the balanced
+    figure, and identical whenever n is a multiple of C or C == 1 (the
+    Table 4 single-tile anchors).  The balanced model is kept because it
+    is a property of the (R, C) grid alone, matching the paper's
+    modular-scaling argument rather than one encoder's packing order."""
+    tiles = max(clause_tiles_parallel, 1)
+    return -(-n_clause_cols // tiles) * T_COLUMN + T_COLUMN

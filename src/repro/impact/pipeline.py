@@ -29,6 +29,13 @@ over a fixed-capacity slot-table buffer with a validity mask, returning
 per-lane (per-request) read energies so the serving scheduler
 (``serve.impact_engine``) can admit/release lanes between sweeps and bill
 each request individually.
+
+Multi-device: every entry point takes a ``mesh`` (or inherits the
+system-level one from ``build_system(..., mesh=...)``); when the R/S
+shard counts divide the mesh's ``model`` axis, inference runs the
+``sharding.crossbar`` shard_map lowering — the Fig. 14 digital AND and
+ADC+add become the two psums — and falls back to the single-device
+kernels otherwise.
 """
 from __future__ import annotations
 
@@ -43,6 +50,7 @@ import numpy as np
 from ..core.cotm import CoTMConfig, CoTMParams, include_mask, to_unipolar
 from ..kernels import ops, ref
 from ..kernels.ref import pad_to as _pad_to
+from ..sharding import crossbar as crossbar_sh
 from . import energy as energy_mod
 from .energy import EnergyReport
 from .tiles import (ClassTile, ClauseTile, encode_class_tile,
@@ -102,18 +110,41 @@ def _class_scores(clauses: Array, class_i: Array, *,
     return i_col.sum(axis=1), i_col             # digital add
 
 
-@partial(jax.jit, static_argnames=("impl", "thresh"))
+@partial(jax.jit, static_argnames=("impl", "thresh", "mesh"))
 def _predict(literals: Array, clause_i: Array, nonempty: Array,
-             class_i: Array, *, impl: str, thresh: float) -> Array:
+             class_i: Array, *, impl: str, thresh: float,
+             mesh=None) -> Array:
     scores = ops.fused_impact(literals, clause_i, nonempty, class_i,
-                              thresh=thresh, impl=impl)
+                              thresh=thresh, impl=impl, mesh=mesh)
     return jnp.argmax(scores, axis=-1)
 
 
-@partial(jax.jit, static_argnames=("impl", "thresh", "meter"))
+def _metered_scores(literals: Array, clause_i: Array, nonempty: Array,
+                    class_i: Array, valid: Array | None, *, impl: str,
+                    thresh: float, mesh) -> tuple[Array, Array, Array]:
+    """Shared metered core: -> (scores (B, m), per-lane summed clause
+    currents (B,), per-lane summed class currents (B,)).  The ONE place
+    that routes between the shard_map lowering (mesh can hold the R/S
+    grid) and the single-device staged path — keep the routing predicate
+    here so every metered caller shards (or falls back) identically."""
+    if mesh is not None and crossbar_sh.shardable(
+            mesh, clause_i.shape[0], class_i.shape[0]):
+        return crossbar_sh.fused_impact_shmap(
+            literals, clause_i, nonempty, class_i, thresh=thresh,
+            mesh=mesh, impl=impl, valid=valid, meter=True)
+    fired, i_clause = _clause_bits(literals, clause_i, nonempty,
+                                   impl=impl, thresh=thresh)
+    if valid is not None:
+        fired = jnp.logical_and(fired, valid[:, None])
+        i_clause = i_clause * valid[:, None, None, None]
+    scores, i_class = _class_scores(fired, class_i, impl=impl)
+    return scores, i_clause.sum(axis=(1, 2, 3)), i_class.sum(axis=(1, 2))
+
+
+@partial(jax.jit, static_argnames=("impl", "thresh", "meter", "mesh"))
 def _infer_step(literals: Array, clause_i: Array, nonempty: Array,
                 class_i: Array, valid: Array, *, impl: str, thresh: float,
-                meter: bool) -> tuple[Array, Array, Array]:
+                meter: bool, mesh=None) -> tuple[Array, Array, Array]:
     """One scheduler step over a fixed-capacity slot table: classify every
     lane of the (capacity, K) literal buffer in a single crossbar sweep.
 
@@ -121,49 +152,55 @@ def _infer_step(literals: Array, clause_i: Array, nonempty: Array,
     read energy (B,) J).  ``valid`` (B,) marks occupied lanes; free lanes
     hold all-1 literals (rows float, no current) and are metered at
     exactly zero, so admitting a request into a free slot mid-serve never
-    perturbs other lanes' scores or bills.  With ``meter=False`` the step
-    runs the fused kernel (max-throughput path) and the energy outputs are
-    zeros.
+    perturbs other lanes' scores or bills.  Invalid lanes return the
+    sentinel prediction -1 (a free lane fires every nonempty clause, so
+    its argmax would otherwise look like a real class).  With
+    ``meter=False`` the step runs the fused kernel (max-throughput path)
+    and the energy outputs are zeros; ``mesh`` distributes the crossbar
+    grid per ``sharding.crossbar``.
     """
     B = literals.shape[0]
+    valid = valid.astype(bool)
     if not meter:
         scores = ops.fused_impact(literals, clause_i, nonempty, class_i,
-                                  thresh=thresh, impl=impl)
+                                  thresh=thresh, impl=impl, mesh=mesh)
         zeros = jnp.zeros((B,), jnp.float32)
-        return jnp.argmax(scores, axis=-1), zeros, zeros
-    fired, i_clause = _clause_bits(literals, clause_i, nonempty,
-                                   impl=impl, thresh=thresh)
-    fired = jnp.logical_and(fired, valid[:, None])
-    i_clause = i_clause * valid[:, None, None, None]
-    scores, i_class = _class_scores(fired, class_i, impl=impl)
-    e_cl, e_cs = energy_mod.per_lane_read_energy(
-        i_clause.sum(axis=(1, 2, 3)), i_class.sum(axis=(1, 2)))
-    return jnp.argmax(scores, axis=-1), e_cl, e_cs
+        return jnp.where(valid, jnp.argmax(scores, axis=-1), -1), \
+            zeros, zeros
+    scores, i_cl, i_cs = _metered_scores(
+        literals, clause_i, nonempty, class_i, valid, impl=impl,
+        thresh=thresh, mesh=mesh)
+    e_cl, e_cs = energy_mod.per_lane_read_energy(i_cl, i_cs)
+    return jnp.where(valid, jnp.argmax(scores, axis=-1), -1), e_cl, e_cs
 
 
-@partial(jax.jit, static_argnames=("impl", "thresh"))
+@partial(jax.jit, static_argnames=("impl", "thresh", "mesh"))
 def _infer_metered(literals: Array, clause_i: Array, nonempty: Array,
                    class_i: Array, valid: Array | None, *, impl: str,
-                   thresh: float) -> tuple[Array, Array, Array]:
+                   thresh: float, mesh=None) -> tuple[Array, Array, Array]:
     """Staged inference with current metering: -> (preds, sum I_clause,
     sum I_class).  The current sums are the paper's measured quantities;
     reducing them inside the jit keeps the (B, R, n_pad) current tensor
     transient.  ``valid`` (B,) masks batch-padding lanes out of the
     meters: an all-1 literal pad lane draws no CLAUSE current (every row
     floats) but fires every nonempty clause, so unmasked it would bill
-    phantom class-tile energy."""
-    fired, i_clause = _clause_bits(literals, clause_i, nonempty,
-                                   impl=impl, thresh=thresh)
-    if valid is not None:
-        fired = jnp.logical_and(fired, valid[:, None])
-        i_clause = i_clause * valid[:, None, None, None]
-    scores, i_class = _class_scores(fired, class_i, impl=impl)
-    return jnp.argmax(scores, axis=-1), i_clause.sum(), i_class.sum()
+    phantom class-tile energy.  With a shardable ``mesh`` the currents
+    come from the distributed lowering (per-device partials psummed), so
+    metering works from a sharded grid too."""
+    scores, i_cl_lane, i_cs_lane = _metered_scores(
+        literals, clause_i, nonempty, class_i, valid, impl=impl,
+        thresh=thresh, mesh=mesh)
+    return jnp.argmax(scores, axis=-1), i_cl_lane.sum(), i_cs_lane.sum()
 
 
 @dataclasses.dataclass
 class IMPACTSystem:
-    """Programmed crossbar grid + digital periphery."""
+    """Programmed crossbar grid + digital periphery.
+
+    ``mesh`` (optional jax Mesh with a ``model`` axis) distributes the
+    R/S row-shards across devices for every inference entry point (see
+    ``sharding.crossbar``); per-call ``mesh=`` arguments override it.
+    """
     clause_g: Array        # (R, C, tr, tc) conductances
     nonempty: Array        # (n_pad,) digital empty-clause mask
     class_g: Array         # (S, sr, m) conductances
@@ -174,6 +211,10 @@ class IMPACTSystem:
     n_classes: int
     cfg: IMPACTConfig
     encode_stats: dict[str, Any]
+    mesh: Any = None
+
+    def _mesh_eff(self, mesh):
+        return mesh if mesh is not None else self.mesh
 
     def _nonempty_eff(self) -> Array:
         if self.cfg.mask_empty:
@@ -200,49 +241,61 @@ class IMPACTSystem:
         self._check_impl(impl)
         return _class_scores(clauses, self.class_i, impl=impl)
 
-    def predict(self, literals: Array, *, impl: str = "pallas") -> Array:
-        """Fast path: fused Pallas crossbar->CSA->class-sum kernel."""
+    def predict(self, literals: Array, *, impl: str = "pallas",
+                mesh=None) -> Array:
+        """Fast path: fused Pallas crossbar->CSA->class-sum kernel; with a
+        (system- or call-level) mesh, the shard_map lowering."""
         self._check_impl(impl)
         return _predict(literals, self.clause_i, self._nonempty_eff(),
-                        self.class_i, impl=impl, thresh=I_CSA_THRESHOLD)
+                        self.class_i, impl=impl, thresh=I_CSA_THRESHOLD,
+                        mesh=self._mesh_eff(mesh))
 
     def infer_step(self, literals: Array, valid: Array, *,
                    impl: str = "pallas", meter: bool = False,
-                   ) -> tuple[Array, Array, Array]:
+                   mesh=None) -> tuple[Array, Array, Array]:
         """Per-step entry point for the continuous-batching scheduler: one
         crossbar sweep over a fixed-shape slot-table buffer.  Jits once per
-        (capacity, impl, meter) — the host-side scheduler calls it every
-        step with the same shape, so admission patterns never retrace.
+        (capacity, impl, meter, mesh) — the host-side scheduler calls it
+        every step with the same shape, so admission patterns never
+        retrace.
 
         -> (preds (B,), per-lane clause energy (B,) J, per-lane class
-        energy (B,) J); energies are zeros when ``meter=False`` (fused
-        kernel path)."""
+        energy (B,) J); invalid lanes predict the sentinel -1; energies
+        are zeros when ``meter=False`` (fused kernel path)."""
         self._check_impl(impl)
         return _infer_step(literals, self.clause_i, self._nonempty_eff(),
                            self.class_i, jnp.asarray(valid), impl=impl,
-                           thresh=I_CSA_THRESHOLD, meter=meter)
+                           thresh=I_CSA_THRESHOLD, meter=meter,
+                           mesh=self._mesh_eff(mesh))
+
+    def _grid_latency(self) -> float:
+        """Fig. 14 latency of one sweep: ALL n_clauses columns stream
+        through the (R, C) grid's C parallel column-tiles (R row-shards
+        evaluate concurrently and AND digitally, so R cancels)."""
+        C = self.clause_g.shape[1]
+        return energy_mod.inference_latency(
+            n_clause_cols=self.n_clauses, n_class_cols=self.n_classes,
+            clause_tiles_parallel=C)
 
     def step_report(self, e_clause_lanes: Array, e_class_lanes: Array,
                     datapoints: int) -> EnergyReport:
         """Fold one step's per-lane read energies (from ``infer_step``)
         into the paper's batch-level ``EnergyReport``; per-request
         attribution sums exactly to the batch meter."""
-        lat = energy_mod.inference_latency(
-            n_clause_cols=min(self.clause_g.shape[3], self.n_clauses),
-            n_class_cols=self.n_classes, clause_tiles_parallel=1)
         return energy_mod.report_from_lane_energies(
             e_clause_lanes, e_class_lanes,
             program_energy_j=self.encode_stats["program_energy_j"],
             erase_energy_j=self.encode_stats["erase_energy_j"],
-            latency_s=lat,
+            latency_s=self._grid_latency(),
             ops_per_datapoint=(self.n_literals * self.n_clauses
                                + self.n_clauses * self.n_classes),
-            datapoints=datapoints)
+            datapoints=datapoints,
+            area_mm2=sum(self.area_mm2().values()))
 
     def infer_with_report(self, literals: Array, *,
                           impl: str = "pallas",
                           valid: Array | None = None,
-                          ) -> tuple[Array, EnergyReport]:
+                          mesh=None) -> tuple[Array, EnergyReport]:
         """``valid`` (B,) bool marks real lanes in a padded batch; padding
         lanes are excluded from the energy/ops/datapoint accounting (their
         predictions still come back and are dropped by the caller)."""
@@ -252,14 +305,10 @@ class IMPACTSystem:
         preds, i_clause_sum, i_class_sum = _infer_metered(
             literals, self.clause_i, self._nonempty_eff(), self.class_i,
             valid if valid is None else jnp.asarray(valid),
-            impl=impl, thresh=I_CSA_THRESHOLD)
+            impl=impl, thresh=I_CSA_THRESHOLD, mesh=self._mesh_eff(mesh))
 
         e_clause = float(V_READ * i_clause_sum * T_READ)
         e_class = float(V_READ * i_class_sum * T_READ)
-        R, C, tr, tc = self.clause_g.shape
-        lat = energy_mod.inference_latency(
-            n_clause_cols=min(tc, self.n_clauses), n_class_cols=self.n_classes,
-            clause_tiles_parallel=1)
         ops_xp = B * (self.n_literals * self.n_clauses
                       + self.n_clauses * self.n_classes)
         report = EnergyReport(
@@ -267,7 +316,8 @@ class IMPACTSystem:
             clause_energy_j=e_clause, class_energy_j=e_class,
             program_energy_j=self.encode_stats["program_energy_j"],
             erase_energy_j=self.encode_stats["erase_energy_j"],
-            latency_s=lat, ops_crosspoint=ops_xp, datapoints=B)
+            latency_s=self._grid_latency(), ops_crosspoint=ops_xp,
+            datapoints=B, area_mm2=sum(self.area_mm2().values()))
         return preds, report
 
     # -- metrics ------------------------------------------------------------
@@ -280,8 +330,11 @@ class IMPACTSystem:
 
 
 def build_system(params: CoTMParams, cfg: CoTMConfig, key: Array,
-                 impact_cfg: IMPACTConfig = IMPACTConfig()) -> IMPACTSystem:
-    """Map a trained CoTM onto crossbar tiles (Figs. 6, 9, 11)."""
+                 impact_cfg: IMPACTConfig = IMPACTConfig(), *,
+                 mesh=None) -> IMPACTSystem:
+    """Map a trained CoTM onto crossbar tiles (Figs. 6, 9, 11).  ``mesh``
+    (optional) makes every inference entry point serve from a grid
+    distributed over the mesh's ``model``/data axes."""
     K, n = params.ta_state.shape
     m = params.weights.shape[0]
     ic = impact_cfg
@@ -333,4 +386,5 @@ def build_system(params: CoTMParams, cfg: CoTMConfig, key: Array,
     return IMPACTSystem(
         clause_g=clause_g, nonempty=nonempty, class_g=class_g,
         clause_i=read_current(clause_g), class_i=read_current(class_g),
-        n_literals=K, n_clauses=n, n_classes=m, cfg=ic, encode_stats=stats)
+        n_literals=K, n_clauses=n, n_classes=m, cfg=ic, encode_stats=stats,
+        mesh=mesh)

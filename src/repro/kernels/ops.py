@@ -133,13 +133,20 @@ def fused_cotm(literals: Array, include: Array, weights: Array,
 def fused_impact(literals: Array, clause_i: Array, nonempty: Array,
                  class_i: Array, *, thresh: float, impl: str = "pallas",
                  interpret: bool | None = None, block_b: int = 128,
-                 block_n: int = 256) -> Array:
+                 block_n: int = 256, mesh=None) -> Array:
     """Fused analog IMPACT inference: literals -> class currents (B, M) f32.
 
     literals (B, K) bool/{0,1}; clause_i (R, C, tr, tc) f32 per-cell clause
     crossbar read currents in the ``IMPACTSystem`` shard layout; nonempty
     (C*tc,) digital mask; class_i (S, sr, M) f32 class crossbar currents.
     ``thresh`` is the CSA decision current (``yflash.I_CSA_THRESHOLD``).
+
+    ``mesh``: a jax Mesh with a ``model`` axis distributes the R/S row
+    shards across devices via ``sharding.crossbar`` (digital AND == psum
+    of partial CSA bits, ADC + add == psum of partial class currents) and
+    shards the batch over the data axes.  Falls back to the single-device
+    kernel below when the model axis is 1 or the shard counts don't
+    divide it, so callers can pass a mesh unconditionally.
 
     Padding is semantically neutral: padded literal rows drive 0 V (a
     floating row contributes no current), padded clause columns carry
@@ -150,6 +157,12 @@ def fused_impact(literals: Array, clause_i: Array, nonempty: Array,
     S, sr, M = class_i.shape
     n_clause = C * tc
     assert nonempty.shape == (n_clause,), (nonempty.shape, n_clause)
+    if mesh is not None:
+        from ..sharding import crossbar as _crossbar  # lazy: avoids cycle
+        if _crossbar.shardable(mesh, R, S):
+            return _crossbar.fused_impact_shmap(
+                literals, clause_i, nonempty, class_i, thresh=thresh,
+                mesh=mesh, impl=impl, interpret=interpret)
     if impl == "xla":
         return ref.fused_impact_ref(literals, clause_i, nonempty, class_i,
                                     thresh=thresh)

@@ -3,6 +3,6 @@
 NOTE: do NOT import ``dryrun`` from here — it mutates XLA_FLAGS at import
 time (512 host devices) and must only ever run as its own process.
 """
-from .mesh import make_debug_mesh, make_production_mesh
+from .mesh import make_crossbar_mesh, make_debug_mesh, make_production_mesh
 
-__all__ = ["make_production_mesh", "make_debug_mesh"]
+__all__ = ["make_production_mesh", "make_debug_mesh", "make_crossbar_mesh"]

@@ -22,3 +22,16 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 2, *,
     if multi_pod:
         return jax.make_mesh((2, n_data, n_model), ("pod", "data", "model"))
     return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def make_crossbar_mesh(n_model: int | None = None):
+    """(data, model) mesh over ALL local devices for the sharded IMPACT
+    crossbar (``sharding.crossbar``): ``n_model`` devices hold the R/S
+    row-shard slices (default: every device), the remainder form the data
+    axis for batch sharding.  ``n_model`` must divide the device count."""
+    n_dev = jax.device_count()
+    n_model = n_dev if n_model is None else n_model
+    if n_dev % n_model:
+        raise ValueError(f"n_model={n_model} does not divide the "
+                         f"{n_dev} local devices")
+    return jax.make_mesh((n_dev // n_model, n_model), ("data", "model"))

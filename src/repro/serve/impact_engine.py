@@ -73,7 +73,13 @@ DEFAULT_BUCKETS = (8, 32, 128, 512)
 def aggregate_reports(reports: Sequence[EnergyReport]) -> EnergyReport:
     """Sum energy/op/datapoint accounting over per-batch reports; latency
     is the serial crossbar time of the whole run (batches stream through
-    the same physical tiles)."""
+    the same physical tiles).
+
+    ``area_mm2`` is deliberately NOT carried over: ``tops_per_mm2``
+    divides per-datapoint ops by ``latency_s``, so on a summed-latency
+    aggregate it would shrink with the number of sweeps instead of
+    describing the hardware — read it off the per-step reports (which
+    carry the area), not the aggregate; the aggregate raises."""
     assert reports, "no reports to aggregate"
     return EnergyReport(
         read_energy_j=sum(r.read_energy_j for r in reports),
@@ -136,7 +142,12 @@ class IMPACTEngine:
     lanes — and returns completed ``(rid, prediction)`` pairs; ``run``
     drives a whole request burst to completion.  ``impl`` selects the
     Pallas kernels (default) or the einsum oracles for A/B runs;
-    ``mode="flush"`` selects the legacy flush-to-completion scheduler.
+    ``mode="flush"`` selects the legacy flush-to-completion scheduler;
+    ``mesh`` serves every sweep from a crossbar grid sharded over the
+    mesh's ``model``/data axes (``sharding.crossbar``), defaulting to the
+    system-level mesh — per-lane energy attribution still sums exactly to
+    the batch meter under sharding (the per-device partial currents are
+    psummed before billing).
     """
 
     def __init__(self, system: IMPACTSystem, *, impl: str = "pallas",
@@ -145,7 +156,7 @@ class IMPACTEngine:
                  buckets: Sequence[int] = DEFAULT_BUCKETS,
                  meter_energy: bool = True, target_occupancy: float = 0.0,
                  queue_capacity: int | None = None,
-                 clock: Callable[[], float] = time.time):
+                 clock: Callable[[], float] = time.time, mesh=None):
         if mode not in ("continuous", "flush"):
             raise ValueError(f"mode must be 'continuous' or 'flush', "
                              f"got {mode!r}")
@@ -154,6 +165,7 @@ class IMPACTEngine:
                              f"got {target_occupancy}")
         self.system = system
         self.impl = impl
+        self.mesh = mesh if mesh is not None else system.mesh
         self.mode = mode
         self.capacity = max_batch
         self.max_wait_s = max_wait_s
@@ -185,7 +197,8 @@ class IMPACTEngine:
             lits = jnp.ones((b, self.system.n_literals), jnp.int8)
             valid = np.zeros((b,), bool)
             jax.block_until_ready(self.system.infer_step(
-                lits, valid, impl=self.impl, meter=self.meter_energy)[0])
+                lits, valid, impl=self.impl, meter=self.meter_energy,
+                mesh=self.mesh)[0])
             self._warm.add(b)
 
     # -- request plumbing ---------------------------------------------------
@@ -248,7 +261,8 @@ class IMPACTEngine:
         self._warm.add(shape)
         t0 = self.clock()
         preds, e_cl, e_cs = self.system.infer_step(
-            lits, valid, impl=self.impl, meter=self.meter_energy)
+            lits, valid, impl=self.impl, meter=self.meter_energy,
+            mesh=self.mesh)
         preds = np.asarray(jax.block_until_ready(preds))
         e_cl = np.asarray(e_cl)
         e_cs = np.asarray(e_cs)

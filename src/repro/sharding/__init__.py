@@ -1,4 +1,13 @@
-"""Distribution: logical-axis rule tables (see rules.py docstring)."""
-from .rules import act_rules, merged_rules, opt_rules, param_rules
+"""Distribution: logical-axis rule tables (see rules.py docstring) and the
+shard_map lowering of the IMPACT crossbar grid (crossbar.py).
 
-__all__ = ["param_rules", "opt_rules", "act_rules", "merged_rules"]
+``crossbar`` is intentionally not imported here: it pulls in
+``kernels.ops`` (which lazily imports it back), so eager re-export would
+make package import order load-bearing.  Import it explicitly:
+``from repro.sharding import crossbar``.
+"""
+from .rules import (act_rules, crossbar_rules, merged_rules, opt_rules,
+                    param_rules)
+
+__all__ = ["param_rules", "opt_rules", "act_rules", "merged_rules",
+           "crossbar_rules"]

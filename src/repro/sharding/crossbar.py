@@ -1,0 +1,165 @@
+"""Distributed lowering of the fused analog IMPACT crossbar.
+
+The paper's Fig. 14 modular scaling IS a ``psum`` decomposition (see
+``rules.py``): partial clauses from the R literal row-shards are combined
+by a digital AND, and partial class currents from the S class row-shards
+are digitised per shard (ADC) and summed digitally.  This module makes
+that correspondence executable: a ``shard_map`` over the ``model`` mesh
+axis places ``R // model`` clause row-shards and ``S // model`` class
+row-shards on each device, the batch is sharded over the data axes
+(``("pod", "data")`` when present), and
+
+* the digital AND becomes ``psum`` of per-device partial CSA violation
+  bits (a column fires iff NO shard on ANY device sees current above the
+  CSA threshold);
+* the per-shard ADC + digital adder tree becomes ``psum`` of per-device
+  partial class currents (exact — the class read is linear in the drive).
+
+Each device runs the existing Pallas ``crossbar_mvm`` kernel on its local
+shards (``impl="xla"`` swaps in the einsum oracle for A/B parity runs),
+so the single-device kernels and the distributed lowering share one
+numerical core.  ``kernels.ops.fused_impact`` routes here when a mesh is
+passed and ``shardable`` holds; otherwise it falls back to the
+single-device fused kernel, so call sites never have to branch.
+
+Parity contract (enforced in ``tests/test_crossbar_sharding.py``): CSA
+bits and argmax predictions are EXACTLY equal to the single-device kernel
+and the einsum oracle on ideal devices; raw class-current scores are
+float sums whose association order changes under ``psum``, so they agree
+to tight rtol.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .. import compat
+from ..kernels import ops, ref
+from .rules import crossbar_rules
+
+Array = jax.Array
+
+
+def model_size(mesh) -> int:
+    """Size of the ``model`` axis (1 when absent or no mesh)."""
+    if mesh is None:
+        return 1
+    return int(mesh.shape.get("model", 1))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """The batch axes of ``mesh`` actually present, in rule-table order."""
+    if mesh is None:
+        return ()
+    return tuple(a for a in crossbar_rules(mesh)["batch"]
+                 if a in mesh.shape)
+
+
+def shardable(mesh, n_row_shards: int, n_class_shards: int) -> bool:
+    """True when the (R, S) shard grid can be placed on ``mesh``'s model
+    axis: both shard counts must divide the axis so every device holds an
+    equal, non-empty slice (the fallback for indivisible grids is the
+    single-device kernel — correctness never depends on the mesh)."""
+    m = model_size(mesh)
+    return (m > 1 and n_row_shards % m == 0 and n_class_shards % m == 0)
+
+
+def _local_column_currents(drive_loc: Array, ci_loc: Array, *, impl: str,
+                           interpret: bool | None) -> Array:
+    """Per-shard clause-crossbar column currents on ONE device.
+
+    drive_loc (B, R_loc, tr) f32; ci_loc (R_loc, C, tr, tc) f32 cell read
+    currents -> (B, R_loc, C*tc) f32.  Runs the same Pallas ``crossbar_mvm``
+    kernel (or einsum oracle) per local shard as the single-device staged
+    path, so per-shard currents are bit-identical across lowerings.
+    """
+    R_loc, C, tr, tc = ci_loc.shape
+    cols = []
+    for r in range(R_loc):                      # static local-shard unroll
+        cur = ci_loc[r].transpose(1, 0, 2).reshape(tr, C * tc)
+        cols.append(ops.crossbar_mvm(drive_loc[:, r], cur, v_read=1.0,
+                                     cutoff=0.0, impl=impl,
+                                     interpret=interpret))
+    return jnp.stack(cols, axis=1)
+
+
+def fused_impact_shmap(literals: Array, clause_i: Array, nonempty: Array,
+                       class_i: Array, *, thresh: float, mesh,
+                       impl: str = "pallas", interpret: bool | None = None,
+                       valid: Array | None = None, meter: bool = False):
+    """Sharded analog inference: literals (B, K) -> class currents (B, M).
+
+    Same contract as ``ops.fused_impact`` (which is the normal entry
+    point — it calls here when ``shardable`` holds).  With ``meter=True``
+    additionally returns per-lane summed clause / class crossbar currents
+    (B,) f32 — the quantities ``impact.energy.per_lane_read_energy``
+    converts to joules — computed with the same valid-lane masking as the
+    single-device staged path, so per-request bills sum to the batch
+    meter under sharding.
+    """
+    B, K = literals.shape
+    R, C, tr, tc = clause_i.shape
+    S, sr, M = class_i.shape
+    n = C * tc
+    assert nonempty.shape == (n,), (nonempty.shape, n)
+    assert shardable(mesh, R, S), (mesh, R, S)
+
+    dp = data_axes(mesh)
+    n_data = math.prod(mesh.shape[a] for a in dp) if dp else 1
+    # Batch shards over the data axes only when it divides them; an
+    # indivisible batch replicates (every data shard computes the full
+    # batch) rather than failing — the model axis still shards.
+    bspec = dp if (dp and B % n_data == 0) else None
+
+    lit = ref.pad_to(literals.astype(jnp.float32), R * tr, axis=1, value=1)
+    drive = (1.0 - lit).reshape(B, R, tr)       # padding rows float ('Z')
+    ne = nonempty.astype(jnp.int8)
+    vmask = (jnp.ones((B,), bool) if valid is None
+             else valid.astype(bool))
+
+    def local_fn(drive_loc, ci_loc, ne_loc, wi_loc, valid_loc):
+        # drive_loc (B_loc, R_loc, tr); ci_loc (R_loc, C, tr, tc);
+        # wi_loc (S_loc, sr, M); everything else replicated over "model".
+        i_col = _local_column_currents(drive_loc, ci_loc, impl=impl,
+                                       interpret=interpret)
+        # Partial CSA bits: count of local shards whose column current
+        # trips the sense amp; the cross-device psum is Fig. 14's digital
+        # AND (a clause fires iff the total violation count is zero).
+        viol = (i_col >= thresh).astype(jnp.int32).sum(axis=1)
+        viol = jax.lax.psum(viol, "model")
+        fired = jnp.logical_and(viol == 0, ne_loc.astype(bool)[None, :])
+        fired = jnp.logical_and(fired, valid_loc[:, None])
+
+        # Class stage: this device drives only its local S_loc row-shards
+        # of the class crossbar with the matching slice of clause bits.
+        S_loc = wi_loc.shape[0]
+        drv = ref.pad_to(fired.astype(jnp.float32), S * sr, axis=1)
+        drv = drv[:, :S * sr].reshape(-1, S, sr)
+        lo = jax.lax.axis_index("model") * S_loc
+        mine = jax.lax.dynamic_slice_in_dim(drv, lo, S_loc, axis=1)
+        i_cls = jnp.stack(
+            [ops.crossbar_mvm(mine[:, s], wi_loc[s], v_read=1.0, cutoff=0.0,
+                              impl=impl, interpret=interpret)
+             for s in range(S_loc)], axis=1)    # (B_loc, S_loc, M)
+        # Per-shard ADC + digital add == psum of partial class currents.
+        scores = jax.lax.psum(i_cls.sum(axis=1), "model")
+        if not meter:
+            return (scores,)
+        i_col = i_col * valid_loc[:, None, None].astype(i_col.dtype)
+        i_cl_lane = jax.lax.psum(i_col.sum(axis=(1, 2)), "model")
+        i_cs_lane = jax.lax.psum(i_cls.sum(axis=(1, 2)), "model")
+        return scores, i_cl_lane, i_cs_lane
+
+    out_specs = ((P(bspec, None),) if not meter
+                 else (P(bspec, None), P(bspec), P(bspec)))
+    fn = compat.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(bspec, "model", None), P("model", None, None, None),
+                  P(None), P("model", None, None), P(bspec)),
+        out_specs=out_specs, check_vma=False)
+    out = fn(drive, clause_i.astype(jnp.float32), ne,
+             class_i.astype(jnp.float32), vmask)
+    return out[0] if not meter else out

@@ -20,7 +20,13 @@ Three tables:
 The Fig. 14 correspondence (see DESIGN.md): sharding the literal axis over
 "model" and psumming violation counts IS the paper's partial-clause digital
 AND; sharding the clause axis and psumming partial class sums IS the ADC +
-digital adder tree.
+digital adder tree.  This is no longer just documentation: the IMPACT
+crossbar path has a real ``shard_map`` lowering in ``sharding/crossbar.py``
+(``fused_impact_shmap``), reached through ``kernels.ops.fused_impact(...,
+mesh=...)`` and ``IMPACTSystem.predict/infer_step/infer_with_report``.
+``crossbar_rules`` below is its logical-axis table: the R literal
+row-shards and S class row-shards ride the "model" axis, the batch rides
+the data axes, and the two digital combine steps are the two psums.
 """
 from __future__ import annotations
 
@@ -68,6 +74,20 @@ def act_rules(mesh, *, seq_parallel: bool = True) -> dict[str, Any]:
         "experts": "model",
         "moe_mlp": "model",
         "vocab": "model",
+    }
+
+
+def crossbar_rules(mesh) -> dict[str, Any]:
+    """Fig. 14 -> mesh axes for the IMPACT crossbar grid (consumed by
+    ``sharding/crossbar.py``): the literal row-shard axis (R) and the
+    class row-shard axis (S) both map onto "model" — the digital AND of
+    partial clauses is the psum of per-device CSA violation bits, the
+    per-shard ADC + digital add is the psum of partial class currents —
+    while the batch maps onto the data axes like every activation."""
+    return {
+        "batch": _dp(mesh),
+        "literal_shard": "model",
+        "class_shard": "model",
     }
 
 

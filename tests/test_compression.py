@@ -54,7 +54,7 @@ SCRIPT = textwrap.dedent("""
 def test_int8_allreduce_and_error_feedback():
     r = subprocess.run([sys.executable, "-c", SCRIPT],
                        env={"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"},
+                            "HOME": "/root", "JAX_PLATFORMS": "cpu"},
                        capture_output=True, text=True, timeout=600)
     assert "COMPRESSION_OK" in r.stdout, (r.stdout[-2000:],
                                           r.stderr[-3000:])

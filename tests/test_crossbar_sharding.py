@@ -1,0 +1,245 @@
+"""Sharded fused analog crossbar: the shard_map lowering of
+``sharding/crossbar.py`` against the single-device Pallas kernel and the
+einsum oracle.
+
+Parity contract (same convention as test_fused_impact): CSA bits and
+argmax predictions are EXACTLY equal across lowerings on ideal devices —
+column currents sit decades from the CSA decision boundary — while raw
+class-current scores are float sums whose association order changes under
+``psum``, so they get an allclose with tight rtol.
+
+The multi-device sweeps need >= 2 devices and are exercised in CI with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the multi-device
+leg, every PR); on a single-device host they skip, and a subprocess
+smoke test keeps one real 8-device parity + billing run in the tier-1
+lane (with ``JAX_PLATFORMS=cpu`` pinned — see the comment at the call).
+"""
+import dataclasses
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.impact.yflash import I_CSA_THRESHOLD
+from repro.kernels import ops, ref
+from repro.launch.mesh import make_crossbar_mesh
+from repro.serve import IMPACTEngine
+from repro.sharding import crossbar
+
+from test_fused_impact import _make_system
+
+SRC = pathlib.Path(__file__).resolve().parents[1] / "src"
+
+multi_device = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs >= 2 devices (XLA_FLAGS="
+           "--xla_force_host_platform_device_count=8)")
+
+
+def _mesh_or_skip(n_model: int):
+    if jax.device_count() % n_model:
+        pytest.skip(f"{jax.device_count()} devices not divisible by "
+                    f"n_model={n_model}")
+    return make_crossbar_mesh(n_model=n_model)
+
+
+# (B, K, n, M, R, tr, C, tc, S, sr, n_model) — R > 1 AND S > 1 grids per
+# the acceptance criteria, ragged shapes, shards-per-device > 1, and a
+# full-width model axis (R == S == n_model == 8).
+SHARD_SHAPES = [
+    (16, 300, 120, 7, 4, 80, 3, 40, 4, 30, 2),     # 2 shards/device
+    (16, 300, 120, 7, 4, 80, 3, 40, 4, 30, 4),     # 1 shard/device
+    (8, 520, 500, 10, 4, 130, 2, 256, 2, 250, 2),  # class pad >> clause pad
+    (4, 64, 33, 4, 8, 8, 3, 11, 8, 5, 8),          # tiny ragged, full axis
+]
+
+
+class FakeMesh:
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+
+
+def test_shardable_gate():
+    """The divisibility gate that routes between the shard_map lowering
+    and the single-device fallback."""
+    assert crossbar.shardable(FakeMesh(data=2, model=4), 4, 8)
+    assert not crossbar.shardable(None, 4, 4)
+    assert not crossbar.shardable(FakeMesh(data=8), 4, 4)       # no model
+    assert not crossbar.shardable(FakeMesh(data=4, model=1), 4, 4)
+    assert not crossbar.shardable(FakeMesh(data=2, model=4), 3, 4)  # R
+    assert not crossbar.shardable(FakeMesh(data=2, model=4), 4, 6)  # S
+    assert crossbar.data_axes(FakeMesh(pod=2, data=2, model=2)) == \
+        ("pod", "data")
+    assert crossbar.data_axes(FakeMesh(model=2)) == ()
+
+
+def test_model_axis_of_one_falls_back_single_device():
+    """A degenerate (1, 1) mesh must route through the single-device
+    kernel bit-for-bit (this covers the fallback on tier-1's one CPU)."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    lit, sys_ = _make_system(8, 150, 60, 5, 2, 80, 2, 32, 2, 32, seed=5)
+    want = ops.fused_impact(lit, sys_.clause_i, sys_.nonempty, sys_.class_i,
+                            thresh=I_CSA_THRESHOLD)
+    got = ops.fused_impact(lit, sys_.clause_i, sys_.nonempty, sys_.class_i,
+                           thresh=I_CSA_THRESHOLD, mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@multi_device
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+@pytest.mark.parametrize("B,K,n,M,R,tr,C,tc,S,sr,n_model", SHARD_SHAPES)
+def test_shmap_matches_single_device_and_oracle(B, K, n, M, R, tr, C, tc,
+                                                S, sr, n_model, impl):
+    """The acceptance sweep: shard_map fused inference over a >= 2-device
+    model axis vs the single-device Pallas kernel vs the einsum oracle."""
+    mesh = _mesh_or_skip(n_model)
+    lit, sys_ = _make_system(B, K, n, M, R, tr, C, tc, S, sr, seed=7)
+    want = ref.fused_impact_ref(lit, sys_.clause_i, sys_.nonempty,
+                                sys_.class_i, thresh=I_CSA_THRESHOLD)
+    single = ops.fused_impact(lit, sys_.clause_i, sys_.nonempty,
+                              sys_.class_i, thresh=I_CSA_THRESHOLD)
+    got = ops.fused_impact(lit, sys_.clause_i, sys_.nonempty, sys_.class_i,
+                           thresh=I_CSA_THRESHOLD, impl=impl, mesh=mesh)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(single),
+                               rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(got, -1)),
+                                  np.asarray(jnp.argmax(want, -1)))
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(got, -1)),
+                                  np.asarray(jnp.argmax(single, -1)))
+
+
+@multi_device
+def test_indivisible_batch_replicates():
+    """B that doesn't divide the data axis still shards the model axis
+    (the batch replicates instead of failing)."""
+    mesh = _mesh_or_skip(2)            # data axis = device_count // 2 > 1
+    B = mesh.shape["data"] * 2 + 1     # never divisible by the data axis
+    lit, sys_ = _make_system(B, 300, 120, 7, 4, 80, 3, 40, 4, 30, seed=9)
+    want = ref.fused_impact_ref(lit, sys_.clause_i, sys_.nonempty,
+                                sys_.class_i, thresh=I_CSA_THRESHOLD)
+    got = ops.fused_impact(lit, sys_.clause_i, sys_.nonempty, sys_.class_i,
+                           thresh=I_CSA_THRESHOLD, impl="xla", mesh=mesh)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@multi_device
+def test_indivisible_shards_fall_back_exactly():
+    """R=3 over a model axis of 2: the wrapper must take the
+    single-device kernel path bit-for-bit (same code path => exact)."""
+    mesh = _mesh_or_skip(2)
+    lit, sys_ = _make_system(8, 150, 60, 5, 3, 64, 2, 32, 3, 20, seed=11)
+    want = ops.fused_impact(lit, sys_.clause_i, sys_.nonempty, sys_.class_i,
+                            thresh=I_CSA_THRESHOLD)
+    got = ops.fused_impact(lit, sys_.clause_i, sys_.nonempty, sys_.class_i,
+                           thresh=I_CSA_THRESHOLD, mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@multi_device
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_metered_infer_step_parity_under_sharding(impl):
+    """Sharded metered sweep == single-device staged path: same preds
+    (sentinel -1 on free lanes), same per-lane energy bills, free lanes
+    billed exactly zero."""
+    mesh = _mesh_or_skip(2)
+    B, K = 8, 300
+    lit, sys_ = _make_system(B, K, 120, 7, 4, 80, 3, 40, 4, 30, seed=13)
+    buf = np.ones((B, K), np.int8)
+    buf[:5] = np.asarray(lit[:5])
+    valid = np.zeros((B,), bool)
+    valid[:5] = True
+    p_1, ecl_1, ecs_1 = jax.tree.map(np.asarray, sys_.infer_step(
+        jnp.asarray(buf), valid, impl=impl, meter=True))
+    p_m, ecl_m, ecs_m = jax.tree.map(np.asarray, sys_.infer_step(
+        jnp.asarray(buf), valid, impl=impl, meter=True, mesh=mesh))
+    np.testing.assert_array_equal(p_1, p_m)
+    assert (p_m[5:] == -1).all(), p_m
+    np.testing.assert_allclose(ecl_m, ecl_1, rtol=1e-5)
+    np.testing.assert_allclose(ecs_m, ecs_1, rtol=1e-5)
+    np.testing.assert_array_equal(ecl_m[5:], 0.0)
+    np.testing.assert_array_equal(ecs_m[5:], 0.0)
+
+
+@multi_device
+def test_engine_on_sharded_mesh_bills_exactly():
+    """IMPACTEngine serving from a sharded grid: predictions match the
+    single-device direct path and per-request energy attribution still
+    sums exactly to the batch meter (ISSUE acceptance)."""
+    mesh = _mesh_or_skip(2)
+    lit, base = _make_system(24, 300, 120, 7, 4, 80, 3, 40, 4, 30, seed=17)
+    sys_ = dataclasses.replace(base, mesh=mesh)
+    eng = IMPACTEngine(sys_, impl="xla", max_batch=8)
+    assert eng.mesh is mesh            # engine inherits the system mesh
+    preds, stats = eng.run(np.asarray(lit))
+    direct = np.asarray(base.predict(lit, impl="xla"))
+    np.testing.assert_array_equal(preds, direct)
+    recs = eng.request_records
+    assert len(recs) == 24 and all(r.e_read_j > 0 for r in recs)
+    np.testing.assert_allclose(sum(r.e_read_j for r in recs),
+                               stats["energy"].read_energy_j, rtol=1e-6)
+    # per-STEP reports carry the area and a real TOPS/mm^2; the summed-
+    # latency aggregate refuses (the ratio would shrink with sweep count)
+    assert all(r.tops_per_mm2 > 0 for r in eng.reports)
+    with pytest.raises(ValueError, match="area"):
+        stats["energy"].tops_per_mm2
+
+
+SMOKE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.impact.yflash import I_CSA_THRESHOLD
+    from repro.kernels import ops, ref
+    from repro.launch.mesh import make_crossbar_mesh
+    from repro.serve import IMPACTEngine
+    import sys
+    sys.path.insert(0, {tests_dir!r})
+    from test_fused_impact import _make_system
+
+    mesh = make_crossbar_mesh(n_model=2)      # (4 data, 2 model)
+    lit, base = _make_system(16, 200, 60, 5, 2, 100, 2, 32, 2, 32, seed=7)
+    want = ref.fused_impact_ref(lit, base.clause_i, base.nonempty,
+                                base.class_i, thresh=I_CSA_THRESHOLD)
+    got = ops.fused_impact(lit, base.clause_i, base.nonempty, base.class_i,
+                           thresh=I_CSA_THRESHOLD, impl="xla", mesh=mesh)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(got, -1)),
+                                  np.asarray(jnp.argmax(want, -1)))
+
+    sys_ = dataclasses.replace(base, mesh=mesh)
+    eng = IMPACTEngine(sys_, impl="xla", max_batch=16)
+    preds, stats = eng.run(np.asarray(lit))
+    np.testing.assert_array_equal(preds,
+                                  np.asarray(base.predict(lit, impl="xla")))
+    np.testing.assert_allclose(
+        sum(r.e_read_j for r in eng.request_records),
+        stats["energy"].read_energy_j, rtol=1e-6)
+    print("SHARDED_SMOKE_OK", jax.device_count())
+""")
+
+
+def test_sharded_smoke_on_forced_host_devices():
+    """One real 8-device run in the tier-1 lane (subprocess, because the
+    XLA host-device flag must be set before jax initialises): parity of
+    the shard_map lowering vs the oracle, plus engine billing.  The full
+    sweeps run in-process in the CI multi-device leg."""
+    tests_dir = str(pathlib.Path(__file__).resolve().parent)
+    r = subprocess.run(
+        [sys.executable, "-c", SMOKE.format(tests_dir=tests_dir)],
+        # JAX_PLATFORMS=cpu matters: without it, a host with libtpu
+        # installed spends ~8 min of TPU-metadata retries in the scrubbed
+        # subprocess env before falling back to CPU.
+        env={"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin",
+             "HOME": os.environ.get("HOME", "/root"),
+             "JAX_PLATFORMS": "cpu"},
+        capture_output=True, text=True, timeout=900)
+    assert "SHARDED_SMOKE_OK" in r.stdout, (r.stdout[-2000:],
+                                            r.stderr[-3000:])

@@ -9,7 +9,8 @@ import pytest
 
 from repro.core import CoTMConfig, predict, train_epochs
 from repro.data.synthetic import prototype
-from repro.impact import IMPACTConfig, build_system
+from repro.impact import EnergyReport, IMPACTConfig, build_system
+from repro.impact.energy import T_COLUMN, inference_latency, tile_area_mm2
 
 
 @pytest.fixture(scope="module")
@@ -70,3 +71,78 @@ def test_energy_report(trained):
     # energy per datapoint should be in the paper's pJ regime (loose).
     e_pj = report.energy_per_datapoint_j * 1e12
     assert 0.1 < e_pj < 1e4, e_pj
+
+
+# --- Fig. 14 multi-tile latency model (regression for the (R, C)-blind
+# accounting that hardcoded clause_tiles_parallel=1 and one tile's cols) --
+
+
+def test_multi_tile_latency_counts_whole_grid(trained):
+    """C > 1 system: latency streams ALL n_clauses columns through the
+    grid's C parallel column-tiles — ceil(n/C) cycles + one class-read
+    cycle — not one tile's column count (the old model reported
+    min(tc, n) = tc cycles regardless of how columns spread over the
+    grid, so GOPS silently mis-scaled for C > 1)."""
+    cfg, params, lits, labels, _ = trained
+    split = IMPACTConfig(variability=False, finetune=False,
+                         max_tile_cols=24, max_class_rows=32)
+    system = build_system(params, cfg, jax.random.key(5), split)
+    R, C, tr, tc = system.clause_g.shape
+    assert C == 3 and cfg.n_clauses == 64
+    _, report = system.infer_with_report(lits[:16])
+    want = -(-cfg.n_clauses // C) * T_COLUMN + T_COLUMN   # 22 cycles + 1
+    assert report.latency_s == pytest.approx(want)
+    # the old one-tile accounting (min(tc, n) = 24 cycles) must NOT match
+    assert abs(report.latency_s - (tc * T_COLUMN + T_COLUMN)) > 1e-12
+    assert report.gops == pytest.approx(
+        (cfg.n_literals * cfg.n_clauses + cfg.n_clauses * cfg.n_classes)
+        / want / 1e9)
+    # step_report (the serving-path meter) uses the same grid model
+    step = system.step_report(np.zeros(4), np.zeros(4), 4)
+    assert step.latency_s == pytest.approx(want)
+
+
+def test_table4_single_tile_latency_unchanged():
+    """Paper layout (500x1568 clause tile, C=1): 500 columns stream
+    sequentially at 5 ns + one class read — 2.505 us, pinned so the
+    Table 4 GOPS anchor cannot drift."""
+    lat = inference_latency(n_clause_cols=500, n_class_cols=10,
+                            clause_tiles_parallel=1)
+    assert lat == pytest.approx(500 * T_COLUMN + T_COLUMN)
+    assert lat == pytest.approx(2.505e-6)
+
+
+# --- tops_per_mm2 (was an unconditional 0.0 stub) -------------------------
+
+
+def test_tops_per_mm2_from_system_area(trained):
+    """System-level reports carry the occupied-area and report a real
+    TOPS/mm^2; area-less reports refuse instead of rendering 0.0."""
+    cfg, params, lits, labels, _ = trained
+    system = build_system(params, cfg, jax.random.key(4))
+    _, report = system.infer_with_report(lits[:64])
+    area = sum(system.area_mm2().values())
+    assert report.area_mm2 == pytest.approx(area)
+    want = (2 * report.ops_crosspoint / report.datapoints
+            / report.latency_s) / 1e12 / area
+    assert report.tops_per_mm2 == pytest.approx(want)
+    assert report.tops_per_mm2 > 0
+    bare = dataclasses.replace(report, area_mm2=None)
+    with pytest.raises(ValueError, match="area"):
+        bare.tops_per_mm2
+
+
+def test_tops_per_mm2_table4_anchor():
+    """Paper dims (K=1568, n=500, m=10) under the Table 4 conventions
+    (MAC-equivalents = 2/crosspoint; occupied area at 3.159 um^2/device):
+    ~0.25 TOPS/mm^2, the same order as the paper's Table 6 entry (0.17,
+    which uses the measured GOPS)."""
+    ops_dp = 1568 * 500 + 500 * 10
+    lat = inference_latency(500, 10, 1)
+    area = tile_area_mm2(1568, 500) + tile_area_mm2(500, 10)
+    rep = EnergyReport(read_energy_j=1.0, clause_energy_j=0.5,
+                       class_energy_j=0.5, program_energy_j=0.0,
+                       erase_energy_j=0.0, latency_s=lat,
+                       ops_crosspoint=ops_dp, datapoints=1, area_mm2=area)
+    assert rep.tops_per_mm2 == pytest.approx(2 * ops_dp / lat / 1e12 / area)
+    assert 0.2 < rep.tops_per_mm2 < 0.3, rep.tops_per_mm2

@@ -110,6 +110,28 @@ def test_admission_never_perturbs_inflight_lanes(small_system, impl):
     np.testing.assert_array_equal(ecs_solo[1:], 0.0)
 
 
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+@pytest.mark.parametrize("meter", [False, True])
+def test_invalid_lanes_predict_sentinel(small_system, impl, meter):
+    """Free lanes (all-1 literals) fire every nonempty clause, so their
+    argmax would look like a real class; ``infer_step`` must return the
+    sentinel -1 for ``valid == False`` lanes on BOTH the fused
+    (meter=False) and staged (meter=True) paths, while valid lanes keep
+    matching the direct predict path."""
+    system, lits = small_system
+    cap = 8
+    buf = np.ones((cap, system.n_literals), np.int8)
+    buf[:3] = lits[:3]
+    valid = np.zeros((cap,), bool)
+    valid[:3] = True
+    preds, _, _ = system.infer_step(jnp.asarray(buf), valid, impl=impl,
+                                    meter=meter)
+    preds = np.asarray(preds)
+    assert (preds[3:] == -1).all(), preds
+    direct = np.asarray(system.predict(jnp.asarray(lits[:3]), impl=impl))
+    np.testing.assert_array_equal(preds[:3], direct)
+
+
 def test_engine_release_refill_reuses_lanes(small_system):
     """Released lanes are reset to the currentless all-1 pattern and
     refilled on the next step; predictions across refills match the

@@ -111,7 +111,7 @@ SCRIPT = textwrap.dedent("""
 def test_pjit_train_step_on_debug_mesh():
     r = subprocess.run([sys.executable, "-c", SCRIPT],
                        env={"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"},
+                            "HOME": "/root", "JAX_PLATFORMS": "cpu"},
                        capture_output=True, text=True, timeout=600)
     assert "PJIT_OK" in r.stdout, (r.stdout[-2000:], r.stderr[-3000:])
 
@@ -158,7 +158,7 @@ def test_context_parallel_and_sharded_decode_numerics():
     real multi-device mesh."""
     r = subprocess.run([sys.executable, "-c", CP_SCRIPT],
                        env={"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"},
+                            "HOME": "/root", "JAX_PLATFORMS": "cpu"},
                        capture_output=True, text=True, timeout=600)
     assert "CP_AND_DECODE_OK" in r.stdout, (r.stdout[-2000:],
                                             r.stderr[-3000:])
