@@ -1,15 +1,20 @@
 """IMPACT serving throughput: einsum-vs-Pallas sweep + mixed-traffic serve.
 
-Two measurements:
+All measurements run through the compiled-session runtime: each
+configuration is a frozen ``RuntimeSpec`` resolved once by
+``IMPACTSystem.compile`` into an ``InferenceSession`` of AOT executables,
+so the timed loops never pay (or hide) jit-cache lookups or retraces.
 
-1. **Throughput sweep** — ``IMPACTSystem.predict`` samples/s at the
-   paper's MNIST dims (K=1568, n=500, m=10) across batch sizes, for both
-   ``impl="xla"`` (the einsum oracle) and ``impl="pallas"`` (the fused
-   crossbar kernel — interpret mode on CPU, so CPU numbers gauge
-   correctness plumbing and XLA-vs-kernel dispatch overhead rather than
-   TPU speed), plus the batched ``IMPACTEngine`` front end to expose
-   queueing + padding overhead.  Written to ``BENCH_throughput.json``
-   with machine-portable normalized ratios (each key / its impl family's
+Three measurements:
+
+1. **Throughput sweep** — ``session.predict`` samples/s at the paper's
+   MNIST dims (K=1568, n=500, m=10) across batch sizes, for both
+   ``backend="xla"`` (the einsum oracle) and ``backend="pallas"`` (the
+   fused crossbar kernel — interpret mode on CPU, so CPU numbers gauge
+   correctness plumbing and dispatch overhead rather than TPU speed),
+   plus the batched ``IMPACTEngine`` front end to expose queueing +
+   padding overhead.  Written to ``BENCH_throughput.json`` with
+   machine-portable normalized ratios (each key / its backend family's
    reference at the smallest batch) that CI gates against a committed
    baseline.
 
@@ -21,9 +26,9 @@ Two measurements:
    load.
 
 3. **Sharded sweep** (multi-device hosts only) — the same predict path
-   from a (data, model=2) mesh via ``sharding.crossbar`` on an R=2/S=2
-   split grid vs the identical split grid on one device, with argmax
-   parity asserted; lands under the ``"sharded"`` key of
+   from a (data, model=2) mesh via a ``RuntimeSpec`` topology on an
+   R=2/S=2 split grid vs the identical split grid on one device, with
+   argmax parity asserted; lands under the ``"sharded"`` key of
    ``BENCH_throughput.json`` and is exercised by the CI multi-device leg
    under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 
@@ -48,7 +53,7 @@ import numpy as np
 from .common import ARTIFACTS, emit
 
 from repro.core import CoTMConfig
-from repro.impact import IMPACTConfig, build_system
+from repro.impact import (IMPACTConfig, RuntimeSpec, Topology, build_system)
 from repro.serve import IMPACTEngine, poisson_arrivals, replay_trace
 
 BATCH_SIZES = (32, 128, 512)
@@ -70,12 +75,12 @@ def _random_cotm(key, K=1568, n=500, m=10, n_states=128, density=0.05):
     return cfg, params
 
 
-def _time_predict(system, lits, impl: str, mesh=None) -> float:
-    preds = system.predict(lits, impl=impl, mesh=mesh)  # compile + warm
+def _time_predict(session, lits) -> float:
+    preds = session.predict(lits).predictions   # compile + warm
     jax.block_until_ready(preds)
     t0 = time.time()
     for _ in range(REPEATS):
-        jax.block_until_ready(system.predict(lits, impl=impl, mesh=mesh))
+        jax.block_until_ready(session.predict(lits).predictions)
     return (time.time() - t0) / REPEATS
 
 
@@ -84,10 +89,13 @@ def throughput_sweep(system, cfg, *, quick: bool) -> dict:
     rng = np.random.default_rng(0)
     results: dict[str, dict] = {}
     batch_sizes = QUICK_BATCH_SIZES if quick else BATCH_SIZES
+    sessions = {impl: system.compile(RuntimeSpec(backend=impl,
+                                                 metering="off"))
+                for impl in ("xla", "pallas")}
     for B in batch_sizes:
         lits = jnp.asarray(rng.random((B, cfg.n_literals)) < 0.5)
-        for impl in ("xla", "pallas"):
-            dt = _time_predict(system, lits, impl)
+        for impl, session in sessions.items():
+            dt = _time_predict(session, lits)
             key = f"{impl}_b{B}"
             results[key] = dict(us_per_batch=dt * 1e6,
                                 samples_per_s=B / dt)
@@ -96,9 +104,8 @@ def throughput_sweep(system, cfg, *, quick: bool) -> dict:
     # Batched front end: request burst through the continuous scheduler.
     B = max(batch_sizes)
     lits = np.asarray(rng.random((B, cfg.n_literals)) < 0.5)
-    eng = IMPACTEngine(system, impl="xla", max_batch=min(B, 128),
-                       meter_energy=False)
-    eng.warmup()
+    eng = IMPACTEngine(system.compile(RuntimeSpec(
+        backend="xla", metering="off", capacity=min(B, 128))))
     t0 = time.time()
     _, stats = eng.run(lits)
     dt = time.time() - t0
@@ -108,7 +115,7 @@ def throughput_sweep(system, cfg, *, quick: bool) -> dict:
          f"{B / dt:.1f}")
 
     # Machine-portable gate metric: every samples/s ratioed to its OWN
-    # impl family's reference at the smallest batch.  Pallas interpret
+    # backend family's reference at the smallest batch.  Pallas interpret
     # mode is mostly single-threaded interpreter work while the XLA
     # einsum scales with CPU threads, so a cross-family ratio would shift
     # with core count; within a family the machine-speed factor cancels
@@ -133,10 +140,10 @@ def sharded_sweep(cfg, params, *, quick: bool) -> dict | None:
 
     The paper's MNIST layout fits one tile (R=S=1), so the grid is
     rebuilt with R=2 literal row-shards and S=2 class row-shards and
-    served from a (data, model=2) mesh via ``sharding.crossbar``; the
-    same split system timed without a mesh is the baseline, and argmax
-    parity between the two is asserted and recorded.  Returns None on
-    single-device hosts (the CI multi-device leg runs this with
+    served from a (data, model=2) mesh via the session topology; the
+    same split system compiled without a mesh is the baseline, and
+    argmax parity between the two is asserted and recorded.  Returns
+    None on single-device hosts (the CI multi-device leg runs this with
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8``; on CPU the
     numbers gauge partitioning + psum overhead, not TPU speed).
     """
@@ -152,6 +159,11 @@ def sharded_sweep(cfg, params, *, quick: bool) -> dict | None:
     system = build_system(params, cfg, jax.random.key(1), split)
     R, S = system.clause_g.shape[0], system.class_g.shape[0]
     assert R == 2 and S == 2, (R, S)
+    sess_single = system.compile(RuntimeSpec(backend="xla",
+                                             metering="off"))
+    sess_shard = system.compile(RuntimeSpec(
+        backend="xla", metering="off", topology=Topology(mesh=mesh)))
+    assert sess_shard.plan == (True, True), sess_shard.plan
 
     rng = np.random.default_rng(0)
     results: dict[str, dict] = {}
@@ -159,11 +171,11 @@ def sharded_sweep(cfg, params, *, quick: bool) -> dict | None:
     batch_sizes = QUICK_BATCH_SIZES if quick else BATCH_SIZES
     for B in batch_sizes:
         lits = jnp.asarray(rng.random((B, cfg.n_literals)) < 0.5)
-        p_single = np.asarray(system.predict(lits, impl="xla"))
-        p_shard = np.asarray(system.predict(lits, impl="xla", mesh=mesh))
+        p_single = np.asarray(sess_single.predict(lits).predictions)
+        p_shard = np.asarray(sess_shard.predict(lits).predictions)
         parity_ok &= bool((p_single == p_shard).all())
-        for key, m in (("single", None), ("sharded", mesh)):
-            dt = _time_predict(system, lits, "xla", mesh=m)
+        for key, sess in (("single", sess_single), ("sharded", sess_shard)):
+            dt = _time_predict(sess, lits)
             results[f"{key}_xla_b{B}"] = dict(us_per_batch=dt * 1e6,
                                               samples_per_s=B / dt)
             emit(f"impact_sharded/{key}_xla_b{B}", dt * 1e6,
@@ -180,17 +192,21 @@ def sharded_sweep(cfg, params, *, quick: bool) -> dict | None:
 def serve_comparison(system, cfg, *, n_requests: int, rate_rps: float,
                      capacity: int, flush_wait_s: float, seed: int,
                      impl: str = "xla") -> dict:
-    """Replay one seeded Poisson trace through both scheduler modes."""
+    """Replay one seeded Poisson trace through both scheduler modes (one
+    shared compiled session — the schedulers, not the runtime, differ)."""
     rng = np.random.default_rng(seed)
     lits = rng.random((n_requests, cfg.n_literals)) < 0.5
     arrivals = poisson_arrivals(n_requests, rate_rps, seed=seed)
+    session = system.compile(RuntimeSpec(backend=impl, metering="off",
+                                         capacity=capacity))
     out: dict = dict(seed=seed, n_requests=n_requests, rate_rps=rate_rps,
                      capacity=capacity, flush_wait_s=flush_wait_s,
                      impl=impl)
-    for mode, wait in (("continuous", 0.0), ("flush", flush_wait_s)):
-        eng = IMPACTEngine(system, impl=impl, mode=mode,
-                           max_batch=capacity, buckets=(capacity,),
-                           max_wait_s=wait, meter_energy=False)
+    engines = dict(
+        continuous=IMPACTEngine(session, max_wait_s=0.0),
+        flush=IMPACTEngine(session, mode="flush", buckets=(capacity,),
+                           max_wait_s=flush_wait_s))
+    for mode, eng in engines.items():
         eng.warmup()
         out[mode] = replay_trace(eng, lits, arrivals)
         emit(f"impact_serve/{mode}", out[mode]["p95_s"] * 1e6,
@@ -226,6 +242,14 @@ def main(quick: bool = False, json_dir: pathlib.Path | None = None) -> None:
 
 
 if __name__ == "__main__":
+    import warnings
+
+    from repro.impact import SpecDeprecationWarning
+
+    # The CI perf legs invoke this module directly: enforce the
+    # migration off the deprecated per-call kwargs here too (pytest.ini
+    # covers the test suite, benchmarks/run.py the orchestrator).
+    warnings.simplefilter("error", SpecDeprecationWarning)
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="CI perf-smoke scale: B<=32 sweep, short trace")

@@ -7,9 +7,16 @@ from __future__ import annotations
 import argparse
 import sys
 import traceback
+import warnings
 
 
 def main() -> None:
+    # Benchmarks must run on the RuntimeSpec/InferenceSession API, not
+    # the deprecated per-call kwargs: promote the shim warning to an
+    # error here (pytest.ini does the same for the test suite) so every
+    # CI leg that drives a benchmark enforces the migration.
+    from repro.impact import SpecDeprecationWarning
+    warnings.simplefilter("error", SpecDeprecationWarning)
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated section names to run")

@@ -11,6 +11,7 @@ Run:  PYTHONPATH=src python examples/crossbar_scaling.py
 """
 import pathlib
 import sys
+import warnings
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
@@ -20,10 +21,14 @@ import numpy as np
 
 from repro.core import CoTMConfig, predict, train_epochs
 from repro.data.synthetic import prototype
-from repro.impact import IMPACTConfig, build_system
+from repro.impact import IMPACTConfig, RuntimeSpec, build_system
 
 
 def main() -> None:
+    # Examples document the supported API: fail loudly if one slips back
+    # onto the deprecated per-call kwargs.
+    from repro.impact import SpecDeprecationWarning
+    warnings.simplefilter("error", SpecDeprecationWarning)
     cfg = CoTMConfig(n_literals=256, n_clauses=128, n_classes=6,
                      n_states=64, threshold=24, specificity=5.0)
     x, y = prototype(1024, n_classes=6, n_features=128, flip=0.05)
@@ -42,7 +47,8 @@ def main() -> None:
                             max_tile_rows=rows, max_tile_cols=cols,
                             max_class_rows=cols)
         system = build_system(params, cfg, jax.random.key(2), icfg)
-        preds = np.asarray(system.predict(lits[:512]))
+        session = system.compile(RuntimeSpec())     # default pallas spec
+        preds = np.asarray(session.predict(lits[:512]).predictions)
         if base is None:
             base = preds
         agree = (preds == base).mean()

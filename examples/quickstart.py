@@ -4,7 +4,9 @@
 2. train a Coalesced Tsetlin Machine (500 clauses, 10 classes);
 3. map the trained TAs + weights onto Y-Flash crossbar tiles (Boolean
    encode + two-phase analog tuning, full C2C/D2D variability);
-4. run in-memory inference and print the paper's Table-4 metrics;
+4. compile the programmed system into an InferenceSession (a frozen
+   RuntimeSpec resolved once: backend, topology, metering) and run
+   in-memory inference, printing the paper's Table-4 metrics;
 5. cross-check the Pallas kernels against the digital twin.
 
 Run:  PYTHONPATH=src python examples/quickstart.py [--epochs 10]
@@ -13,6 +15,7 @@ import argparse
 import pathlib
 import sys
 import time
+import warnings
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
@@ -23,11 +26,15 @@ import numpy as np
 from repro.core import (CoTMConfig, booleanize, include_mask, predict,
                         train_epochs)
 from repro.data.synthetic import digits
-from repro.impact import build_system
+from repro.impact import RuntimeSpec, build_system
 from repro.kernels import ops
 
 
 def main() -> None:
+    # Examples document the supported API: fail loudly if one slips back
+    # onto the deprecated per-call kwargs.
+    from repro.impact import SpecDeprecationWarning
+    warnings.simplefilter("error", SpecDeprecationWarning)
     ap = argparse.ArgumentParser()
     ap.add_argument("--epochs", type=int, default=8)
     ap.add_argument("--clauses", type=int, default=500)
@@ -68,8 +75,15 @@ def main() -> None:
           f"(paper Fig. 6 unipolar transform)")
     print(f"  mapped in {time.time() - t0:.0f}s")
 
-    print("== 4. in-memory inference ==")
-    preds, report = system.infer_with_report(lit_te)
+    print("== 4. in-memory inference (compiled session) ==")
+    # Runtime configuration is declared ONCE: the spec picks the backend
+    # (any registered lowering), topology, and metering mode, and
+    # compile() resolves it into AOT executables.  The serving engine
+    # takes the same session (IMPACTEngine(system.compile(spec))).
+    session = system.compile(RuntimeSpec(backend="pallas",
+                                         metering="staged"))
+    result = session.infer_with_report(lit_te)
+    preds, report = result.predictions, result.report
     hw_acc = float((preds == jnp.asarray(y_te)).mean())
     print(f"  software acc {sw_acc:.3f} | hardware acc {hw_acc:.3f} "
           "(paper: 0.963 sw == hw)")

@@ -1,5 +1,7 @@
 from .energy import EnergyReport
 from .pipeline import IMPACTConfig, IMPACTSystem, build_system
+from .runtime import (InferenceResult, InferenceSession, RuntimeSpec,
+                      SpecDeprecationWarning, Topology)
 from .tiles import (ClassTile, ClauseTile, encode_class_tile,
                     encode_clause_tile, weight_targets)
 from .yflash import (DeviceVariation, G_HCS_BOOL, G_LCS, I_CSA_THRESHOLD,
@@ -7,6 +9,8 @@ from .yflash import (DeviceVariation, G_HCS_BOOL, G_LCS, I_CSA_THRESHOLD,
 
 __all__ = [
     "EnergyReport", "IMPACTConfig", "IMPACTSystem", "build_system",
+    "InferenceResult", "InferenceSession", "RuntimeSpec",
+    "SpecDeprecationWarning", "Topology",
     "ClassTile", "ClauseTile", "encode_class_tile", "encode_clause_tile",
     "weight_targets", "DeviceVariation", "G_HCS_BOOL", "G_LCS",
     "I_CSA_THRESHOLD", "erase_pulse", "program_pulse", "pulse_until",

@@ -12,50 +12,40 @@ The same split is the `model`-axis sharding used by the distributed runtime
 sums), so this module is both the hardware simulator and the reference
 semantics for the multi-pod lowering.
 
-Inference is Pallas-backed: ``build_system`` converts conductances to
-per-cell read currents ONCE (``yflash.read_current`` hoisted out of the
-per-call path), and every entry point — ``clause_bits``, ``class_scores``,
-``predict``, ``infer_with_report`` — is a jitted function with an
-``impl={"pallas", "xla"}`` switch.  ``impl="pallas"`` (the default) routes
-``predict`` through the fused ``kernels.fused_impact`` crossbar->CSA->
-class-sum kernel (clause bits stay in VMEM; interpret mode on CPU like the
-other kernels) and the staged entry points through ``kernels.crossbar_mvm``
-per shard; ``impl="xla"`` runs the pure-einsum oracles from ``kernels.ref``
-for A/B testing.  Energy accounting rides the staged path, where the shard
-column currents the paper meters are explicit.
+``build_system`` converts conductances to per-cell read currents ONCE
+(``yflash.read_current`` hoisted out of the per-call path) and returns an
+``IMPACTSystem`` — the *programmed hardware*.  Runtime configuration
+lives one level up: ``system.compile(RuntimeSpec(...))`` resolves a
+frozen spec (backend registry name, mesh topology, metering mode,
+interpret policy, slot capacity) once into an ``InferenceSession`` of
+AOT-compiled executables for ``predict`` / ``infer_step`` /
+``infer_with_report`` (see ``impact.runtime``).  The old per-call
+``impl=`` / ``mesh=`` / ``meter=`` kwargs keep working through thin
+shims that warn ``SpecDeprecationWarning`` and forward to a session
+cached on the system.
 
-``infer_step`` is the continuous-batching entry point: one crossbar sweep
-over a fixed-capacity slot-table buffer with a validity mask, returning
-per-lane (per-request) read energies so the serving scheduler
-(``serve.impact_engine``) can admit/release lanes between sweeps and bill
-each request individually.
-
-Multi-device: every entry point takes a ``mesh`` (or inherits the
-system-level one from ``build_system(..., mesh=...)``); when the R/S
-shard counts divide the mesh's ``model`` axis, inference runs the
-``sharding.crossbar`` shard_map lowering — the Fig. 14 digital AND and
-ADC+add become the two psums — and falls back to the single-device
-kernels otherwise.
+``clause_bits`` / ``class_scores`` remain per-stage introspection helpers
+(jitted, registry-dispatched) for tests and notebooks that want to look
+at the analog quantities between the two crossbars.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..core.cotm import CoTMConfig, CoTMParams, include_mask, to_unipolar
-from ..kernels import ops, ref
+from ..kernels import backends
 from ..kernels.ref import pad_to as _pad_to
-from ..sharding import crossbar as crossbar_sh
 from . import energy as energy_mod
 from .energy import EnergyReport
 from .tiles import (ClassTile, ClauseTile, encode_class_tile,
                     encode_clause_tile)
-from .yflash import I_CSA_THRESHOLD, T_READ, V_READ, read_current
+from .yflash import I_CSA_THRESHOLD, read_current
 
 Array = jax.Array
 
@@ -71,135 +61,32 @@ class IMPACTConfig:
     encode_pulse_width: float = 1e-3
 
 
-# --- jitted inference entry points (module level => shared trace cache) ----
+# --- jitted stage helpers (module level => shared trace cache) -------------
+# ``impl`` is a backend-registry key; the registry object carries the
+# actual lowering, so these never switch on strings.
 
 @partial(jax.jit, static_argnames=("impl", "thresh"))
 def _clause_bits(literals: Array, clause_i: Array, nonempty: Array, *,
                  impl: str, thresh: float) -> tuple[Array, Array]:
     """-> (fired (B, C*tc) bool, shard column currents (B, R, C, tc))."""
-    if impl == "xla":
-        return ref.impact_clause_bits_ref(literals, clause_i, nonempty,
-                                          thresh=thresh)
-    B = literals.shape[0]
-    R, C, tr, tc = clause_i.shape
-    lit = _pad_to(literals.astype(jnp.float32), R * tr, axis=1, value=1)
-    drive = (1.0 - lit).reshape(B, R, tr)
-    cols = []
-    for r in range(R):                          # static shard unroll
-        cur = clause_i[r].transpose(1, 0, 2).reshape(tr, C * tc)
-        cols.append(ops.crossbar_mvm(drive[:, r], cur, v_read=1.0,
-                                     cutoff=0.0))
-    i_col = jnp.stack(cols, axis=1).reshape(B, R, C, tc)
-    fired = jnp.all(i_col < thresh, axis=1).reshape(B, C * tc)
-    return jnp.logical_and(fired, nonempty.astype(bool)), i_col
+    return backends.get_backend(impl).impact_clause_bits(
+        literals, clause_i, nonempty, thresh=thresh)
 
 
 @partial(jax.jit, static_argnames=("impl",))
 def _class_scores(clauses: Array, class_i: Array, *,
                   impl: str) -> tuple[Array, Array]:
     """-> (scores (B, m) = summed shard currents, currents (B, S, m))."""
-    if impl == "xla":
-        return ref.impact_class_scores_ref(clauses, class_i)
-    B = clauses.shape[0]
-    S, sr, m = class_i.shape
-    drive = _pad_to(clauses.astype(jnp.float32), S * sr, axis=1)
-    drive = drive[:, :S * sr].reshape(B, S, sr)
-    i_col = jnp.stack(
-        [ops.crossbar_mvm(drive[:, s], class_i[s], v_read=1.0, cutoff=0.0)
-         for s in range(S)], axis=1)            # per-shard ADC
-    return i_col.sum(axis=1), i_col             # digital add
-
-
-@partial(jax.jit, static_argnames=("impl", "thresh", "mesh"))
-def _predict(literals: Array, clause_i: Array, nonempty: Array,
-             class_i: Array, *, impl: str, thresh: float,
-             mesh=None) -> Array:
-    scores = ops.fused_impact(literals, clause_i, nonempty, class_i,
-                              thresh=thresh, impl=impl, mesh=mesh)
-    return jnp.argmax(scores, axis=-1)
-
-
-def _metered_scores(literals: Array, clause_i: Array, nonempty: Array,
-                    class_i: Array, valid: Array | None, *, impl: str,
-                    thresh: float, mesh) -> tuple[Array, Array, Array]:
-    """Shared metered core: -> (scores (B, m), per-lane summed clause
-    currents (B,), per-lane summed class currents (B,)).  The ONE place
-    that routes between the shard_map lowering (mesh can hold the R/S
-    grid) and the single-device staged path — keep the routing predicate
-    here so every metered caller shards (or falls back) identically."""
-    if mesh is not None and crossbar_sh.shardable(
-            mesh, clause_i.shape[0], class_i.shape[0]):
-        return crossbar_sh.fused_impact_shmap(
-            literals, clause_i, nonempty, class_i, thresh=thresh,
-            mesh=mesh, impl=impl, valid=valid, meter=True)
-    fired, i_clause = _clause_bits(literals, clause_i, nonempty,
-                                   impl=impl, thresh=thresh)
-    if valid is not None:
-        fired = jnp.logical_and(fired, valid[:, None])
-        i_clause = i_clause * valid[:, None, None, None]
-    scores, i_class = _class_scores(fired, class_i, impl=impl)
-    return scores, i_clause.sum(axis=(1, 2, 3)), i_class.sum(axis=(1, 2))
-
-
-@partial(jax.jit, static_argnames=("impl", "thresh", "meter", "mesh"))
-def _infer_step(literals: Array, clause_i: Array, nonempty: Array,
-                class_i: Array, valid: Array, *, impl: str, thresh: float,
-                meter: bool, mesh=None) -> tuple[Array, Array, Array]:
-    """One scheduler step over a fixed-capacity slot table: classify every
-    lane of the (capacity, K) literal buffer in a single crossbar sweep.
-
-    -> (preds (B,), per-lane clause read energy (B,) J, per-lane class
-    read energy (B,) J).  ``valid`` (B,) marks occupied lanes; free lanes
-    hold all-1 literals (rows float, no current) and are metered at
-    exactly zero, so admitting a request into a free slot mid-serve never
-    perturbs other lanes' scores or bills.  Invalid lanes return the
-    sentinel prediction -1 (a free lane fires every nonempty clause, so
-    its argmax would otherwise look like a real class).  With
-    ``meter=False`` the step runs the fused kernel (max-throughput path)
-    and the energy outputs are zeros; ``mesh`` distributes the crossbar
-    grid per ``sharding.crossbar``.
-    """
-    B = literals.shape[0]
-    valid = valid.astype(bool)
-    if not meter:
-        scores = ops.fused_impact(literals, clause_i, nonempty, class_i,
-                                  thresh=thresh, impl=impl, mesh=mesh)
-        zeros = jnp.zeros((B,), jnp.float32)
-        return jnp.where(valid, jnp.argmax(scores, axis=-1), -1), \
-            zeros, zeros
-    scores, i_cl, i_cs = _metered_scores(
-        literals, clause_i, nonempty, class_i, valid, impl=impl,
-        thresh=thresh, mesh=mesh)
-    e_cl, e_cs = energy_mod.per_lane_read_energy(i_cl, i_cs)
-    return jnp.where(valid, jnp.argmax(scores, axis=-1), -1), e_cl, e_cs
-
-
-@partial(jax.jit, static_argnames=("impl", "thresh", "mesh"))
-def _infer_metered(literals: Array, clause_i: Array, nonempty: Array,
-                   class_i: Array, valid: Array | None, *, impl: str,
-                   thresh: float, mesh=None) -> tuple[Array, Array, Array]:
-    """Staged inference with current metering: -> (preds, sum I_clause,
-    sum I_class).  The current sums are the paper's measured quantities;
-    reducing them inside the jit keeps the (B, R, n_pad) current tensor
-    transient.  ``valid`` (B,) masks batch-padding lanes out of the
-    meters: an all-1 literal pad lane draws no CLAUSE current (every row
-    floats) but fires every nonempty clause, so unmasked it would bill
-    phantom class-tile energy.  With a shardable ``mesh`` the currents
-    come from the distributed lowering (per-device partials psummed), so
-    metering works from a sharded grid too."""
-    scores, i_cl_lane, i_cs_lane = _metered_scores(
-        literals, clause_i, nonempty, class_i, valid, impl=impl,
-        thresh=thresh, mesh=mesh)
-    return jnp.argmax(scores, axis=-1), i_cl_lane.sum(), i_cs_lane.sum()
+    return backends.get_backend(impl).impact_class_scores(clauses, class_i)
 
 
 @dataclasses.dataclass
 class IMPACTSystem:
     """Programmed crossbar grid + digital periphery.
 
-    ``mesh`` (optional jax Mesh with a ``model`` axis) distributes the
-    R/S row-shards across devices for every inference entry point (see
-    ``sharding.crossbar``); per-call ``mesh=`` arguments override it.
+    ``mesh`` (optional jax Mesh with a ``model`` axis) is the
+    system-level default topology: sessions compiled from a spec whose
+    topology has no mesh inherit it (see ``RuntimeSpec.topology``).
     """
     clause_g: Array        # (R, C, tr, tc) conductances
     nonempty: Array        # (n_pad,) digital empty-clause mask
@@ -213,60 +100,94 @@ class IMPACTSystem:
     encode_stats: dict[str, Any]
     mesh: Any = None
 
-    def _mesh_eff(self, mesh):
-        return mesh if mesh is not None else self.mesh
-
     def _nonempty_eff(self) -> Array:
         if self.cfg.mask_empty:
             return self.nonempty
         return jnp.ones_like(self.nonempty)
 
-    @staticmethod
-    def _check_impl(impl: str) -> None:
-        if impl not in ("pallas", "xla"):
-            raise ValueError(
-                f"impl must be 'pallas' or 'xla', got {impl!r}")
+    # -- compiled-session runtime ------------------------------------------
+    def compile(self, spec=None) -> "Any":
+        """Resolve a ``RuntimeSpec`` ONCE into an ``InferenceSession``
+        (cached per spec — compiling the same spec twice returns the
+        same session, so sessions are safe to re-derive anywhere).
+
+        ``spec=None`` compiles the default spec: the ``pallas`` backend,
+        the system-level mesh (if any) with ``shard="auto"``, staged
+        metering.  See ``impact.runtime``.
+        """
+        from . import runtime as rt
+        spec = rt.RuntimeSpec() if spec is None else spec
+        cache = self.__dict__.setdefault("_sessions", {})
+        if spec not in cache:
+            cache[spec] = rt.InferenceSession(self, spec)
+        return cache[spec]
+
+    def _legacy_session(self, what: str, kwargs: dict[str, Any],
+                        metering: str = "staged"):
+        """Deprecation shim core: map old per-call kwargs onto a cached
+        session.  Explicitly passed runtime-config kwargs warn; bare
+        calls forward silently (they already mean "the default spec")."""
+        from . import runtime as rt
+        legacy = sorted(k for k, v in kwargs.items() if v is not None)
+        if legacy:
+            warnings.warn(
+                f"IMPACTSystem.{what}({', '.join(legacy)}=...) is "
+                f"deprecated: encode runtime configuration in a "
+                f"RuntimeSpec and compile it once — "
+                f"system.compile(RuntimeSpec(...)).{what}(...) "
+                f"(see the README migration table)",
+                rt.SpecDeprecationWarning, stacklevel=3)
+        return self.compile(rt.legacy_spec(
+            impl=kwargs.get("impl"), mesh=kwargs.get("mesh"),
+            metering=metering))
 
     # -- inference ----------------------------------------------------------
     def clause_bits(self, literals: Array, *,
                     impl: str = "pallas") -> tuple[Array, Array]:
         """(B, K) -> (clauses (B, n_pad) bool, clause tile currents)."""
-        self._check_impl(impl)
         return _clause_bits(literals, self.clause_i, self._nonempty_eff(),
                             impl=impl, thresh=I_CSA_THRESHOLD)
 
     def class_scores(self, clauses: Array, *,
                      impl: str = "pallas") -> tuple[Array, Array]:
         """(B, n_pad) -> (scores (B, m) = summed shard currents, currents)."""
-        self._check_impl(impl)
         return _class_scores(clauses, self.class_i, impl=impl)
 
-    def predict(self, literals: Array, *, impl: str = "pallas",
+    def predict(self, literals: Array, *, impl: str | None = None,
                 mesh=None) -> Array:
-        """Fast path: fused Pallas crossbar->CSA->class-sum kernel; with a
-        (system- or call-level) mesh, the shard_map lowering."""
-        self._check_impl(impl)
-        return _predict(literals, self.clause_i, self._nonempty_eff(),
-                        self.class_i, impl=impl, thresh=I_CSA_THRESHOLD,
-                        mesh=self._mesh_eff(mesh))
+        """Fast path: fused crossbar->CSA->class-sum argmax through the
+        default session (``impl=``/``mesh=`` are deprecated shims)."""
+        session = self._legacy_session("predict",
+                                       dict(impl=impl, mesh=mesh))
+        return session.predict(literals).predictions
 
     def infer_step(self, literals: Array, valid: Array, *,
-                   impl: str = "pallas", meter: bool = False,
+                   impl: str | None = None, meter: bool | None = None,
                    mesh=None) -> tuple[Array, Array, Array]:
-        """Per-step entry point for the continuous-batching scheduler: one
-        crossbar sweep over a fixed-shape slot-table buffer.  Jits once per
-        (capacity, impl, meter, mesh) — the host-side scheduler calls it
-        every step with the same shape, so admission patterns never
-        retrace.
+        """Per-step entry point for the continuous-batching scheduler —
+        deprecated shim over ``session.infer_step`` (the scheduler itself
+        holds a session; see ``serve.impact_engine``).
 
         -> (preds (B,), per-lane clause energy (B,) J, per-lane class
         energy (B,) J); invalid lanes predict the sentinel -1; energies
-        are zeros when ``meter=False`` (fused kernel path)."""
-        self._check_impl(impl)
-        return _infer_step(literals, self.clause_i, self._nonempty_eff(),
-                           self.class_i, jnp.asarray(valid), impl=impl,
-                           thresh=I_CSA_THRESHOLD, meter=meter,
-                           mesh=self._mesh_eff(mesh))
+        are zeros without metering (fused kernel path)."""
+        session = self._legacy_session(
+            "infer_step", dict(impl=impl, meter=meter, mesh=mesh),
+            metering="staged" if meter else "off")
+        res = session.infer_step(literals, valid)
+        return res.predictions, res.e_clause_lanes, res.e_class_lanes
+
+    def infer_with_report(self, literals: Array, *,
+                          impl: str | None = None,
+                          valid: Array | None = None,
+                          mesh=None) -> tuple[Array, EnergyReport]:
+        """``valid`` (B,) bool marks real lanes in a padded batch; padding
+        lanes are excluded from the energy/ops/datapoint accounting (their
+        predictions still come back and are dropped by the caller)."""
+        session = self._legacy_session("infer_with_report",
+                                       dict(impl=impl, mesh=mesh))
+        res = session.infer_with_report(literals, valid=valid)
+        return res.predictions, res.report
 
     def _grid_latency(self) -> float:
         """Fig. 14 latency of one sweep: ALL n_clauses columns stream
@@ -292,34 +213,6 @@ class IMPACTSystem:
             datapoints=datapoints,
             area_mm2=sum(self.area_mm2().values()))
 
-    def infer_with_report(self, literals: Array, *,
-                          impl: str = "pallas",
-                          valid: Array | None = None,
-                          mesh=None) -> tuple[Array, EnergyReport]:
-        """``valid`` (B,) bool marks real lanes in a padded batch; padding
-        lanes are excluded from the energy/ops/datapoint accounting (their
-        predictions still come back and are dropped by the caller)."""
-        self._check_impl(impl)
-        B = (literals.shape[0] if valid is None
-             else int(np.asarray(valid).sum()))
-        preds, i_clause_sum, i_class_sum = _infer_metered(
-            literals, self.clause_i, self._nonempty_eff(), self.class_i,
-            valid if valid is None else jnp.asarray(valid),
-            impl=impl, thresh=I_CSA_THRESHOLD, mesh=self._mesh_eff(mesh))
-
-        e_clause = float(V_READ * i_clause_sum * T_READ)
-        e_class = float(V_READ * i_class_sum * T_READ)
-        ops_xp = B * (self.n_literals * self.n_clauses
-                      + self.n_clauses * self.n_classes)
-        report = EnergyReport(
-            read_energy_j=e_clause + e_class,
-            clause_energy_j=e_clause, class_energy_j=e_class,
-            program_energy_j=self.encode_stats["program_energy_j"],
-            erase_energy_j=self.encode_stats["erase_energy_j"],
-            latency_s=self._grid_latency(), ops_crosspoint=ops_xp,
-            datapoints=B, area_mm2=sum(self.area_mm2().values()))
-        return preds, report
-
     # -- metrics ------------------------------------------------------------
     def area_mm2(self) -> dict[str, float]:
         # Paper convention (Table 4): area of the *occupied* region.
@@ -333,8 +226,8 @@ def build_system(params: CoTMParams, cfg: CoTMConfig, key: Array,
                  impact_cfg: IMPACTConfig = IMPACTConfig(), *,
                  mesh=None) -> IMPACTSystem:
     """Map a trained CoTM onto crossbar tiles (Figs. 6, 9, 11).  ``mesh``
-    (optional) makes every inference entry point serve from a grid
-    distributed over the mesh's ``model``/data axes."""
+    (optional) becomes the system-level default topology every compiled
+    session inherits (``RuntimeSpec.topology`` can override it)."""
     K, n = params.ta_state.shape
     m = params.weights.shape[0]
     ic = impact_cfg
@@ -382,7 +275,7 @@ def build_system(params: CoTMParams, cfg: CoTMConfig, key: Array,
                  erase_energy_j=e_er_cl + e_er_w)
     nonempty = _pad_to(include.any(axis=0), C * tc, 0)
     # Conductance -> read-current conversion happens ONCE here; every
-    # inference call (jitted above) consumes the precomputed currents.
+    # compiled session consumes the precomputed currents.
     return IMPACTSystem(
         clause_g=clause_g, nonempty=nonempty, class_g=class_g,
         clause_i=read_current(clause_g), class_i=read_current(class_g),

@@ -1,0 +1,379 @@
+"""Compiled-session runtime: ``RuntimeSpec`` -> ``InferenceSession``.
+
+The paper's deployment story is a *fixed* fabricated system — tile
+geometry, shard topology, and metering are decided once at programming
+time, not per inference call.  This module gives the reproduction the
+same shape: a frozen declarative **``RuntimeSpec``** (backend name, mesh
+topology, metering mode, precision, interpret policy, slot capacity)
+that ``IMPACTSystem.compile(spec)`` resolves ONCE into an immutable
+**``InferenceSession``**:
+
+* the backend is looked up in the registry (``kernels.backends``) at
+  compile time — no per-call ``impl=`` string switches;
+* the shard placement (``sharding.crossbar.shard_plan``: fully sharded,
+  asymmetric R-only / S-only, or single-device) is resolved from the
+  spec's topology at compile time — no per-call ``mesh=`` plumbing;
+* every entry point (``predict`` / ``infer_step`` /
+  ``infer_with_report``) is an AOT-lowered executable
+  (``jax.jit(...).lower(...).compile()``) at the session's fixed shapes:
+  ``capacity`` and ``batch_sizes`` compile at session build, other batch
+  shapes compile once on first use and are cached — an executable can
+  never retrace, which the session's trace counters
+  (``session.trace_count``) pin in tests;
+* results come back as a unified ``InferenceResult`` (predictions,
+  scores, optional ``EnergyReport`` / per-lane energies) instead of
+  per-entry-point tuple shapes.
+
+The legacy per-call kwargs (``impl=``, ``mesh=``, ``meter=``,
+``meter_energy=``) keep working through thin shims on ``IMPACTSystem``
+and ``IMPACTEngine`` that emit ``SpecDeprecationWarning`` and forward to
+a session cached on the system, so old call sites run unchanged (and
+bit-identically) while the repo itself is held warning-clean by the
+tier-1 filter in ``pytest.ini``.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import backends
+from ..sharding import crossbar as crossbar_sh
+from . import energy as energy_mod
+from .energy import EnergyReport
+from .yflash import I_CSA_THRESHOLD, T_READ, V_READ
+
+Array = jax.Array
+
+METERING_MODES = ("off", "staged")
+PRECISIONS = ("float32",)
+
+#: Canonical input dtypes of every session executable.  Callers may pass
+#: bool / int / float {0,1} literals; the session casts ONCE before the
+#: executable so AOT avals never fragment by caller dtype.
+LITERAL_DTYPE = jnp.int8
+
+
+class SpecDeprecationWarning(DeprecationWarning):
+    """Per-call runtime-config kwargs (``impl=`` / ``mesh=`` / ``meter=``
+    / ``meter_energy=``) are deprecated: encode them in a ``RuntimeSpec``
+    and run through ``IMPACTSystem.compile(spec)``.  Tier-1 promotes this
+    warning to an error for the repo's own callers (``pytest.ini``)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Where the crossbar grid lives on the device mesh.
+
+    ``mesh``: a jax Mesh with a ``model`` axis (and optional
+    ``pod``/``data`` batch axes); ``None`` inherits the system-level mesh
+    from ``build_system(..., mesh=...)``.  ``shard`` picks the placement
+    of the (R, S) shard grid on the model axis — ``"auto"`` shards
+    whatever divides (both, R-only, or S-only with the other operand
+    replicated), ``"both"``/``"r"``/``"s"`` demand a placement (compile
+    raises if the shard count doesn't divide), ``"none"`` forces the
+    single-device kernels even on a meshed system.
+    """
+    mesh: Any = None
+    shard: str = "auto"
+
+    def __post_init__(self):
+        if self.shard not in crossbar_sh.SHARD_MODES:
+            raise ValueError(
+                f"topology shard mode must be one of "
+                f"{crossbar_sh.SHARD_MODES}, got {self.shard!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeSpec:
+    """Declarative, hashable description of ONE inference runtime.
+
+    Resolved exactly once by ``IMPACTSystem.compile`` — everything that
+    used to be a per-call kwarg is a field here:
+
+    ==================  =============================================
+    field               replaces
+    ==================  =============================================
+    ``backend``         ``impl="pallas" | "xla"`` (registry key)
+    ``topology``        ``mesh=`` threading (+ asymmetric placement)
+    ``metering``        ``meter=`` / ``meter_energy=``
+    ``interpret``       ``interpret=`` (None = auto off-TPU)
+    ``capacity``        the serving slot-table shape (``max_batch``)
+    ``batch_sizes``     extra predict shapes to AOT-compile eagerly
+    ==================  =============================================
+
+    ``metering="staged"`` meters read energy on the staged per-shard
+    path (required by ``infer_with_report`` and per-request billing);
+    ``"off"`` serves through the fused kernel at max throughput and
+    bills nothing.  ``precision`` is validated for forward compatibility
+    (the analog model is float32 end to end today).
+    """
+    backend: str = "pallas"
+    topology: Topology = Topology()
+    metering: str = "staged"
+    precision: str = "float32"
+    interpret: bool | None = None
+    capacity: int | None = None
+    batch_sizes: tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if self.metering not in METERING_MODES:
+            raise ValueError(f"metering must be one of {METERING_MODES}, "
+                             f"got {self.metering!r}")
+        if self.precision not in PRECISIONS:
+            raise ValueError(f"precision must be one of {PRECISIONS}, "
+                             f"got {self.precision!r}")
+        if self.capacity is not None and self.capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {self.capacity}")
+        object.__setattr__(self, "batch_sizes",
+                           tuple(int(b) for b in self.batch_sizes))
+        if any(b < 1 for b in self.batch_sizes):
+            raise ValueError(f"batch_sizes must be >= 1, "
+                             f"got {self.batch_sizes}")
+
+
+@dataclasses.dataclass(frozen=True)
+class InferenceResult:
+    """Unified result of every session entry point.
+
+    ``predictions`` is always set (sentinel -1 on invalid lanes for
+    ``infer_step``); ``scores`` rides the fused paths that materialise
+    class currents; ``report`` is the batch-level ``EnergyReport`` from
+    ``infer_with_report``; the per-lane energies (J) ride ``infer_step``
+    so a serving scheduler can bill each request individually.
+    """
+    predictions: Array
+    scores: Array | None = None
+    report: EnergyReport | None = None
+    e_clause_lanes: Array | None = None
+    e_class_lanes: Array | None = None
+
+
+class InferenceSession:
+    """Immutable compiled runtime for one ``(IMPACTSystem, RuntimeSpec)``.
+
+    Built by ``IMPACTSystem.compile(spec)`` (which caches sessions per
+    spec — compiling the same spec twice returns the same session).  All
+    spec resolution (backend lookup, mesh/shard-plan placement, metering
+    mode) happens here, once; the entry points only look up an
+    executable and run it.
+    """
+
+    def __init__(self, system, spec: RuntimeSpec):
+        self.spec = spec
+        self.system = system
+        self.backend = backends.get_backend(spec.backend)
+        top = spec.topology
+        self.mesh = top.mesh if top.mesh is not None else system.mesh
+        R, S = system.clause_i.shape[0], system.class_i.shape[0]
+        self.plan = (crossbar_sh.shard_plan(self.mesh, R, S, top.shard)
+                     if self.mesh is not None else None)
+        if self.mesh is None and top.shard not in ("auto", "none"):
+            raise ValueError(
+                f"topology demands shard={top.shard!r} but neither the "
+                f"spec nor the system provides a mesh")
+        self._nonempty = system._nonempty_eff()
+        self._exes: dict[tuple[str, int], Any] = {}
+        self._traces: collections.Counter = collections.Counter()
+        # Programming-time compilation: the serving sweep and any
+        # declared predict shapes are executables before the first
+        # request arrives.
+        if spec.capacity is not None:
+            self._exe("infer_step", spec.capacity)
+        for b in spec.batch_sizes:
+            self._exe("predict", b)
+
+    # -- properties ---------------------------------------------------------
+    @property
+    def capacity(self) -> int | None:
+        return self.spec.capacity
+
+    @property
+    def meters_energy(self) -> bool:
+        return self.spec.metering != "off"
+
+    @property
+    def trace_count(self) -> int:
+        """Total number of times any entry point's python body was traced
+        (== number of compiles).  Frozen after warmup: the retrace-guard
+        tests assert this does not move across serving."""
+        return int(sum(self._traces.values()))
+
+    def compiled_shapes(self, entry: str | None = None) -> list[tuple]:
+        return sorted(k for k in self._exes
+                      if entry is None or k[0] == entry)
+
+    def is_compiled(self, entry: str, batch: int) -> bool:
+        return (entry, batch) in self._exes
+
+    def warm(self, batch: int, entry: str = "infer_step") -> None:
+        """Ensure the ``(entry, batch)`` executable exists (AOT compile
+        only — nothing is executed, unlike the old warmup sweeps)."""
+        self._exe(entry, batch)
+
+    # -- entry points -------------------------------------------------------
+    def predict(self, literals) -> InferenceResult:
+        """Fast path: fused crossbar->CSA->class-sum scores + argmax."""
+        lits = self._lits(literals)
+        exe = self._exe("predict", lits.shape[0])
+        preds, scores = exe(lits, *self._operands())
+        return InferenceResult(predictions=preds, scores=scores)
+
+    def infer_step(self, literals, valid) -> InferenceResult:
+        """One scheduler sweep over a fixed-capacity slot buffer.
+
+        ``valid`` (B,) marks occupied lanes; invalid lanes predict the
+        sentinel -1 and bill exactly zero.  Per-lane read energies are
+        zeros when the spec's metering is ``"off"`` (fused-kernel path).
+        """
+        lits = self._lits(literals)
+        v = jnp.asarray(valid, jnp.bool_)
+        exe = self._exe("infer_step", lits.shape[0])
+        preds, e_cl, e_cs = exe(lits, v, *self._operands())
+        return InferenceResult(predictions=preds, e_clause_lanes=e_cl,
+                               e_class_lanes=e_cs)
+
+    def infer_with_report(self, literals, valid=None) -> InferenceResult:
+        """Staged + metered inference with the paper's batch-level
+        ``EnergyReport``.  ``valid`` (B,) bool marks real lanes in a
+        padded batch; padding lanes are excluded from the
+        energy/ops/datapoint accounting (their predictions still come
+        back and are dropped by the caller)."""
+        if not self.meters_energy:
+            raise RuntimeError(
+                "this session was compiled with metering='off' — "
+                "infer_with_report needs RuntimeSpec(metering='staged')")
+        lits = self._lits(literals)
+        B = lits.shape[0]
+        v_np = (np.ones((B,), bool) if valid is None
+                else np.asarray(valid, bool))
+        exe = self._exe("infer_with_report", B)
+        preds, i_cl_sum, i_cs_sum = exe(lits, jnp.asarray(v_np),
+                                        *self._operands())
+        sys_ = self.system
+        e_clause = float(V_READ * i_cl_sum * T_READ)
+        e_class = float(V_READ * i_cs_sum * T_READ)
+        n_dp = int(v_np.sum())
+        ops_xp = n_dp * (sys_.n_literals * sys_.n_clauses
+                         + sys_.n_clauses * sys_.n_classes)
+        report = EnergyReport(
+            read_energy_j=e_clause + e_class,
+            clause_energy_j=e_clause, class_energy_j=e_class,
+            program_energy_j=sys_.encode_stats["program_energy_j"],
+            erase_energy_j=sys_.encode_stats["erase_energy_j"],
+            latency_s=sys_._grid_latency(), ops_crosspoint=ops_xp,
+            datapoints=n_dp, area_mm2=sum(sys_.area_mm2().values()))
+        return InferenceResult(predictions=preds, report=report)
+
+    # -- compiled-function plumbing -----------------------------------------
+    def _lits(self, literals) -> Array:
+        return jnp.asarray(literals, LITERAL_DTYPE)
+
+    def _operands(self) -> tuple[Array, Array, Array]:
+        sys_ = self.system
+        return sys_.clause_i, self._nonempty, sys_.class_i
+
+    def _exe(self, entry: str, batch: int):
+        key = (entry, batch)
+        exe = self._exes.get(key)
+        if exe is None:
+            exe = self._compile_entry(entry, batch)
+            self._exes[key] = exe
+        return exe
+
+    def _compile_entry(self, entry: str, batch: int):
+        sys_ = self.system
+        lit = jax.ShapeDtypeStruct((batch, sys_.n_literals), LITERAL_DTYPE)
+        valid = jax.ShapeDtypeStruct((batch,), jnp.bool_)
+        consts = self._operands()
+        if entry == "predict":
+            lowered = jax.jit(self._predict_fn).lower(lit, *consts)
+        elif entry == "infer_step":
+            lowered = jax.jit(self._infer_step_fn).lower(lit, valid, *consts)
+        elif entry == "infer_with_report":
+            lowered = jax.jit(self._report_fn).lower(lit, valid, *consts)
+        else:
+            raise ValueError(f"unknown entry point {entry!r}")
+        return lowered.compile()
+
+    # The traced bodies below run ONLY inside ``.lower()`` — the trace
+    # counter bumps are python side effects that count compilations.
+    def _scores_expr(self, literals, clause_i, nonempty, class_i):
+        if self.plan is not None:
+            return crossbar_sh.fused_impact_shmap(
+                literals, clause_i, nonempty, class_i,
+                thresh=I_CSA_THRESHOLD, mesh=self.mesh,
+                impl=self.backend.name, interpret=self.spec.interpret,
+                shard_r=self.plan[0], shard_s=self.plan[1])
+        return self.backend.fused_impact(
+            literals, clause_i, nonempty, class_i,
+            thresh=I_CSA_THRESHOLD, interpret=self.spec.interpret)
+
+    def _metered_expr(self, literals, valid, clause_i, nonempty, class_i):
+        """Staged metered core -> (scores (B, m), per-lane summed clause
+        currents (B,), per-lane summed class currents (B,)) — the ONE
+        routing point between the shard_map lowering and the
+        single-device staged path, resolved from the compile-time plan."""
+        if self.plan is not None:
+            return crossbar_sh.fused_impact_shmap(
+                literals, clause_i, nonempty, class_i,
+                thresh=I_CSA_THRESHOLD, mesh=self.mesh,
+                impl=self.backend.name, interpret=self.spec.interpret,
+                valid=valid, meter=True,
+                shard_r=self.plan[0], shard_s=self.plan[1])
+        fired, i_clause = self.backend.impact_clause_bits(
+            literals, clause_i, nonempty, thresh=I_CSA_THRESHOLD,
+            interpret=self.spec.interpret)
+        fired = jnp.logical_and(fired, valid[:, None])
+        i_clause = i_clause * valid[:, None, None, None]
+        scores, i_class = self.backend.impact_class_scores(
+            fired, class_i, interpret=self.spec.interpret)
+        return scores, i_clause.sum(axis=(1, 2, 3)), i_class.sum(axis=(1, 2))
+
+    def _predict_fn(self, literals, clause_i, nonempty, class_i):
+        self._traces["predict"] += 1
+        scores = self._scores_expr(literals, clause_i, nonempty, class_i)
+        return jnp.argmax(scores, axis=-1), scores
+
+    def _infer_step_fn(self, literals, valid, clause_i, nonempty, class_i):
+        self._traces["infer_step"] += 1
+        valid = valid.astype(bool)
+        if not self.meters_energy:
+            scores = self._scores_expr(literals, clause_i, nonempty,
+                                       class_i)
+            zeros = jnp.zeros((literals.shape[0],), jnp.float32)
+            return (jnp.where(valid, jnp.argmax(scores, axis=-1), -1),
+                    zeros, zeros)
+        scores, i_cl, i_cs = self._metered_expr(literals, valid, clause_i,
+                                                nonempty, class_i)
+        e_cl, e_cs = energy_mod.per_lane_read_energy(i_cl, i_cs)
+        return (jnp.where(valid, jnp.argmax(scores, axis=-1), -1),
+                e_cl, e_cs)
+
+    def _report_fn(self, literals, valid, clause_i, nonempty, class_i):
+        self._traces["infer_with_report"] += 1
+        scores, i_cl_lane, i_cs_lane = self._metered_expr(
+            literals, valid.astype(bool), clause_i, nonempty, class_i)
+        return jnp.argmax(scores, axis=-1), i_cl_lane.sum(), i_cs_lane.sum()
+
+    def __repr__(self) -> str:
+        return (f"InferenceSession(backend={self.spec.backend!r}, "
+                f"plan={self.plan}, metering={self.spec.metering!r}, "
+                f"capacity={self.spec.capacity}, "
+                f"compiled={self.compiled_shapes()})")
+
+
+def legacy_spec(*, impl: str | None = None, mesh=None,
+                metering: str | None = None,
+                capacity: int | None = None) -> RuntimeSpec:
+    """Map the deprecated per-call kwargs onto a ``RuntimeSpec`` (the
+    shims' forwarding table; see the migration table in the README)."""
+    return RuntimeSpec(
+        backend=impl if impl is not None else "pallas",
+        topology=Topology(mesh=mesh),
+        metering=metering if metering is not None else "staged",
+        capacity=capacity)

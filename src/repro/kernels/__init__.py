@@ -7,12 +7,16 @@ Layout (one module per kernel + shared wrappers/oracles):
 * ``fused_cotm.py``   — both crossbars fused in one VMEM residency
 * ``fused_impact.py`` — fused ANALOG path: cell currents + CSA + periphery
 * ``crossbar_mvm.py`` — analog conductance MVM with read nonlinearity
-* ``ops.py``          — public jit'd wrappers (padding, interpret fallback)
+* ``backends.py``     — pluggable backend registry (pallas / xla / ...)
+* ``ops.py``          — public wrappers dispatching through the registry
 * ``ref.py``          — pure-jnp oracles (the test ground truth)
 """
-from . import ops, ref
+from . import backends, ops, ref
+from .backends import (available_backends, get_backend, register_backend,
+                       unregister_backend)
 from .ops import (class_sum, clause_eval, crossbar_mvm, fused_cotm,
                   fused_impact)
 
-__all__ = ["ops", "ref", "class_sum", "clause_eval", "crossbar_mvm",
-           "fused_cotm", "fused_impact"]
+__all__ = ["backends", "ops", "ref", "available_backends", "get_backend",
+           "register_backend", "unregister_backend", "class_sum",
+           "clause_eval", "crossbar_mvm", "fused_cotm", "fused_impact"]

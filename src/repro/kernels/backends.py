@@ -1,0 +1,359 @@
+"""Pluggable inference-backend registry.
+
+A *backend* is one lowering of the crossbar primitives the IMPACT
+runtime is built from — the Pallas kernels, the pure-einsum oracles, or
+(future) a TPU-native / metered-fused lowering.  Dispatch used to be an
+``if impl == "xla"`` string switch copy-pasted into every jitted entry
+point; it now lives here, so a new backend slots in by registering an
+object instead of touching call sites:
+
+    class MeteredFused(PallasBackend):
+        name = "pallas-metered"
+        ...
+    register_backend(MeteredFused())
+
+``kernels.ops`` keeps the public wrapper signatures (``impl=`` is simply
+the registry key) and the compiled-session runtime (``impact.runtime``)
+resolves a backend ONCE per ``RuntimeSpec`` instead of per call.
+
+Two policies are shared across every op and hoisted here from the four
+copies that used to live in ``ops.py``:
+
+* **interpret resolution** (``Backend.resolve_interpret``): Pallas
+  kernels run in interpret mode automatically off-TPU so the same call
+  sites work in CI (CPU) and production (TPU); reference backends have
+  no kernel to interpret and always resolve ``False``.
+* **neutral padding** (``pad_axis`` + the per-op plumbing in
+  ``PallasBackend``): arbitrary shapes are padded to MXU-aligned tiles
+  with *semantically neutral* values (literal rows pad with 1 — a
+  floating 'Z' row contributes no current; clause columns pad with
+  include=0/nonempty=0/weight=0; conductances pad above the
+  nonlinearity cutoff) and outputs are sliced back.
+
+The staged analog compositions (``impact_clause_bits`` /
+``impact_class_scores``) have a backend-generic default built from
+``crossbar_mvm`` — the Fig. 14 per-shard unroll — which reference
+backends override with their whole-array oracles.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import clause_eval as _clause_kernel
+from . import class_sum as _class_kernel
+from . import crossbar_mvm as _mvm_kernel
+from . import fused_cotm as _fused_kernel
+from . import fused_impact as _impact_kernel
+from . import ref
+
+Array = jax.Array
+
+
+def pad_axis(x: Array, mult: int, axis: int, value) -> Array:
+    """Pad ``axis`` up to the next multiple of ``mult`` with ``value``."""
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+class Backend:
+    """One lowering of the crossbar primitives.
+
+    Subclass, set ``name``, implement the primitive ops, and
+    ``register_backend`` an instance.  Instances are stateless
+    singletons: jitted entry points pass the *name* through static
+    arguments and resolve the object inside the trace, so registering a
+    backend never invalidates jit caches.
+    """
+
+    name: str = ""
+    #: True for oracle backends (pure jnp, no kernel, nothing to
+    #: interpret) — used by tests and benchmarks to pick A/B sides.
+    reference: bool = False
+
+    # -- shape policy ------------------------------------------------------
+    def resolve_interpret(self, interpret: bool | None) -> bool:
+        """The ONE interpret-mode resolver (was copy-pasted per wrapper):
+        ``None`` means "interpret off-TPU", so CI (CPU) and production
+        (TPU) share call sites."""
+        if interpret is None:
+            return jax.default_backend() != "tpu"
+        return bool(interpret)
+
+    # -- primitive ops -----------------------------------------------------
+    def clause_eval(self, literals: Array, include: Array, nonempty: Array,
+                    *, mode: str = "fired", interpret: bool | None = None,
+                    block_b: int = 128, block_n: int = 128,
+                    block_k: int = 512) -> Array:
+        raise NotImplementedError
+
+    def class_sum(self, clauses: Array, weights: Array, *,
+                  interpret: bool | None = None, block_b: int = 128,
+                  block_n: int = 512, block_m: int = 128) -> Array:
+        raise NotImplementedError
+
+    def fused_cotm(self, literals: Array, include: Array, nonempty: Array,
+                   weights: Array, *, interpret: bool | None = None,
+                   block_b: int = 128, block_n: int = 256) -> Array:
+        raise NotImplementedError
+
+    def fused_impact(self, literals: Array, clause_i: Array, nonempty: Array,
+                     class_i: Array, *, thresh: float,
+                     interpret: bool | None = None, block_b: int = 128,
+                     block_n: int = 256) -> Array:
+        raise NotImplementedError
+
+    def crossbar_mvm(self, drive: Array, g: Array, *, v_read: float = 2.0,
+                     nonlin: float = 1.5, cutoff: float = 10e-9,
+                     interpret: bool | None = None, block_b: int = 128,
+                     block_n: int = 128, block_k: int = 512) -> Array:
+        raise NotImplementedError
+
+    # -- staged analog compositions (Fig. 14 per-shard unroll) -------------
+    def impact_clause_bits(self, literals: Array, clause_i: Array,
+                           nonempty: Array, *, thresh: float,
+                           interpret: bool | None = None,
+                           ) -> tuple[Array, Array]:
+        """-> (fired (B, C*tc) bool, shard column currents (B, R, C, tc)).
+
+        Default composition shared by every kernel backend: per-shard
+        ``crossbar_mvm`` column currents, CSA threshold, digital AND
+        over the R row shards, ``nonempty`` mask.
+        """
+        B = literals.shape[0]
+        R, C, tr, tc = clause_i.shape
+        lit = ref.pad_to(literals.astype(jnp.float32), R * tr, axis=1,
+                         value=1)
+        drive = (1.0 - lit).reshape(B, R, tr)
+        cols = []
+        for r in range(R):                      # static shard unroll
+            cur = clause_i[r].transpose(1, 0, 2).reshape(tr, C * tc)
+            cols.append(self.crossbar_mvm(drive[:, r], cur, v_read=1.0,
+                                          cutoff=0.0, interpret=interpret))
+        i_col = jnp.stack(cols, axis=1).reshape(B, R, C, tc)
+        fired = jnp.all(i_col < thresh, axis=1).reshape(B, C * tc)
+        return jnp.logical_and(fired, nonempty.astype(bool)), i_col
+
+    def impact_class_scores(self, clauses: Array, class_i: Array, *,
+                            interpret: bool | None = None,
+                            ) -> tuple[Array, Array]:
+        """-> (scores (B, m) = summed shard currents, currents (B, S, m))."""
+        B = clauses.shape[0]
+        S, sr, m = class_i.shape
+        drive = ref.pad_to(clauses.astype(jnp.float32), S * sr, axis=1)
+        drive = drive[:, :S * sr].reshape(B, S, sr)
+        i_col = jnp.stack(
+            [self.crossbar_mvm(drive[:, s], class_i[s], v_read=1.0,
+                               cutoff=0.0, interpret=interpret)
+             for s in range(S)],
+            axis=1)                             # per-shard ADC
+        return i_col.sum(axis=1), i_col         # digital add
+
+
+class PallasBackend(Backend):
+    """The production lowering: Pallas TPU kernels (interpret mode
+    off-TPU), with the neutral-padding plumbing around each one."""
+
+    name = "pallas"
+
+    def clause_eval(self, literals, include, nonempty, *, mode="fired",
+                    interpret=None, block_b=128, block_n=128, block_k=512):
+        B, K = literals.shape
+        N = include.shape[1]
+        interpret = self.resolve_interpret(interpret)
+        block_k = min(block_k, max(128, -(-K // 128) * 128))
+        lit = pad_axis(pad_axis(literals.astype(jnp.int8), block_b, 0, 1),
+                       block_k, 1, 1)      # pad literals with 1 ('Z' rows)
+        inc = pad_axis(pad_axis(include.astype(jnp.int8), block_k, 0, 0),
+                       block_n, 1, 0)
+        ne = pad_axis(nonempty.astype(jnp.int8)[None, :], block_n, 1, 0)
+        out = _clause_kernel.clause_eval(
+            lit, inc, ne, mode=mode, block_b=block_b, block_n=block_n,
+            block_k=block_k, interpret=interpret)[:B, :N]
+        return out if mode == "viol" else out.astype(bool)
+
+    def class_sum(self, clauses, weights, *, interpret=None, block_b=128,
+                  block_n=512, block_m=128):
+        B, N = clauses.shape
+        M = weights.shape[1]
+        interpret = self.resolve_interpret(interpret)
+        block_n = min(block_n, max(128, -(-N // 128) * 128))
+        cl = pad_axis(pad_axis(clauses.astype(jnp.int8), block_b, 0, 0),
+                      block_n, 1, 0)
+        w = pad_axis(pad_axis(weights.astype(jnp.int32), block_n, 0, 0),
+                     block_m, 1, 0)
+        out = _class_kernel.class_sum(
+            cl, w, block_b=block_b, block_n=block_n, block_m=block_m,
+            interpret=interpret)
+        return out[:B, :M]
+
+    def fused_cotm(self, literals, include, nonempty, weights, *,
+                   interpret=None, block_b=128, block_n=256):
+        B, K = literals.shape
+        N, M = weights.shape
+        interpret = self.resolve_interpret(interpret)
+        block_n = min(block_n, max(128, -(-N // 128) * 128))
+        lit = pad_axis(pad_axis(literals.astype(jnp.int8), block_b, 0, 1),
+                       128, 1, 1)
+        inc = pad_axis(pad_axis(include.astype(jnp.int8), 128, 0, 0),
+                       block_n, 1, 0)
+        ne = pad_axis(nonempty.astype(jnp.int8)[None, :], block_n, 1, 0)
+        w = pad_axis(pad_axis(weights.astype(jnp.int32), block_n, 0, 0),
+                     128, 1, 0)
+        out = _fused_kernel.fused_cotm(
+            lit, inc, ne, w, block_b=block_b, block_n=block_n,
+            interpret=interpret)
+        return out[:B, :M]
+
+    def fused_impact(self, literals, clause_i, nonempty, class_i, *,
+                     thresh, interpret=None, block_b=128, block_n=256):
+        B, K = literals.shape
+        R, C, tr, tc = clause_i.shape
+        S, sr, M = class_i.shape
+        n_clause = C * tc
+        interpret = self.resolve_interpret(interpret)
+
+        # Unify the clause-column axis of both crossbars: the clause tile
+        # pads n to C*tc, the class tile to S*sr; dead columns (>= n)
+        # fire 0.
+        N = max(n_clause, S * sr)
+        block_n = min(block_n, max(128, -(-N // 128) * 128))
+        tr_pad = max(128, -(-tr // 128) * 128)
+
+        lit = pad_axis(literals.astype(jnp.float32), R * tr, 1, 1)
+        drive = (1.0 - lit).reshape(B, R, tr).transpose(1, 0, 2)
+        drive = pad_axis(pad_axis(drive, block_b, 1, 0.0), tr_pad, 2, 0.0)
+
+        ccur = clause_i.astype(jnp.float32).transpose(0, 2, 1, 3)
+        ccur = ccur.reshape(R, tr, n_clause)
+        ccur = pad_axis(pad_axis(ccur, tr_pad, 1, 0.0), block_n, 2, 0.0)
+        if N > n_clause:
+            ccur = pad_axis(ccur, -(-N // block_n) * block_n, 2, 0.0)
+
+        ne = pad_axis(nonempty.astype(jnp.int8)[None, :],
+                      -(-N // block_n) * block_n, 1, 0)
+
+        wcur = class_i.astype(jnp.float32).reshape(S * sr, M)
+        wcur = pad_axis(pad_axis(wcur, ne.shape[1], 0, 0.0), 128, 1, 0.0)
+
+        out = _impact_kernel.fused_impact(
+            drive, ccur, ne, wcur, thresh=thresh, block_b=block_b,
+            block_n=block_n, interpret=interpret)
+        return out[:B, :M]
+
+    def crossbar_mvm(self, drive, g, *, v_read=2.0, nonlin=1.5,
+                     cutoff=10e-9, interpret=None, block_b=128,
+                     block_n=128, block_k=512):
+        B, K = drive.shape
+        N = g.shape[1]
+        interpret = self.resolve_interpret(interpret)
+        block_k = min(block_k, max(128, -(-K // 128) * 128))
+        dr = pad_axis(pad_axis(drive.astype(jnp.float32), block_b, 0, 0.0),
+                      block_k, 1, 0.0)
+        # Pad conductances ABOVE the nonlinearity cutoff so padded cells
+        # do not get the LCS boost; padded drive rows are 0 so they
+        # contribute nothing.
+        gp = pad_axis(pad_axis(g.astype(jnp.float32), block_k, 0, 1.0),
+                      block_n, 1, 1.0)
+        out = _mvm_kernel.crossbar_mvm(
+            dr, gp, v_read=v_read, nonlin=nonlin, cutoff=cutoff,
+            block_b=block_b, block_n=block_n, block_k=block_k,
+            interpret=interpret)
+        return out[:B, :N]
+
+
+class XLABackend(Backend):
+    """Pure-einsum oracles (``kernels.ref``) for A/B parity runs and
+    wall-clock-sensitive CPU callers; every test ground-truths against
+    this backend."""
+
+    name = "xla"
+    reference = True
+
+    def resolve_interpret(self, interpret):
+        return False                      # nothing to interpret
+
+    def clause_eval(self, literals, include, nonempty, *, mode="fired",
+                    interpret=None, block_b=128, block_n=128, block_k=512):
+        if mode == "viol":
+            return ref.clause_viol_ref(literals, include)
+        return ref.clause_eval_ref(literals, include, nonempty)
+
+    def class_sum(self, clauses, weights, *, interpret=None, block_b=128,
+                  block_n=512, block_m=128):
+        return ref.class_sum_ref(clauses, weights)
+
+    def fused_cotm(self, literals, include, nonempty, weights, *,
+                   interpret=None, block_b=128, block_n=256):
+        return ref.fused_cotm_ref(literals, include, weights, nonempty)
+
+    def fused_impact(self, literals, clause_i, nonempty, class_i, *,
+                     thresh, interpret=None, block_b=128, block_n=256):
+        return ref.fused_impact_ref(literals, clause_i, nonempty, class_i,
+                                    thresh=thresh)
+
+    def crossbar_mvm(self, drive, g, *, v_read=2.0, nonlin=1.5,
+                     cutoff=10e-9, interpret=None, block_b=128,
+                     block_n=128, block_k=512):
+        return ref.crossbar_mvm_ref(drive, g, v_read=v_read, nonlin=nonlin,
+                                    cutoff=cutoff)
+
+    def impact_clause_bits(self, literals, clause_i, nonempty, *, thresh,
+                           interpret=None):
+        return ref.impact_clause_bits_ref(literals, clause_i, nonempty,
+                                          thresh=thresh)
+
+    def impact_class_scores(self, clauses, class_i, *, interpret=None):
+        return ref.impact_class_scores_ref(clauses, class_i)
+
+
+# -- registry ---------------------------------------------------------------
+
+_REGISTRY: dict[str, Backend] = {}
+
+
+def register_backend(backend: Backend, *, overwrite: bool = False) -> Backend:
+    """Register a backend under ``backend.name``.  Registering is how a
+    new lowering (TPU-native, metered-fused, ...) plugs into every entry
+    point — ``RuntimeSpec(backend=<name>)`` and ``ops.*(impl=<name>)``
+    resolve through here, so no call site changes."""
+    if not backend.name:
+        raise ValueError("backend must define a non-empty .name")
+    if backend.name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {backend.name!r} is already registered "
+                         f"(pass overwrite=True to replace it)")
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def unregister_backend(name: str) -> Backend:
+    """Remove a registered backend (tests / plugin teardown)."""
+    try:
+        return _REGISTRY.pop(name)
+    except KeyError:
+        raise ValueError(f"backend {name!r} is not registered") from None
+
+
+def get_backend(name: str | Backend) -> Backend:
+    """Resolve a registry key (or pass a backend instance through)."""
+    if isinstance(name, Backend):
+        return name
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; registered backends: "
+            f"{sorted(_REGISTRY)}") from None
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+register_backend(PallasBackend())
+register_backend(XLABackend())

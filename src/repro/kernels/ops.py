@@ -1,47 +1,29 @@
-"""Public jit'd wrappers around the Pallas kernels.
+"""Public wrappers around the crossbar primitives.
 
-Responsibilities:
+Each wrapper resolves ``impl`` through the backend registry
+(``kernels.backends``) and delegates: ``impl="pallas"`` runs the Pallas
+kernels (interpret mode off-TPU), ``impl="xla"`` the pure-einsum oracles,
+and any registered third backend slots in without touching these call
+sites.  The padding / interpret plumbing that used to be copy-pasted
+across the wrappers lives on the backend objects now (the shape-policy
+hooks); oracles live in ``ref.py`` and every kernel backend is
+exact-equality tested against them over shape sweeps and
+hypothesis-generated inputs.
 
-* accept arbitrary shapes/dtypes and pad to MXU-aligned tiles with
-  *semantically neutral* padding (literal rows pad with 1 — a floating 'Z'
-  row in the paper's crossbar contributes no current; clause columns pad
-  with include=0/nonempty=0/weight=0);
-* pick interpret mode automatically on non-TPU backends so the same call
-  sites run in CI (CPU) and production (TPU);
-* offer a pure-XLA fallback (``impl="xla"``) for A/B testing.
-
-Oracles live in ``ref.py``; every wrapper here is exact-equality tested
-against them over shape sweeps and hypothesis-generated inputs.
+``fused_impact`` additionally routes to the ``shard_map`` lowering
+(``sharding.crossbar``) when a mesh with a usable ``model`` axis is
+passed — including the asymmetric R-only / S-only plans where the
+non-dividing operand is replicated — falling back to the single-device
+backend otherwise, so callers can pass a mesh unconditionally.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
 
-from . import clause_eval as _clause_kernel
-from . import class_sum as _class_kernel
-from . import crossbar_mvm as _mvm_kernel
-from . import fused_cotm as _fused_kernel
-from . import fused_impact as _impact_kernel
-from . import ref
+from . import backends
+from .backends import pad_axis as _pad_axis  # noqa: F401  (legacy import path)
 
 Array = jax.Array
-
-
-def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
-
-
-def _pad_axis(x: Array, mult: int, axis: int, value) -> Array:
-    size = x.shape[axis]
-    pad = (-size) % mult
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths, constant_values=value)
 
 
 def clause_eval(literals: Array, include: Array,
@@ -54,49 +36,20 @@ def clause_eval(literals: Array, include: Array,
     literals (B, K) bool/{0,1}; include (K, N) bool/{0,1};
     nonempty (N,) bool (defaults to ``include.any(0)``).
     """
-    B, K = literals.shape
-    N = include.shape[1]
     if nonempty is None:
         nonempty = include.astype(bool).any(axis=0)
-    if impl == "xla":
-        out = (ref.clause_viol_ref(literals, include) if mode == "viol"
-               else ref.clause_eval_ref(literals, include, nonempty))
-        return out
-    if interpret is None:
-        interpret = _interpret_default()
-
-    block_k = min(block_k, max(128, -(-K // 128) * 128))
-    lit = _pad_axis(_pad_axis(literals.astype(jnp.int8), block_b, 0, 1),
-                    block_k, 1, 1)          # pad literals with 1 ('Z' rows)
-    inc = _pad_axis(_pad_axis(include.astype(jnp.int8), block_k, 0, 0),
-                    block_n, 1, 0)
-    ne = _pad_axis(nonempty.astype(jnp.int8)[None, :], block_n, 1, 0)
-    out = _clause_kernel.clause_eval(
-        lit, inc, ne, mode=mode, block_b=block_b, block_n=block_n,
-        block_k=block_k, interpret=interpret)[:B, :N]
-    return out if mode == "viol" else out.astype(bool)
+    return backends.get_backend(impl).clause_eval(
+        literals, include, nonempty, mode=mode, interpret=interpret,
+        block_b=block_b, block_n=block_n, block_k=block_k)
 
 
 def class_sum(clauses: Array, weights: Array, *, impl: str = "pallas",
               interpret: bool | None = None, block_b: int = 128,
               block_n: int = 512, block_m: int = 128) -> Array:
     """Class scores (B, M) int32 from clauses (B, N) and weights (N, M)."""
-    B, N = clauses.shape
-    M = weights.shape[1]
-    if impl == "xla":
-        return ref.class_sum_ref(clauses, weights)
-    if interpret is None:
-        interpret = _interpret_default()
-
-    block_n = min(block_n, max(128, -(-N // 128) * 128))
-    cl = _pad_axis(_pad_axis(clauses.astype(jnp.int8), block_b, 0, 0),
-                   block_n, 1, 0)
-    w = _pad_axis(_pad_axis(weights.astype(jnp.int32), block_n, 0, 0),
-                  block_m, 1, 0)
-    out = _class_kernel.class_sum(
-        cl, w, block_b=block_b, block_n=block_n, block_m=block_m,
-        interpret=interpret)
-    return out[:B, :M]
+    return backends.get_backend(impl).class_sum(
+        clauses, weights, interpret=interpret, block_b=block_b,
+        block_n=block_n, block_m=block_m)
 
 
 def fused_cotm(literals: Array, include: Array, weights: Array,
@@ -107,27 +60,11 @@ def fused_cotm(literals: Array, include: Array, weights: Array,
 
     weights is (N, M) — i.e. the class-crossbar layout (paper stores W^T).
     """
-    B, K = literals.shape
-    N, M = weights.shape
     if nonempty is None:
         nonempty = include.astype(bool).any(axis=0)
-    if impl == "xla":
-        return ref.fused_cotm_ref(literals, include, weights, nonempty)
-    if interpret is None:
-        interpret = _interpret_default()
-
-    block_n = min(block_n, max(128, -(-N // 128) * 128))
-    lit = _pad_axis(_pad_axis(literals.astype(jnp.int8), block_b, 0, 1),
-                    128, 1, 1)
-    inc = _pad_axis(_pad_axis(include.astype(jnp.int8), 128, 0, 0),
-                    block_n, 1, 0)
-    ne = _pad_axis(nonempty.astype(jnp.int8)[None, :], block_n, 1, 0)
-    w = _pad_axis(_pad_axis(weights.astype(jnp.int32), block_n, 0, 0),
-                  128, 1, 0)
-    out = _fused_kernel.fused_cotm(
-        lit, inc, ne, w, block_b=block_b, block_n=block_n,
-        interpret=interpret)
-    return out[:B, :M]
+    return backends.get_backend(impl).fused_cotm(
+        literals, include, nonempty, weights, interpret=interpret,
+        block_b=block_b, block_n=block_n)
 
 
 def fused_impact(literals: Array, clause_i: Array, nonempty: Array,
@@ -144,57 +81,29 @@ def fused_impact(literals: Array, clause_i: Array, nonempty: Array,
     ``mesh``: a jax Mesh with a ``model`` axis distributes the R/S row
     shards across devices via ``sharding.crossbar`` (digital AND == psum
     of partial CSA bits, ADC + add == psum of partial class currents) and
-    shards the batch over the data axes.  Falls back to the single-device
-    kernel below when the model axis is 1 or the shard counts don't
-    divide it, so callers can pass a mesh unconditionally.
+    shards the batch over the data axes.  When only one of R/S divides
+    the model axis, that operand shards and the other is replicated
+    (asymmetric plan); when neither divides, the single-device backend
+    runs, so callers can pass a mesh unconditionally.
 
     Padding is semantically neutral: padded literal rows drive 0 V (a
     floating row contributes no current), padded clause columns carry
     nonempty=0, padded class rows carry 0 S conductance.
     """
-    B, K = literals.shape
     R, C, tr, tc = clause_i.shape
-    S, sr, M = class_i.shape
-    n_clause = C * tc
-    assert nonempty.shape == (n_clause,), (nonempty.shape, n_clause)
+    S = class_i.shape[0]
+    assert nonempty.shape == (C * tc,), (nonempty.shape, C * tc)
     if mesh is not None:
         from ..sharding import crossbar as _crossbar  # lazy: avoids cycle
-        if _crossbar.shardable(mesh, R, S):
+        plan = _crossbar.shard_plan(mesh, R, S)
+        if plan is not None:
             return _crossbar.fused_impact_shmap(
                 literals, clause_i, nonempty, class_i, thresh=thresh,
-                mesh=mesh, impl=impl, interpret=interpret)
-    if impl == "xla":
-        return ref.fused_impact_ref(literals, clause_i, nonempty, class_i,
-                                    thresh=thresh)
-    if interpret is None:
-        interpret = _interpret_default()
-
-    # Unify the clause-column axis of both crossbars: the clause tile pads
-    # n to C*tc, the class tile to S*sr; dead columns (>= n) fire 0.
-    N = max(n_clause, S * sr)
-    block_n = min(block_n, max(128, -(-N // 128) * 128))
-    tr_pad = max(128, -(-tr // 128) * 128)
-
-    lit = _pad_axis(literals.astype(jnp.float32), R * tr, 1, 1)
-    drive = (1.0 - lit).reshape(B, R, tr).transpose(1, 0, 2)   # (R, B, tr)
-    drive = _pad_axis(_pad_axis(drive, block_b, 1, 0.0), tr_pad, 2, 0.0)
-
-    ccur = clause_i.astype(jnp.float32).transpose(0, 2, 1, 3)  # (R,tr,C,tc)
-    ccur = ccur.reshape(R, tr, n_clause)
-    ccur = _pad_axis(_pad_axis(ccur, tr_pad, 1, 0.0), block_n, 2, 0.0)
-    if N > n_clause:
-        ccur = _pad_axis(ccur, -(-N // block_n) * block_n, 2, 0.0)
-
-    ne = _pad_axis(nonempty.astype(jnp.int8)[None, :],
-                   -(-N // block_n) * block_n, 1, 0)
-
-    wcur = class_i.astype(jnp.float32).reshape(S * sr, M)
-    wcur = _pad_axis(_pad_axis(wcur, ne.shape[1], 0, 0.0), 128, 1, 0.0)
-
-    out = _impact_kernel.fused_impact(
-        drive, ccur, ne, wcur, thresh=thresh, block_b=block_b,
-        block_n=block_n, interpret=interpret)
-    return out[:B, :M]
+                mesh=mesh, impl=impl, interpret=interpret,
+                shard_r=plan[0], shard_s=plan[1])
+    return backends.get_backend(impl).fused_impact(
+        literals, clause_i, nonempty, class_i, thresh=thresh,
+        interpret=interpret, block_b=block_b, block_n=block_n)
 
 
 def crossbar_mvm(drive: Array, g: Array, *, v_read: float = 2.0,
@@ -203,23 +112,7 @@ def crossbar_mvm(drive: Array, g: Array, *, v_read: float = 2.0,
                  block_b: int = 128, block_n: int = 128,
                  block_k: int = 512) -> Array:
     """Analog crossbar column currents (B, N) f32."""
-    B, K = drive.shape
-    N = g.shape[1]
-    if impl == "xla":
-        return ref.crossbar_mvm_ref(drive, g, v_read=v_read, nonlin=nonlin,
-                                    cutoff=cutoff)
-    if interpret is None:
-        interpret = _interpret_default()
-
-    block_k = min(block_k, max(128, -(-K // 128) * 128))
-    dr = _pad_axis(_pad_axis(drive.astype(jnp.float32), block_b, 0, 0.0),
-                   block_k, 1, 0.0)
-    # Pad conductances ABOVE the nonlinearity cutoff so padded cells do not
-    # get the LCS boost; padded drive rows are 0 so they contribute nothing.
-    gp = _pad_axis(_pad_axis(g.astype(jnp.float32), block_k, 0, 1.0),
-                   block_n, 1, 1.0)
-    out = _mvm_kernel.crossbar_mvm(
-        dr, gp, v_read=v_read, nonlin=nonlin, cutoff=cutoff,
-        block_b=block_b, block_n=block_n, block_k=block_k,
-        interpret=interpret)
-    return out[:B, :N]
+    return backends.get_backend(impl).crossbar_mvm(
+        drive, g, v_read=v_read, nonlin=nonlin, cutoff=cutoff,
+        interpret=interpret, block_b=block_b, block_n=block_n,
+        block_k=block_k)

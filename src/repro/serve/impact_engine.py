@@ -43,9 +43,18 @@ Scheduler design (the PR-2 rebuild):
   arrival trace (``benchmarks/impact_throughput.py`` writes the
   comparison to ``BENCH_serve.json``).
 
-Energy metering note: with ``meter_energy=True`` steps run the STAGED
-per-shard kernel path — metering needs the column currents the fused
-kernel deliberately never materializes.  ``meter_energy=False`` serves
+Runtime configuration (PR-4): the engine takes a compiled
+``InferenceSession`` — backend, mesh topology, metering mode, and the
+slot-table shape are all resolved ONCE by ``IMPACTSystem.compile(spec)``
+before the first request arrives, and the scheduler knows nothing about
+impl/mesh/metering.  Passing a bare ``IMPACTSystem`` compiles the default
+spec at ``max_batch`` as a convenience; the legacy ``impl=`` / ``mesh=``
+/ ``meter_energy=`` kwargs keep working through a ``SpecDeprecationWarning``
+shim that folds them into the spec.
+
+Energy metering note: a session with ``metering="staged"`` runs the
+STAGED per-shard kernel path — metering needs the column currents the
+fused kernel deliberately never materializes.  ``metering="off"`` serves
 through the fused ``fused_impact`` kernel (the max-throughput
 configuration) and bills nothing.
 """
@@ -54,6 +63,7 @@ from __future__ import annotations
 import bisect
 import dataclasses
 import time
+import warnings
 from typing import Callable, Sequence
 
 import jax
@@ -62,6 +72,8 @@ import numpy as np
 
 from ..impact.energy import EnergyReport
 from ..impact.pipeline import IMPACTSystem
+from ..impact.runtime import (InferenceSession, SpecDeprecationWarning,
+                              legacy_spec)
 from .engine import (Backpressure, BatchingQueue, Request, SlotTable,
                      latency_percentiles)
 
@@ -140,65 +152,127 @@ class IMPACTEngine:
     engine is saturated); ``step`` runs one scheduler iteration — admit
     into free slots, fire at most one crossbar sweep, release finished
     lanes — and returns completed ``(rid, prediction)`` pairs; ``run``
-    drives a whole request burst to completion.  ``impl`` selects the
-    Pallas kernels (default) or the einsum oracles for A/B runs;
+    drives a whole request burst to completion.
+
+    The engine serves through a compiled ``InferenceSession``: backend,
+    mesh topology, and metering are properties of the session's
+    ``RuntimeSpec``, resolved before the first request — the scheduler
+    only admits, sweeps, releases, and bills.  Per-lane energy
+    attribution still sums exactly to the batch meter under sharding
+    (the per-device partial currents are psummed before billing).
+
     ``mode="flush"`` selects the legacy flush-to-completion scheduler;
-    ``mesh`` serves every sweep from a crossbar grid sharded over the
-    mesh's ``model``/data axes (``sharding.crossbar``), defaulting to the
-    system-level mesh — per-lane energy attribution still sums exactly to
-    the batch meter under sharding (the per-device partial currents are
-    psummed before billing).
+    its ``buckets`` pad each flushed batch up to a compiled shape.
+    Kwargs are validated per mode — ``buckets`` in continuous mode and
+    ``target_occupancy`` in flush mode are rejected instead of silently
+    ignored.
     """
 
-    def __init__(self, system: IMPACTSystem, *, impl: str = "pallas",
-                 mode: str = "continuous", max_batch: int = 128,
+    def __init__(self, runtime: "InferenceSession | IMPACTSystem", *,
+                 mode: str = "continuous", max_batch: int | None = None,
                  max_wait_s: float = 0.01,
-                 buckets: Sequence[int] = DEFAULT_BUCKETS,
-                 meter_energy: bool = True, target_occupancy: float = 0.0,
+                 buckets: Sequence[int] | None = None,
+                 target_occupancy: float = 0.0,
                  queue_capacity: int | None = None,
-                 clock: Callable[[], float] = time.time, mesh=None):
+                 clock: Callable[[], float] = time.time,
+                 impl: str | None = None, mesh=None,
+                 meter_energy: bool | None = None):
         if mode not in ("continuous", "flush"):
             raise ValueError(f"mode must be 'continuous' or 'flush', "
                              f"got {mode!r}")
+        # Per-mode kwarg validation: a knob the chosen scheduler never
+        # reads is a configuration bug, not a default to shadow.
+        if mode == "continuous" and buckets is not None:
+            raise ValueError(
+                "buckets only apply to mode='flush' (the continuous "
+                "scheduler always sweeps the fixed slot-table shape); "
+                f"got buckets={tuple(buckets)!r}")
+        if mode == "flush" and target_occupancy != 0.0:
+            raise ValueError(
+                "target_occupancy only applies to mode='continuous' "
+                "(flush fires on full/stale batches); got "
+                f"target_occupancy={target_occupancy!r}")
         if not 0.0 <= target_occupancy <= 1.0:
             raise ValueError(f"target_occupancy must be in [0, 1], "
                              f"got {target_occupancy}")
-        self.system = system
-        self.impl = impl
-        self.mesh = mesh if mesh is not None else system.mesh
+
+        if isinstance(runtime, IMPACTSystem):
+            # Convenience/legacy path: compile a session for this engine.
+            legacy = sorted(k for k, v in dict(
+                impl=impl, mesh=mesh, meter_energy=meter_energy).items()
+                if v is not None)
+            if legacy:
+                warnings.warn(
+                    f"IMPACTEngine({', '.join(legacy)}=...) is deprecated:"
+                    f" encode runtime configuration in a RuntimeSpec and "
+                    f"pass IMPACTEngine(system.compile(spec)) (see the "
+                    f"README migration table)",
+                    SpecDeprecationWarning, stacklevel=2)
+            meter = meter_energy is None or meter_energy
+            session = runtime.compile(legacy_spec(
+                impl=impl, mesh=mesh,
+                metering="staged" if meter else "off",
+                capacity=128 if max_batch is None else max_batch))
+        else:
+            session = runtime
+            if impl is not None or mesh is not None \
+                    or meter_energy is not None:
+                raise ValueError(
+                    "impl/mesh/meter_energy cannot override a compiled "
+                    "InferenceSession — encode them in its RuntimeSpec")
+            if session.capacity is None:
+                raise ValueError(
+                    "IMPACTEngine needs a session compiled with "
+                    "RuntimeSpec(capacity=...) — the slot-table sweep "
+                    "shape is fixed at compile time")
+            if max_batch is not None and max_batch != session.capacity:
+                raise ValueError(
+                    f"max_batch={max_batch} does not match the session's "
+                    f"compiled capacity {session.capacity}")
+        self.session = session
+        self.system = session.system
+        self.impl = session.spec.backend
+        self.mesh = session.mesh
+        self.meter_energy = session.meters_energy
         self.mode = mode
-        self.capacity = max_batch
+        self.capacity = session.capacity
+        max_batch = self.capacity
         self.max_wait_s = max_wait_s
         self.target_occupancy = target_occupancy
         self.queue_capacity = queue_capacity
         self.clock = clock
-        # Buckets above max_batch are unreachable (a flush never exceeds
-        # max_batch and max_batch itself is always a bucket) — drop them
-        # so warmup() doesn't compile dead shapes.
-        self.buckets = sorted(b for b in set(int(b) for b in buckets)
-                              | {max_batch} if b <= max_batch)
+        if mode == "flush":
+            # Buckets above max_batch are unreachable (a flush never
+            # exceeds max_batch and max_batch itself is always a bucket)
+            # — drop them so warmup() doesn't compile dead shapes.
+            buckets = DEFAULT_BUCKETS if buckets is None else buckets
+            self.buckets = sorted(b for b in set(int(b) for b in buckets)
+                                  | {max_batch} if b <= max_batch)
+        else:
+            self.buckets = [max_batch]
         self.queue = BatchingQueue(max_batch=max_batch, max_wait_s=max_wait_s,
                                    clock=clock)
         self.table = SlotTable(max_batch)
-        self._lane_lits = np.ones((max_batch, system.n_literals), np.int8)
-        self.meter_energy = meter_energy
+        self._lane_lits = np.ones((max_batch, self.system.n_literals),
+                                  np.int8)
         self.batch_stats: list[BatchStats] = []
         self.reports: list[EnergyReport] = []
         self.request_records: list[RequestRecord] = []
         self._next_rid = 0
-        self._warm: set[int] = set()
+        # Shapes the session compiled at build time start warm: the
+        # continuous sweep can never be cold on a session engine.
+        self._warm: set[int] = {b for (_, b)
+                                in session.compiled_shapes("infer_step")}
 
     def warmup(self) -> None:
-        """Pre-compile every kernel shape this engine can fire (the single
-        slot-table shape in continuous mode; every bucket in flush mode) so
-        no serving step pays jit latency."""
+        """Ensure every sweep shape this engine can fire is a compiled
+        executable (the single slot-table shape in continuous mode —
+        already compiled at session build; every bucket in flush mode) so
+        no serving step pays compile latency.  AOT-compiles only; unlike
+        the pre-session warmup no dummy traffic is executed or metered."""
         shapes = [self.capacity] if self.mode == "continuous" else self.buckets
         for b in shapes:
-            lits = jnp.ones((b, self.system.n_literals), jnp.int8)
-            valid = np.zeros((b,), bool)
-            jax.block_until_ready(self.system.infer_step(
-                lits, valid, impl=self.impl, meter=self.meter_energy,
-                mesh=self.mesh)[0])
+            self.session.warm(b)
             self._warm.add(b)
 
     # -- request plumbing ---------------------------------------------------
@@ -260,12 +334,12 @@ class IMPACTEngine:
         cold = shape not in self._warm
         self._warm.add(shape)
         t0 = self.clock()
-        preds, e_cl, e_cs = self.system.infer_step(
-            lits, valid, impl=self.impl, meter=self.meter_energy,
-            mesh=self.mesh)
-        preds = np.asarray(jax.block_until_ready(preds))
-        e_cl = np.asarray(e_cl)
-        e_cs = np.asarray(e_cs)
+        res = self.session.infer_step(lits, valid)
+        preds = np.asarray(jax.block_until_ready(res.predictions))
+        # float64 before the per-request clause+class add so the request
+        # bills sum to the (float64) batch meter, not to f32 rounding.
+        e_cl = np.asarray(res.e_clause_lanes, np.float64)
+        e_cs = np.asarray(res.e_class_lanes, np.float64)
         t1 = self.clock()
         dt = t1 - t0
         recs = [RequestRecord(

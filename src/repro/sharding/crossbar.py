@@ -5,9 +5,9 @@ The paper's Fig. 14 modular scaling IS a ``psum`` decomposition (see
 by a digital AND, and partial class currents from the S class row-shards
 are digitised per shard (ADC) and summed digitally.  This module makes
 that correspondence executable: a ``shard_map`` over the ``model`` mesh
-axis places ``R // model`` clause row-shards and ``S // model`` class
-row-shards on each device, the batch is sharded over the data axes
-(``("pod", "data")`` when present), and
+axis places clause row-shards and/or class row-shards on each device, the
+batch is sharded over the data axes (``("pod", "data")`` when present),
+and
 
 * the digital AND becomes ``psum`` of per-device partial CSA violation
   bits (a column fires iff NO shard on ANY device sees current above the
@@ -15,12 +15,23 @@ row-shards on each device, the batch is sharded over the data axes
 * the per-shard ADC + digital adder tree becomes ``psum`` of per-device
   partial class currents (exact — the class read is linear in the drive).
 
+**Asymmetric plans.**  R and S need not both divide the model axis: when
+only one does, that operand shards and the other crossbar is REPLICATED —
+every device evaluates the replicated stage in full (its inputs are fully
+known on-device after the other stage's psum), so no combine is needed
+for it.  ``shard_plan`` picks the placement; ``(True, True)`` is the
+PR-3 fully-sharded grid, ``(True, False)`` / ``(False, True)`` are the
+R-only / S-only asymmetric plans, and ``None`` means no usable plan
+(fall back to the single-device kernel — correctness never depends on
+the mesh).
+
 Each device runs the existing Pallas ``crossbar_mvm`` kernel on its local
 shards (``impl="xla"`` swaps in the einsum oracle for A/B parity runs),
 so the single-device kernels and the distributed lowering share one
 numerical core.  ``kernels.ops.fused_impact`` routes here when a mesh is
-passed and ``shardable`` holds; otherwise it falls back to the
-single-device fused kernel, so call sites never have to branch.
+passed and a plan exists; the compiled-session runtime
+(``impact.runtime``) resolves the plan ONCE at ``compile()`` time from
+``RuntimeSpec.topology`` instead of re-deriving it per call.
 
 Parity contract (enforced in ``tests/test_crossbar_sharding.py``): CSA
 bits and argmax predictions are EXACTLY equal to the single-device kernel
@@ -42,6 +53,9 @@ from .rules import crossbar_rules
 
 Array = jax.Array
 
+#: Topology shard modes accepted by ``shard_plan`` / ``Topology.shard``.
+SHARD_MODES = ("auto", "both", "r", "s", "none")
+
 
 def model_size(mesh) -> int:
     """Size of the ``model`` axis (1 when absent or no mesh)."""
@@ -58,13 +72,49 @@ def data_axes(mesh) -> tuple[str, ...]:
                  if a in mesh.shape)
 
 
-def shardable(mesh, n_row_shards: int, n_class_shards: int) -> bool:
-    """True when the (R, S) shard grid can be placed on ``mesh``'s model
-    axis: both shard counts must divide the axis so every device holds an
-    equal, non-empty slice (the fallback for indivisible grids is the
-    single-device kernel — correctness never depends on the mesh)."""
+def shard_plan(mesh, n_row_shards: int, n_class_shards: int,
+               mode: str = "auto") -> tuple[bool, bool] | None:
+    """Resolve the (shard_r, shard_s) placement of an (R, S) grid on
+    ``mesh``'s model axis, or ``None`` when nothing can shard.
+
+    ``mode``: ``"auto"`` shards whichever of R / S divides the axis
+    (both when both do); ``"both"`` / ``"r"`` / ``"s"`` demand that
+    placement and raise ``ValueError`` when the shard count doesn't
+    divide the axis (compile-time validation for explicit topologies);
+    ``"none"`` always returns ``None`` (force single-device).
+    """
+    if mode not in SHARD_MODES:
+        raise ValueError(f"shard mode must be one of {SHARD_MODES}, "
+                         f"got {mode!r}")
     m = model_size(mesh)
-    return (m > 1 and n_row_shards % m == 0 and n_class_shards % m == 0)
+    if mode == "none":
+        return None
+    if m <= 1:
+        if mode == "auto":
+            return None
+        raise ValueError(
+            f"shard mode {mode!r} demands a sharded placement but the "
+            f"mesh has no model axis larger than 1 (model={m})")
+    r_ok = n_row_shards % m == 0
+    s_ok = n_class_shards % m == 0
+    if mode == "auto":
+        return (r_ok, s_ok) if (r_ok or s_ok) else None
+    want_r = mode in ("both", "r")
+    want_s = mode in ("both", "s")
+    if (want_r and not r_ok) or (want_s and not s_ok):
+        raise ValueError(
+            f"shard mode {mode!r} needs "
+            f"{'R=' + str(n_row_shards) if want_r and not r_ok else ''}"
+            f"{' and ' if want_r and not r_ok and want_s and not s_ok else ''}"
+            f"{'S=' + str(n_class_shards) if want_s and not s_ok else ''} "
+            f"to divide the model axis ({m} devices)")
+    return (want_r, want_s)
+
+
+def shardable(mesh, n_row_shards: int, n_class_shards: int) -> bool:
+    """True when ANY shard plan exists for the (R, S) grid on ``mesh`` —
+    fully sharded or asymmetric (one operand replicated)."""
+    return shard_plan(mesh, n_row_shards, n_class_shards) is not None
 
 
 def _local_column_currents(drive_loc: Array, ci_loc: Array, *, impl: str,
@@ -89,23 +139,30 @@ def _local_column_currents(drive_loc: Array, ci_loc: Array, *, impl: str,
 def fused_impact_shmap(literals: Array, clause_i: Array, nonempty: Array,
                        class_i: Array, *, thresh: float, mesh,
                        impl: str = "pallas", interpret: bool | None = None,
-                       valid: Array | None = None, meter: bool = False):
+                       valid: Array | None = None, meter: bool = False,
+                       shard_r: bool = True, shard_s: bool = True):
     """Sharded analog inference: literals (B, K) -> class currents (B, M).
 
     Same contract as ``ops.fused_impact`` (which is the normal entry
-    point — it calls here when ``shardable`` holds).  With ``meter=True``
-    additionally returns per-lane summed clause / class crossbar currents
-    (B,) f32 — the quantities ``impact.energy.per_lane_read_energy``
-    converts to joules — computed with the same valid-lane masking as the
-    single-device staged path, so per-request bills sum to the batch
-    meter under sharding.
+    point — it calls here when ``shard_plan`` finds a placement).
+    ``(shard_r, shard_s)`` is that placement: a False entry replicates
+    the corresponding crossbar on every device and skips its psum (the
+    replicated stage computes identical values everywhere).  With
+    ``meter=True`` additionally returns per-lane summed clause / class
+    crossbar currents (B,) f32 — the quantities
+    ``impact.energy.per_lane_read_energy`` converts to joules — computed
+    with the same valid-lane masking as the single-device staged path,
+    so per-request bills sum to the batch meter under every plan.
     """
     B, K = literals.shape
     R, C, tr, tc = clause_i.shape
     S, sr, M = class_i.shape
     n = C * tc
+    m = model_size(mesh)
     assert nonempty.shape == (n,), (nonempty.shape, n)
-    assert shardable(mesh, R, S), (mesh, R, S)
+    assert shard_r or shard_s, "no-op plan: use the single-device kernel"
+    assert not shard_r or R % m == 0, (R, m)
+    assert not shard_s or S % m == 0, (S, m)
 
     dp = data_axes(mesh)
     n_data = math.prod(mesh.shape[a] for a in dp) if dp else 1
@@ -122,43 +179,64 @@ def fused_impact_shmap(literals: Array, clause_i: Array, nonempty: Array,
 
     def local_fn(drive_loc, ci_loc, ne_loc, wi_loc, valid_loc):
         # drive_loc (B_loc, R_loc, tr); ci_loc (R_loc, C, tr, tc);
-        # wi_loc (S_loc, sr, M); everything else replicated over "model".
+        # wi_loc (S_loc, sr, M); R_loc/S_loc are full R/S for a
+        # replicated operand; everything else replicated over "model".
         i_col = _local_column_currents(drive_loc, ci_loc, impl=impl,
                                        interpret=interpret)
         # Partial CSA bits: count of local shards whose column current
-        # trips the sense amp; the cross-device psum is Fig. 14's digital
-        # AND (a clause fires iff the total violation count is zero).
+        # trips the sense amp; with R sharded, the cross-device psum is
+        # Fig. 14's digital AND (a clause fires iff the total violation
+        # count is zero); with R replicated the local count is already
+        # total, identical on every device.
         viol = (i_col >= thresh).astype(jnp.int32).sum(axis=1)
-        viol = jax.lax.psum(viol, "model")
+        if shard_r:
+            viol = jax.lax.psum(viol, "model")
         fired = jnp.logical_and(viol == 0, ne_loc.astype(bool)[None, :])
         fired = jnp.logical_and(fired, valid_loc[:, None])
 
-        # Class stage: this device drives only its local S_loc row-shards
-        # of the class crossbar with the matching slice of clause bits.
+        # Class stage: with S sharded, this device drives only its local
+        # S_loc row-shards with the matching slice of clause bits and
+        # the per-shard ADC + digital add is the psum below; with S
+        # replicated it drives the whole class crossbar (fired is fully
+        # known on-device) and no combine is needed.
         S_loc = wi_loc.shape[0]
         drv = ref.pad_to(fired.astype(jnp.float32), S * sr, axis=1)
         drv = drv[:, :S * sr].reshape(-1, S, sr)
-        lo = jax.lax.axis_index("model") * S_loc
-        mine = jax.lax.dynamic_slice_in_dim(drv, lo, S_loc, axis=1)
+        if shard_s:
+            lo = jax.lax.axis_index("model") * S_loc
+            mine = jax.lax.dynamic_slice_in_dim(drv, lo, S_loc, axis=1)
+        else:
+            mine = drv
         i_cls = jnp.stack(
             [ops.crossbar_mvm(mine[:, s], wi_loc[s], v_read=1.0, cutoff=0.0,
                               impl=impl, interpret=interpret)
              for s in range(S_loc)], axis=1)    # (B_loc, S_loc, M)
-        # Per-shard ADC + digital add == psum of partial class currents.
-        scores = jax.lax.psum(i_cls.sum(axis=1), "model")
+        scores = i_cls.sum(axis=1)
+        if shard_s:
+            scores = jax.lax.psum(scores, "model")
         if not meter:
             return (scores,)
+        # Per-lane meters: psum exactly the partial stages — a
+        # replicated stage's currents are already the full quantity on
+        # every device, so psumming them would bill m-fold.
         i_col = i_col * valid_loc[:, None, None].astype(i_col.dtype)
-        i_cl_lane = jax.lax.psum(i_col.sum(axis=(1, 2)), "model")
-        i_cs_lane = jax.lax.psum(i_cls.sum(axis=(1, 2)), "model")
+        i_cl_lane = i_col.sum(axis=(1, 2))
+        if shard_r:
+            i_cl_lane = jax.lax.psum(i_cl_lane, "model")
+        i_cs_lane = i_cls.sum(axis=(1, 2))
+        if shard_s:
+            i_cs_lane = jax.lax.psum(i_cs_lane, "model")
         return scores, i_cl_lane, i_cs_lane
 
     out_specs = ((P(bspec, None),) if not meter
                  else (P(bspec, None), P(bspec), P(bspec)))
     fn = compat.shard_map(
         local_fn, mesh=mesh,
-        in_specs=(P(bspec, "model", None), P("model", None, None, None),
-                  P(None), P("model", None, None), P(bspec)),
+        in_specs=(P(bspec, "model" if shard_r else None, None),
+                  P("model" if shard_r else None, None, None, None),
+                  P(None),
+                  P("model" if shard_s else None, None, None),
+                  P(bspec)),
         out_specs=out_specs, check_vma=False)
     out = fn(drive, clause_i.astype(jnp.float32), ne,
              class_i.astype(jnp.float32), vmask)

@@ -1,6 +1,8 @@
 """Sharded fused analog crossbar: the shard_map lowering of
 ``sharding/crossbar.py`` against the single-device Pallas kernel and the
-einsum oracle.
+einsum oracle — fully sharded (R and S both on the model axis) AND the
+asymmetric R-only / S-only plans where the non-dividing operand is
+replicated.
 
 Parity contract (same convention as test_fused_impact): CSA bits and
 argmax predictions are EXACTLY equal across lowerings on ideal devices —
@@ -14,7 +16,6 @@ leg, every PR); on a single-device host they skip, and a subprocess
 smoke test keeps one real 8-device parity + billing run in the tier-1
 lane (with ``JAX_PLATFORMS=cpu`` pinned — see the comment at the call).
 """
-import dataclasses
 import os
 import pathlib
 import subprocess
@@ -26,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.impact import RuntimeSpec, Topology
 from repro.impact.yflash import I_CSA_THRESHOLD
 from repro.kernels import ops, ref
 from repro.launch.mesh import make_crossbar_mesh
@@ -59,21 +61,51 @@ SHARD_SHAPES = [
     (4, 64, 33, 4, 8, 8, 3, 11, 8, 5, 8),          # tiny ragged, full axis
 ]
 
+# Asymmetric layouts: exactly one of R / S divides the model axis, so the
+# plan shards that operand and replicates the other (the lifted PR-3
+# restriction).
+ASYM_SHAPES = [
+    # R-only: R=4 % 2 == 0, S=3 % 2 != 0 -> plan (True, False)
+    (8, 300, 120, 7, 4, 80, 3, 40, 3, 40, 2, (True, False)),
+    # S-only: R=3 % 2 != 0, S=4 % 2 == 0 -> plan (False, True)
+    (8, 300, 126, 7, 3, 100, 3, 42, 4, 32, 2, (False, True)),
+    # R-only on a wider axis, shards-per-device > 1
+    (16, 512, 96, 5, 8, 64, 2, 48, 3, 32, 4, (True, False)),
+]
+
 
 class FakeMesh:
     def __init__(self, **axes):
         self.shape = dict(axes)
 
 
-def test_shardable_gate():
-    """The divisibility gate that routes between the shard_map lowering
-    and the single-device fallback."""
-    assert crossbar.shardable(FakeMesh(data=2, model=4), 4, 8)
-    assert not crossbar.shardable(None, 4, 4)
-    assert not crossbar.shardable(FakeMesh(data=8), 4, 4)       # no model
-    assert not crossbar.shardable(FakeMesh(data=4, model=1), 4, 4)
-    assert not crossbar.shardable(FakeMesh(data=2, model=4), 3, 4)  # R
-    assert not crossbar.shardable(FakeMesh(data=2, model=4), 4, 6)  # S
+def test_shard_plan_and_gate():
+    """The placement resolver that routes between the shard_map lowering
+    (fully sharded or asymmetric) and the single-device fallback."""
+    m = FakeMesh(data=2, model=4)
+    assert crossbar.shard_plan(m, 4, 8) == (True, True)
+    assert crossbar.shard_plan(m, 3, 4) == (False, True)   # S-only
+    assert crossbar.shard_plan(m, 4, 6) == (True, False)   # R-only
+    assert crossbar.shard_plan(m, 3, 6) is None            # neither
+    assert crossbar.shard_plan(None, 4, 4) is None
+    assert crossbar.shard_plan(FakeMesh(data=8), 4, 4) is None  # no model
+    assert crossbar.shard_plan(FakeMesh(data=4, model=1), 4, 4) is None
+    assert crossbar.shard_plan(m, 3, 6, mode="none") is None
+    # an explicitly demanded placement must never silently no-op: a mesh
+    # without a usable model axis raises instead of falling back
+    for degenerate in (FakeMesh(data=8), FakeMesh(data=4, model=1)):
+        with pytest.raises(ValueError, match="model axis"):
+            crossbar.shard_plan(degenerate, 4, 4, mode="both")
+    # explicit modes validate at resolution time
+    assert crossbar.shard_plan(m, 4, 6, mode="r") == (True, False)
+    with pytest.raises(ValueError, match="divide the model axis"):
+        crossbar.shard_plan(m, 4, 6, mode="both")
+    with pytest.raises(ValueError, match="divide the model axis"):
+        crossbar.shard_plan(m, 3, 4, mode="r")
+    with pytest.raises(ValueError, match="shard mode"):
+        crossbar.shard_plan(m, 4, 4, mode="diagonal")
+    assert crossbar.shardable(m, 4, 6)          # any plan counts
+    assert not crossbar.shardable(m, 3, 6)
     assert crossbar.data_axes(FakeMesh(pod=2, data=2, model=2)) == \
         ("pod", "data")
     assert crossbar.data_axes(FakeMesh(model=2)) == ()
@@ -116,6 +148,48 @@ def test_shmap_matches_single_device_and_oracle(B, K, n, M, R, tr, C, tc,
 
 
 @multi_device
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+@pytest.mark.parametrize("B,K,n,M,R,tr,C,tc,S,sr,n_model,plan", ASYM_SHAPES)
+def test_asymmetric_plan_matches_single_device_and_oracle(
+        B, K, n, M, R, tr, C, tc, S, sr, n_model, plan, impl):
+    """R-only / S-only plans (the other operand replicated) stay
+    score-allclose and argmax-exact vs the oracle and the single-device
+    kernel — the lifted both-must-divide restriction."""
+    mesh = _mesh_or_skip(n_model)
+    assert crossbar.shard_plan(mesh, R, S) == plan
+    lit, sys_ = _make_system(B, K, n, M, R, tr, C, tc, S, sr, seed=21)
+    want = ref.fused_impact_ref(lit, sys_.clause_i, sys_.nonempty,
+                                sys_.class_i, thresh=I_CSA_THRESHOLD)
+    single = ops.fused_impact(lit, sys_.clause_i, sys_.nonempty,
+                              sys_.class_i, thresh=I_CSA_THRESHOLD)
+    got = ops.fused_impact(lit, sys_.clause_i, sys_.nonempty, sys_.class_i,
+                           thresh=I_CSA_THRESHOLD, impl=impl, mesh=mesh)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(single),
+                               rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(got, -1)),
+                                  np.asarray(jnp.argmax(want, -1)))
+
+
+@multi_device
+@pytest.mark.parametrize("shard,plan", [("r", (True, False)),
+                                        ("s", (False, True))])
+def test_topology_forces_asymmetric_plan(shard, plan):
+    """RuntimeSpec(topology=Topology(shard='r'|'s')) pins the placement
+    at compile time even when both operands could shard; predictions
+    stay parity with the unsharded session."""
+    mesh = _mesh_or_skip(2)
+    lit, sys_ = _make_system(8, 300, 120, 7, 4, 80, 3, 40, 4, 30, seed=23)
+    forced = sys_.compile(RuntimeSpec(
+        backend="xla", topology=Topology(mesh=mesh, shard=shard)))
+    assert forced.plan == plan
+    base = sys_.compile(RuntimeSpec(backend="xla"))
+    np.testing.assert_array_equal(
+        np.asarray(forced.predict(lit).predictions),
+        np.asarray(base.predict(lit).predictions))
+
+
+@multi_device
 def test_indivisible_batch_replicates():
     """B that doesn't divide the data axis still shards the model axis
     (the batch replicates instead of failing)."""
@@ -130,11 +204,13 @@ def test_indivisible_batch_replicates():
 
 
 @multi_device
-def test_indivisible_shards_fall_back_exactly():
-    """R=3 over a model axis of 2: the wrapper must take the
-    single-device kernel path bit-for-bit (same code path => exact)."""
+def test_no_plan_falls_back_exactly():
+    """R=3, S=3 over a model axis of 2: no plan exists, so the wrapper
+    must take the single-device kernel path bit-for-bit (same code path
+    => exact)."""
     mesh = _mesh_or_skip(2)
     lit, sys_ = _make_system(8, 150, 60, 5, 3, 64, 2, 32, 3, 20, seed=11)
+    assert crossbar.shard_plan(mesh, 3, 3) is None
     want = ops.fused_impact(lit, sys_.clause_i, sys_.nonempty, sys_.class_i,
                             thresh=I_CSA_THRESHOLD)
     got = ops.fused_impact(lit, sys_.clause_i, sys_.nonempty, sys_.class_i,
@@ -143,42 +219,54 @@ def test_indivisible_shards_fall_back_exactly():
 
 
 @multi_device
-@pytest.mark.parametrize("impl", ["xla", "pallas"])
-def test_metered_infer_step_parity_under_sharding(impl):
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("R,tr,S,sr", [
+    (4, 80, 4, 30),      # fully sharded plan
+    (4, 80, 3, 40),      # asymmetric R-only plan
+])
+def test_metered_infer_step_parity_under_sharding(backend, R, tr, S, sr):
     """Sharded metered sweep == single-device staged path: same preds
     (sentinel -1 on free lanes), same per-lane energy bills, free lanes
-    billed exactly zero."""
+    billed exactly zero — for the fully sharded AND asymmetric plans (a
+    replicated stage's currents must not be psummed into m-fold bills)."""
     mesh = _mesh_or_skip(2)
     B, K = 8, 300
-    lit, sys_ = _make_system(B, K, 120, 7, 4, 80, 3, 40, 4, 30, seed=13)
+    lit, sys_ = _make_system(B, K, 120, 7, R, tr, 3, 40, S, sr, seed=13)
     buf = np.ones((B, K), np.int8)
     buf[:5] = np.asarray(lit[:5])
     valid = np.zeros((B,), bool)
     valid[:5] = True
-    p_1, ecl_1, ecs_1 = jax.tree.map(np.asarray, sys_.infer_step(
-        jnp.asarray(buf), valid, impl=impl, meter=True))
-    p_m, ecl_m, ecs_m = jax.tree.map(np.asarray, sys_.infer_step(
-        jnp.asarray(buf), valid, impl=impl, meter=True, mesh=mesh))
+    s_one = sys_.compile(RuntimeSpec(backend=backend, capacity=B))
+    s_mesh = sys_.compile(RuntimeSpec(
+        backend=backend, capacity=B, topology=Topology(mesh=mesh)))
+    assert s_mesh.plan == (True, S % 2 == 0)
+    r1 = s_one.infer_step(buf, valid)
+    rm = s_mesh.infer_step(buf, valid)
+    p_1, p_m = np.asarray(r1.predictions), np.asarray(rm.predictions)
     np.testing.assert_array_equal(p_1, p_m)
     assert (p_m[5:] == -1).all(), p_m
-    np.testing.assert_allclose(ecl_m, ecl_1, rtol=1e-5)
-    np.testing.assert_allclose(ecs_m, ecs_1, rtol=1e-5)
-    np.testing.assert_array_equal(ecl_m[5:], 0.0)
-    np.testing.assert_array_equal(ecs_m[5:], 0.0)
+    np.testing.assert_allclose(np.asarray(rm.e_clause_lanes),
+                               np.asarray(r1.e_clause_lanes), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(rm.e_class_lanes),
+                               np.asarray(r1.e_class_lanes), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(rm.e_clause_lanes)[5:], 0.0)
+    np.testing.assert_array_equal(np.asarray(rm.e_class_lanes)[5:], 0.0)
 
 
 @multi_device
 def test_engine_on_sharded_mesh_bills_exactly():
-    """IMPACTEngine serving from a sharded grid: predictions match the
+    """IMPACTEngine serving from a sharded session: predictions match the
     single-device direct path and per-request energy attribution still
     sums exactly to the batch meter (ISSUE acceptance)."""
     mesh = _mesh_or_skip(2)
-    lit, base = _make_system(24, 300, 120, 7, 4, 80, 3, 40, 4, 30, seed=17)
-    sys_ = dataclasses.replace(base, mesh=mesh)
-    eng = IMPACTEngine(sys_, impl="xla", max_batch=8)
-    assert eng.mesh is mesh            # engine inherits the system mesh
+    lit, sys_ = _make_system(24, 300, 120, 7, 4, 80, 3, 40, 4, 30, seed=17)
+    session = sys_.compile(RuntimeSpec(
+        backend="xla", capacity=8, topology=Topology(mesh=mesh)))
+    eng = IMPACTEngine(session)
+    assert eng.mesh is mesh            # engine inherits the session mesh
     preds, stats = eng.run(np.asarray(lit))
-    direct = np.asarray(base.predict(lit, impl="xla"))
+    direct = np.asarray(
+        sys_.compile(RuntimeSpec(backend="xla")).predict(lit).predictions)
     np.testing.assert_array_equal(preds, direct)
     recs = eng.request_records
     assert len(recs) == 24 and all(r.e_read_j > 0 for r in recs)
@@ -194,12 +282,13 @@ def test_engine_on_sharded_mesh_bills_exactly():
 SMOKE = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    import dataclasses
     import jax, jax.numpy as jnp, numpy as np
+    from repro.impact import RuntimeSpec, Topology
     from repro.impact.yflash import I_CSA_THRESHOLD
     from repro.kernels import ops, ref
     from repro.launch.mesh import make_crossbar_mesh
     from repro.serve import IMPACTEngine
+    from repro.sharding import crossbar
     import sys
     sys.path.insert(0, {tests_dir!r})
     from test_fused_impact import _make_system
@@ -214,11 +303,23 @@ SMOKE = textwrap.dedent("""
     np.testing.assert_array_equal(np.asarray(jnp.argmax(got, -1)),
                                   np.asarray(jnp.argmax(want, -1)))
 
-    sys_ = dataclasses.replace(base, mesh=mesh)
-    eng = IMPACTEngine(sys_, impl="xla", max_batch=16)
+    # asymmetric R-only plan (S=3 does not divide the model axis)
+    lit_a, asym = _make_system(8, 200, 60, 5, 2, 100, 2, 32, 3, 20, seed=9)
+    assert crossbar.shard_plan(mesh, 2, 3) == (True, False)
+    want_a = ref.fused_impact_ref(lit_a, asym.clause_i, asym.nonempty,
+                                  asym.class_i, thresh=I_CSA_THRESHOLD)
+    got_a = ops.fused_impact(lit_a, asym.clause_i, asym.nonempty,
+                             asym.class_i, thresh=I_CSA_THRESHOLD,
+                             impl="xla", mesh=mesh)
+    np.testing.assert_allclose(np.asarray(got_a), np.asarray(want_a),
+                               rtol=1e-6)
+
+    session = base.compile(RuntimeSpec(backend="xla", capacity=16,
+                                       topology=Topology(mesh=mesh)))
+    eng = IMPACTEngine(session)
     preds, stats = eng.run(np.asarray(lit))
-    np.testing.assert_array_equal(preds,
-                                  np.asarray(base.predict(lit, impl="xla")))
+    direct = base.compile(RuntimeSpec(backend="xla")).predict(lit)
+    np.testing.assert_array_equal(preds, np.asarray(direct.predictions))
     np.testing.assert_allclose(
         sum(r.e_read_j for r in eng.request_records),
         stats["energy"].read_energy_j, rtol=1e-6)
@@ -229,8 +330,9 @@ SMOKE = textwrap.dedent("""
 def test_sharded_smoke_on_forced_host_devices():
     """One real 8-device run in the tier-1 lane (subprocess, because the
     XLA host-device flag must be set before jax initialises): parity of
-    the shard_map lowering vs the oracle, plus engine billing.  The full
-    sweeps run in-process in the CI multi-device leg."""
+    the shard_map lowering vs the oracle — including an asymmetric
+    R-only plan — plus session-engine billing.  The full sweeps run
+    in-process in the CI multi-device leg."""
     tests_dir = str(pathlib.Path(__file__).resolve().parent)
     r = subprocess.run(
         [sys.executable, "-c", SMOKE.format(tests_dir=tests_dir)],

@@ -16,7 +16,7 @@ from _hypothesis_compat import given, settings, strategies as st
 from repro.core import CoTMConfig, predict, train_epochs
 from repro.core.cotm import clause_outputs, include_mask
 from repro.data.synthetic import prototype
-from repro.impact import IMPACTConfig, build_system
+from repro.impact import IMPACTConfig, RuntimeSpec, build_system
 from repro.impact.pipeline import IMPACTSystem
 from repro.impact.yflash import I_CSA_THRESHOLD, read_current
 from repro.kernels import ops, ref
@@ -94,8 +94,10 @@ def test_class_scores_parity(B, K, n, M, R, tr, C, tc, S, sr):
 def test_system_predict_parity(B, K, n, M, R, tr, C, tc, S, sr):
     lit, sys_ = _make_system(B, K, n, M, R, tr, C, tc, S, sr, seed=3)
     np.testing.assert_array_equal(
-        np.asarray(sys_.predict(lit, impl="pallas")),
-        np.asarray(sys_.predict(lit, impl="xla")))
+        np.asarray(sys_.compile(RuntimeSpec(backend="pallas"))
+                   .predict(lit).predictions),
+        np.asarray(sys_.compile(RuntimeSpec(backend="xla"))
+                   .predict(lit).predictions))
 
 
 def test_all_empty_clause_columns():
@@ -153,8 +155,8 @@ def golden_trained():
     return cfg, params, lits
 
 
-@pytest.mark.parametrize("impl", ["pallas", "xla"])
-def test_golden_analog_matches_digital(golden_trained, impl):
+@pytest.mark.parametrize("backend", ["pallas", "xla"])
+def test_golden_analog_matches_digital(golden_trained, backend):
     """Ideal devices (variability=False) + fine-tuned weight mapping must
     reproduce the digital CoTM decisions exactly — clause bits AND
     predictions (the Fig. 4 crossbar/logic equivalence)."""
@@ -165,22 +167,27 @@ def test_golden_analog_matches_digital(golden_trained, impl):
     inc = include_mask(params.ta_state, cfg.n_states)
     dig_clauses = np.asarray(clause_outputs(lits, inc))
 
-    ana_pred = np.asarray(system.predict(lits, impl=impl))
-    fired, _ = system.clause_bits(lits, impl=impl)
+    session = system.compile(RuntimeSpec(backend=backend))
+    ana_pred = np.asarray(session.predict(lits).predictions)
+    fired, _ = system.clause_bits(lits, impl=backend)
     np.testing.assert_array_equal(
         np.asarray(fired)[:, :cfg.n_clauses], dig_clauses)
     np.testing.assert_array_equal(ana_pred, dig_pred)
 
 
-def test_infer_with_report_consistent_across_impls(golden_trained):
-    """Energy metering rides the staged path; both impls must report the
-    same physics (same currents => same joules) and the same preds."""
+def test_infer_with_report_consistent_across_backends(golden_trained):
+    """Energy metering rides the staged path; both backends must report
+    the same physics (same currents => same joules) and the same preds."""
     cfg, params, lits = golden_trained
     system = build_system(params, cfg, jax.random.key(2),
                           IMPACTConfig(variability=False, finetune=True))
-    p_p, rep_p = system.infer_with_report(lits[:64], impl="pallas")
-    p_x, rep_x = system.infer_with_report(lits[:64], impl="xla")
-    np.testing.assert_array_equal(np.asarray(p_p), np.asarray(p_x))
+    res_p = system.compile(RuntimeSpec(backend="pallas")) \
+        .infer_with_report(lits[:64])
+    res_x = system.compile(RuntimeSpec(backend="xla")) \
+        .infer_with_report(lits[:64])
+    rep_p, rep_x = res_p.report, res_x.report
+    np.testing.assert_array_equal(np.asarray(res_p.predictions),
+                                  np.asarray(res_x.predictions))
     assert rep_p.read_energy_j > 0
     np.testing.assert_allclose(rep_p.read_energy_j, rep_x.read_energy_j,
                                rtol=1e-5)

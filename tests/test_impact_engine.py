@@ -1,5 +1,6 @@
-"""Batched IMPACT serving: queue/bucket behavior, parity with direct
-inference, and energy aggregation."""
+"""Batched IMPACT serving on compiled sessions: queue/bucket behavior,
+parity with direct inference, per-mode kwarg validation, and energy
+aggregation."""
 import time
 
 import jax
@@ -9,8 +10,15 @@ import pytest
 
 from repro.core import CoTMConfig
 from repro.core.cotm import CoTMParams
-from repro.impact import IMPACTConfig, build_system
+from repro.impact import (IMPACTConfig, InferenceSession, RuntimeSpec,
+                          build_system)
 from repro.serve import IMPACTEngine, aggregate_reports
+
+
+def spec(backend="xla", *, meter=True, capacity=None, **kw):
+    return RuntimeSpec(backend=backend,
+                       metering="staged" if meter else "off",
+                       capacity=capacity, **kw)
 
 
 @pytest.fixture(scope="module")
@@ -31,8 +39,9 @@ def small_system():
 
 def test_engine_matches_direct_predict(small_system):
     system, lits = small_system
-    direct = np.asarray(system.predict(jnp.asarray(lits), impl="xla"))
-    eng = IMPACTEngine(system, impl="xla", max_batch=16, buckets=(4, 16))
+    direct = np.asarray(
+        system.compile(spec()).predict(jnp.asarray(lits)).predictions)
+    eng = IMPACTEngine(system.compile(spec(capacity=16)))
     preds, stats = eng.run(lits)
     np.testing.assert_array_equal(preds, direct)
     assert stats["samples"] == lits.shape[0]
@@ -41,21 +50,21 @@ def test_engine_matches_direct_predict(small_system):
 
 def test_engine_pallas_parity(small_system):
     system, lits = small_system
-    eng_x = IMPACTEngine(system, impl="xla", max_batch=16)
-    eng_p = IMPACTEngine(system, impl="pallas", max_batch=16)
+    eng_x = IMPACTEngine(system.compile(spec("xla", capacity=16)))
+    eng_p = IMPACTEngine(system.compile(spec("pallas", capacity=16)))
     p_x, _ = eng_x.run(lits)
     p_p, _ = eng_p.run(lits)
     np.testing.assert_array_equal(p_x, p_p)
 
 
 def test_engine_fused_serving_path(small_system):
-    """meter_energy=False + impl='pallas' is the max-throughput config
+    """metering='off' + backend='pallas' is the max-throughput config
     that actually serves through the fused kernel — it must agree with
     the metered (staged) engine and report no energy."""
     system, lits = small_system
-    fused = IMPACTEngine(system, impl="pallas", max_batch=16,
-                         meter_energy=False)
-    staged = IMPACTEngine(system, impl="pallas", max_batch=16)
+    fused = IMPACTEngine(
+        system.compile(spec("pallas", meter=False, capacity=16)))
+    staged = IMPACTEngine(system.compile(spec("pallas", capacity=16)))
     p_f, s_f = fused.run(lits)
     p_s, _ = staged.run(lits)
     np.testing.assert_array_equal(p_f, p_s)
@@ -66,7 +75,7 @@ def test_run_stats_are_per_burst(small_system):
     """run() reports the burst it served, not engine lifetime; lifetime
     aggregates stay available via stats()."""
     system, lits = small_system
-    eng = IMPACTEngine(system, impl="xla", max_batch=8, buckets=(8,))
+    eng = IMPACTEngine(system.compile(spec(capacity=8)))
     _, s1 = eng.run(lits[:16])
     _, s2 = eng.run(lits[16:32])
     assert s1["samples"] == 16 and s2["samples"] == 16
@@ -75,13 +84,13 @@ def test_run_stats_are_per_burst(small_system):
     assert life["samples"] == 32 and life["energy"].datapoints == 32
 
 
-def test_bucket_padding_is_neutral(small_system):
-    """A lone request padded up to the smallest bucket must predict the
-    same as the full-batch path (padding lanes draw no current)."""
+def test_slot_padding_is_neutral(small_system):
+    """A lone request swept in the full slot table must predict the same
+    as the full-batch path (free lanes draw no current)."""
     system, lits = small_system
-    direct = np.asarray(system.predict(jnp.asarray(lits[:1]), impl="xla"))
-    eng = IMPACTEngine(system, impl="xla", max_batch=8, buckets=(8,),
-                       max_wait_s=0.0)
+    direct = np.asarray(
+        system.compile(spec()).predict(jnp.asarray(lits[:1])).predictions)
+    eng = IMPACTEngine(system.compile(spec(capacity=8)), max_wait_s=0.0)
     rid = eng.submit(lits[0])
     out = dict(eng.step(force=True))
     assert out[rid] == int(direct[0])
@@ -98,9 +107,28 @@ def test_bucket_selection():
     assert eng.bucket_for(1000) == 128     # capped at max bucket
 
 
+def test_per_mode_kwarg_validation(small_system):
+    """A knob the chosen scheduler never reads is rejected, not silently
+    shadowed: buckets are flush-only, target_occupancy continuous-only
+    (regression — buckets used to be accepted and ignored in continuous
+    mode)."""
+    system, _ = small_system
+    sess = system.compile(spec(capacity=8))
+    with pytest.raises(ValueError, match="buckets only apply"):
+        IMPACTEngine(sess, buckets=(8,))
+    with pytest.raises(ValueError, match="target_occupancy only applies"):
+        IMPACTEngine(sess, mode="flush", target_occupancy=0.5)
+    with pytest.raises(ValueError, match="max_batch"):
+        IMPACTEngine(sess, max_batch=32)       # capacity is compiled: 8
+    with pytest.raises(ValueError, match="cannot override"):
+        IMPACTEngine(sess, impl="xla")
+    with pytest.raises(ValueError, match="capacity"):
+        IMPACTEngine(system.compile(spec()))   # no serving shape compiled
+
+
 def test_flush_on_full_and_stale(small_system):
     system, lits = small_system
-    eng = IMPACTEngine(system, impl="xla", mode="flush", max_batch=4,
+    eng = IMPACTEngine(system.compile(spec(capacity=4)), mode="flush",
                        max_wait_s=10.0)
     for i in range(3):
         eng.submit(lits[i])
@@ -114,7 +142,7 @@ def test_flush_on_full_and_stale(small_system):
 
 def test_energy_aggregation(small_system):
     system, lits = small_system
-    eng = IMPACTEngine(system, impl="xla", max_batch=8, meter_energy=True)
+    eng = IMPACTEngine(system.compile(spec(capacity=8)))
     _, stats = eng.run(lits)
     agg = stats["energy"]
     assert agg.datapoints == lits.shape[0]
@@ -126,21 +154,43 @@ def test_energy_aggregation(small_system):
     assert agg.program_energy_j == eng.reports[0].program_energy_j
 
 
-def test_warmup_removes_cold_batches(small_system):
-    """Throughput stats must not be skewed by per-bucket jit compile:
-    the first batch of an unwarmed bucket is flagged cold and excluded
-    from samples_per_s; warmup() pre-compiles so nothing is cold."""
+def test_continuous_sessions_are_never_cold(small_system):
+    """The compiled-session contract: the slot-table sweep shape is an
+    executable before the first request, so a continuous engine has no
+    cold batches even without warmup()."""
     system, lits = small_system
-    cold_eng = IMPACTEngine(system, impl="xla", max_batch=8, buckets=(8,))
-    _, cold_stats = cold_eng.run(lits[:8])
-    assert cold_stats["cold_batches"] == 1
+    eng = IMPACTEngine(system.compile(spec(capacity=8)))
+    _, stats = eng.run(lits[:8])
+    assert stats["cold_batches"] == 0
+    assert stats["energy"].datapoints == 8
 
-    warm_eng = IMPACTEngine(system, impl="xla", max_batch=8, buckets=(8,))
+
+def test_flush_warmup_removes_cold_batches(small_system):
+    """Flush buckets below capacity compile on demand; the first batch of
+    an unwarmed bucket is flagged cold and excluded from samples_per_s,
+    and warmup() pre-compiles so nothing is cold.  Each engine gets a
+    FRESH (uncached) session so the second engine can't ride the first
+    one's compiles."""
+    system, lits = small_system
+
+    def fresh_session():
+        return InferenceSession(system, spec(capacity=8))
+
+    cold_eng = IMPACTEngine(fresh_session(), mode="flush", buckets=(4,),
+                            max_wait_s=0.0)
+    cold_eng.submit(lits[0])
+    cold_eng.step(force=True)
+    assert [s.bucket for s in cold_eng.batch_stats] == [4]
+    assert cold_eng.stats()["cold_batches"] == 1
+
+    warm_eng = IMPACTEngine(fresh_session(), mode="flush", buckets=(4,),
+                            max_wait_s=0.0)
     warm_eng.warmup()
-    assert warm_eng.reports == []          # warmup traffic is not metered
-    _, warm_stats = warm_eng.run(lits[:8])
-    assert warm_stats["cold_batches"] == 0
-    assert warm_stats["energy"].datapoints == 8
+    assert warm_eng.session.is_compiled("infer_step", 4)
+    assert warm_eng.reports == []          # warmup compiles, never sweeps
+    warm_eng.submit(lits[0])
+    warm_eng.step(force=True)
+    assert warm_eng.stats()["cold_batches"] == 0
 
 
 def test_aggregate_reports_requires_nonempty():
@@ -153,15 +203,13 @@ def test_padding_lanes_not_billed(small_system):
     without the validity mask it would draw phantom class-tile current;
     the metered report must bill exactly the real lanes."""
     system, lits = small_system
-    _, ref_report = system.infer_with_report(jnp.asarray(lits[:1]),
-                                             impl="xla")
-    eng = IMPACTEngine(system, impl="xla", max_batch=8, buckets=(8,),
-                       meter_energy=True)
+    res = system.compile(spec()).infer_with_report(jnp.asarray(lits[:1]))
+    eng = IMPACTEngine(system.compile(spec(capacity=8)), max_wait_s=0.0)
     eng.submit(lits[0])
     eng.step(force=True)
     (padded_report,) = eng.reports
     assert padded_report.datapoints == 1
     np.testing.assert_allclose(padded_report.read_energy_j,
-                               ref_report.read_energy_j, rtol=1e-6)
+                               res.report.read_energy_j, rtol=1e-6)
     np.testing.assert_allclose(padded_report.class_energy_j,
-                               ref_report.class_energy_j, rtol=1e-6)
+                               res.report.class_energy_j, rtol=1e-6)

@@ -1,0 +1,309 @@
+"""Compiled-session runtime: RuntimeSpec validation, backend registry
+pluggability, compile-once semantics (retrace guard), InferenceResult
+contents, and exact-parity deprecation shims for the old per-call kwargs.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.impact import (IMPACTConfig, InferenceResult, InferenceSession,
+                          RuntimeSpec, SpecDeprecationWarning, Topology,
+                          build_system)
+from repro.core import CoTMConfig
+from repro.core.cotm import CoTMParams
+from repro.kernels import backends
+from repro.serve import IMPACTEngine
+
+
+@pytest.fixture(scope="module")
+def small_system():
+    K, n, m, n_states = 64, 32, 4, 64
+    cfg = CoTMConfig(n_literals=K, n_clauses=n, n_classes=m,
+                     n_states=n_states)
+    rng = np.random.default_rng(0)
+    ta = np.where(rng.random((K, n)) < 0.1, n_states + 1, n_states)
+    w = rng.integers(-20, 20, (m, n))
+    params = CoTMParams(ta_state=jnp.asarray(ta, jnp.int32),
+                        weights=jnp.asarray(w, jnp.int32))
+    system = build_system(params, cfg, jax.random.key(0),
+                          IMPACTConfig(variability=False, finetune=False))
+    lits = rng.random((40, K)) < 0.5
+    return system, lits
+
+
+# -- backend registry --------------------------------------------------------
+
+def test_registry_contents_and_errors():
+    assert {"pallas", "xla"} <= set(backends.available_backends())
+    assert backends.get_backend("xla").reference
+    assert not backends.get_backend("pallas").reference
+    with pytest.raises(ValueError, match="unknown backend"):
+        backends.get_backend("mythical")
+    with pytest.raises(ValueError, match="already registered"):
+        backends.register_backend(backends.XLABackend())
+    with pytest.raises(ValueError, match="non-empty"):
+        backends.register_backend(backends.Backend())
+
+
+def test_registered_backend_plugs_into_sessions(small_system):
+    """A third backend slots into every entry point by registration alone
+    — no call-site changes (the registry acceptance criterion).  This one
+    delegates to the oracle, so outputs must match the xla session."""
+    system, lits = small_system
+
+    class ShadowXLA(backends.XLABackend):
+        name = "xla-shadow-test"
+
+    backends.register_backend(ShadowXLA())
+    try:
+        shadow = system.compile(RuntimeSpec(backend="xla-shadow-test",
+                                            capacity=8))
+        plain = system.compile(RuntimeSpec(backend="xla", capacity=8))
+        np.testing.assert_array_equal(
+            np.asarray(shadow.predict(lits[:8]).predictions),
+            np.asarray(plain.predict(lits[:8]).predictions))
+        r_s = shadow.infer_with_report(lits[:8]).report
+        r_p = plain.infer_with_report(lits[:8]).report
+        np.testing.assert_allclose(r_s.read_energy_j, r_p.read_energy_j)
+    finally:
+        backends.unregister_backend("xla-shadow-test")
+    assert "xla-shadow-test" not in backends.available_backends()
+    with pytest.raises(ValueError, match="not registered"):
+        backends.unregister_backend("xla-shadow-test")
+
+
+def test_interpret_resolver_policy():
+    """The shared shape-policy hook: None means interpret off-TPU for
+    kernel backends; reference backends have nothing to interpret."""
+    pallas = backends.get_backend("pallas")
+    on_tpu = jax.default_backend() == "tpu"
+    assert pallas.resolve_interpret(None) == (not on_tpu)
+    assert pallas.resolve_interpret(True) is True
+    assert pallas.resolve_interpret(False) is False
+    assert backends.get_backend("xla").resolve_interpret(None) is False
+
+
+# -- spec validation ---------------------------------------------------------
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="metering"):
+        RuntimeSpec(metering="fused")
+    with pytest.raises(ValueError, match="precision"):
+        RuntimeSpec(precision="bf16")
+    with pytest.raises(ValueError, match="capacity"):
+        RuntimeSpec(capacity=0)
+    with pytest.raises(ValueError, match="batch_sizes"):
+        RuntimeSpec(batch_sizes=(0,))
+    with pytest.raises(ValueError, match="shard mode"):
+        Topology(shard="diagonal")
+    # specs are hashable values: equal fields => equal keys
+    assert RuntimeSpec(backend="xla") == RuntimeSpec(backend="xla")
+    assert hash(RuntimeSpec()) == hash(RuntimeSpec())
+
+
+def test_compile_validates_spec(small_system):
+    system, _ = small_system
+    with pytest.raises(ValueError, match="unknown backend"):
+        system.compile(RuntimeSpec(backend="mythical"))
+    with pytest.raises(ValueError, match="mesh"):
+        system.compile(RuntimeSpec(topology=Topology(shard="both")))
+
+
+def test_compile_caches_per_spec(small_system):
+    """compile() is idempotent: the same spec (as a value, not an object)
+    resolves to the SAME session, so sessions are safe to re-derive."""
+    system, _ = small_system
+    a = system.compile(RuntimeSpec(backend="xla", capacity=8))
+    b = system.compile(RuntimeSpec(backend="xla", capacity=8))
+    assert a is b
+    assert isinstance(a, InferenceSession)
+    assert a is not system.compile(RuntimeSpec(backend="xla", capacity=4))
+
+
+# -- compile-once semantics (the retrace guard) ------------------------------
+
+def test_session_precompiles_spec_shapes(small_system):
+    system, _ = small_system
+    sess = system.compile(RuntimeSpec(backend="xla", capacity=8,
+                                      batch_sizes=(4, 12)))
+    assert sess.is_compiled("infer_step", 8)
+    assert sess.is_compiled("predict", 4)
+    assert sess.is_compiled("predict", 12)
+    assert sess.trace_count == 3
+    assert sess.capacity == 8 and sess.meters_energy
+
+
+def test_retrace_guard_across_serving(small_system):
+    """The compile-once acceptance test: after session build (+ declared
+    shapes), repeated predict calls, arbitrary admission patterns, and
+    whole engine sweeps trigger ZERO new traces — pinned by the
+    session's trace counters (each counter bumps exactly when a python
+    body is traced for compilation)."""
+    system, lits = small_system
+    sess = system.compile(RuntimeSpec(backend="xla", capacity=8,
+                                      batch_sizes=(4,)))
+    built = sess.trace_count                   # capacity + batch_sizes
+    assert built == 2
+
+    # repeated predict at a compiled shape: no new traces
+    for i in range(3):
+        sess.predict(lits[i:i + 4])
+    assert sess.trace_count == built
+
+    # a NEW batch shape compiles exactly once, then caches
+    sess.predict(lits[:6])
+    assert sess.trace_count == built + 1
+    sess.predict(lits[6:12])
+    assert sess.trace_count == built + 1
+
+    # every admission pattern reuses the one slot-table executable
+    buf = np.ones((8, system.n_literals), np.int8)
+    for k in (1, 3, 8, 2):
+        valid = np.zeros((8,), bool)
+        valid[:k] = True
+        buf[:k] = lits[:k]
+        sess.infer_step(buf, valid)
+    assert sess.trace_count == built + 1
+
+    # engine sweeps (admit/release/partial tails) ride the same
+    # executable: a full burst adds zero traces
+    eng = IMPACTEngine(sess)
+    preds, stats = eng.run(lits[:20])
+    assert stats["cold_batches"] == 0
+    assert sess.trace_count == built + 1
+
+    # metered report at a fresh shape is the only remaining compile
+    sess.infer_with_report(lits[:5])
+    assert sess.trace_count == built + 2
+    sess.infer_with_report(lits[5:10])
+    assert sess.trace_count == built + 2
+
+
+def test_session_canonicalizes_caller_dtypes(small_system):
+    """bool / int8 / float {0,1} literals hit the SAME executable — the
+    session casts once instead of letting caller dtypes fragment the
+    AOT cache (and the results agree exactly)."""
+    system, lits = small_system
+    sess = system.compile(RuntimeSpec(backend="xla"))
+    base = np.asarray(sess.predict(lits[:8]).predictions)   # np.bool_
+    tc = sess.trace_count
+    np.testing.assert_array_equal(
+        np.asarray(sess.predict(lits[:8].astype(np.int8)).predictions),
+        base)
+    np.testing.assert_array_equal(
+        np.asarray(sess.predict(lits[:8].astype(np.float32)).predictions),
+        base)
+    np.testing.assert_array_equal(
+        np.asarray(sess.predict(jnp.asarray(lits[:8])).predictions), base)
+    assert sess.trace_count == tc
+
+
+# -- InferenceResult ---------------------------------------------------------
+
+def test_inference_result_contents(small_system):
+    system, lits = small_system
+    sess = system.compile(RuntimeSpec(backend="xla", capacity=8))
+    pred = sess.predict(lits[:8])
+    assert isinstance(pred, InferenceResult)
+    assert pred.scores.shape == (8, system.n_classes)
+    assert pred.report is None and pred.e_clause_lanes is None
+    np.testing.assert_array_equal(
+        np.asarray(pred.predictions),
+        np.asarray(jnp.argmax(pred.scores, axis=-1)))
+
+    valid = np.ones((8,), bool)
+    step = sess.infer_step(np.asarray(lits[:8], np.int8), valid)
+    assert step.e_clause_lanes.shape == (8,)
+    assert step.e_class_lanes.shape == (8,)
+    assert step.report is None
+
+    rep = sess.infer_with_report(lits[:8])
+    assert rep.report.datapoints == 8
+    assert rep.report.read_energy_j > 0
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        rep.report = None
+
+
+def test_metering_off_blocks_reports_and_zeros_lanes(small_system):
+    system, lits = small_system
+    sess = system.compile(RuntimeSpec(backend="xla", metering="off",
+                                      capacity=8))
+    assert not sess.meters_energy
+    step = sess.infer_step(np.asarray(lits[:8], np.int8),
+                           np.ones((8,), bool))
+    np.testing.assert_array_equal(np.asarray(step.e_clause_lanes), 0.0)
+    with pytest.raises(RuntimeError, match="metering"):
+        sess.infer_with_report(lits[:8])
+
+
+# -- deprecation shims: old kwargs forward, warn, and agree exactly ----------
+
+def test_predict_shim_parity_and_warning(small_system):
+    system, lits = small_system
+    want = np.asarray(system.compile(RuntimeSpec(backend="xla"))
+                      .predict(lits[:8]).predictions)
+    with pytest.warns(SpecDeprecationWarning, match="predict"):
+        old = system.predict(jnp.asarray(lits[:8]), impl="xla")
+    np.testing.assert_array_equal(np.asarray(old), want)
+    # the bare call (no kwargs) is NOT deprecated: default-spec session
+    bare = system.predict(jnp.asarray(lits[:8]))
+    np.testing.assert_array_equal(
+        np.asarray(bare),
+        np.asarray(system.compile().predict(lits[:8]).predictions))
+
+
+def test_infer_step_shim_parity_and_warning(small_system):
+    system, lits = small_system
+    buf = np.ones((8, system.n_literals), np.int8)
+    buf[:3] = lits[:3]
+    valid = np.zeros((8,), bool)
+    valid[:3] = True
+    sess = system.compile(RuntimeSpec(backend="xla", capacity=8))
+    want = sess.infer_step(buf, valid)
+    with pytest.warns(SpecDeprecationWarning, match="infer_step"):
+        p, e_cl, e_cs = system.infer_step(jnp.asarray(buf), valid,
+                                          impl="xla", meter=True)
+    np.testing.assert_array_equal(np.asarray(p),
+                                  np.asarray(want.predictions))
+    np.testing.assert_array_equal(np.asarray(e_cl),
+                                  np.asarray(want.e_clause_lanes))
+    np.testing.assert_array_equal(np.asarray(e_cs),
+                                  np.asarray(want.e_class_lanes))
+    # bare call preserves the old meter=False default: zero energies
+    p0, z_cl, z_cs = system.infer_step(jnp.asarray(buf), valid)
+    np.testing.assert_array_equal(np.asarray(p0),
+                                  np.asarray(want.predictions))
+    np.testing.assert_array_equal(np.asarray(z_cl), 0.0)
+
+
+def test_infer_with_report_shim_parity_and_warning(small_system):
+    system, lits = small_system
+    want = system.compile(RuntimeSpec(backend="xla")) \
+        .infer_with_report(lits[:8])
+    with pytest.warns(SpecDeprecationWarning, match="infer_with_report"):
+        preds, report = system.infer_with_report(jnp.asarray(lits[:8]),
+                                                 impl="xla")
+    np.testing.assert_array_equal(np.asarray(preds),
+                                  np.asarray(want.predictions))
+    assert report.read_energy_j == want.report.read_energy_j
+    assert report.datapoints == want.report.datapoints
+    assert report.latency_s == want.report.latency_s
+
+
+def test_engine_shim_parity_and_warning(small_system):
+    system, lits = small_system
+    sess = system.compile(RuntimeSpec(backend="xla", metering="off",
+                                      capacity=16))
+    want, _ = IMPACTEngine(sess).run(lits)
+    with pytest.warns(SpecDeprecationWarning, match="IMPACTEngine"):
+        legacy = IMPACTEngine(system, impl="xla", max_batch=16,
+                              meter_energy=False)
+    got, stats = legacy.run(lits)
+    np.testing.assert_array_equal(got, want)
+    assert legacy.session is sess      # same spec => same cached session
+    # a bare IMPACTEngine(system) is the supported convenience form
+    conv = IMPACTEngine(system, max_batch=16)
+    assert conv.capacity == 16 and conv.meter_energy

@@ -1,7 +1,7 @@
 """Continuous-batching scheduler: slot-table invariants, mid-flight
 admission neutrality, backpressure, admission policy, and the tail-latency
 claim (continuous < flush-to-completion p95 under a seeded Poisson arrival
-trace)."""
+trace) — all on compiled ``InferenceSession`` runtimes."""
 import time
 
 import jax
@@ -11,10 +11,16 @@ import pytest
 
 from repro.core import CoTMConfig
 from repro.core.cotm import CoTMParams
-from repro.impact import IMPACTConfig, build_system
+from repro.impact import IMPACTConfig, RuntimeSpec, build_system
 from repro.serve import (Backpressure, IMPACTEngine, SlotTable,
                          latency_percentiles, poisson_arrivals,
                          replay_trace)
+
+
+def spec(backend="xla", *, meter=True, capacity=None):
+    return RuntimeSpec(backend=backend,
+                       metering="staged" if meter else "off",
+                       capacity=capacity)
 
 
 @pytest.fixture(scope="module")
@@ -80,55 +86,56 @@ def test_slot_table_rejects_bad_capacity():
 
 # -- mid-flight admission neutrality ----------------------------------------
 
-@pytest.mark.parametrize("impl", ["xla", "pallas"])
-def test_admission_never_perturbs_inflight_lanes(small_system, impl):
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_admission_never_perturbs_inflight_lanes(small_system, backend):
     """A lane admitted mid-flight must not change any other lane's class
     scores or energy bill — free lanes are all-1 literals (rows float, no
     current), so a sweep with {A} and a sweep with {A, B} agree exactly on
     A.  This is the slot-table form of the padding-neutrality argument."""
     system, lits = small_system
+    session = system.compile(spec(backend, capacity=8))
     cap = 8
     buf = np.ones((cap, system.n_literals), np.int8)
     buf[0] = lits[0]
     valid = np.zeros((cap,), bool)
     valid[0] = True
-    p_solo, ecl_solo, ecs_solo = jax.tree.map(
-        np.asarray, system.infer_step(jnp.asarray(buf), valid, impl=impl,
-                                      meter=True))
+    solo = session.infer_step(buf, valid)
+    p_solo = np.asarray(solo.predictions)
     # admit three more requests into free lanes, A untouched
     for j, row in enumerate(lits[1:4], start=1):
         buf[j] = row
         valid[j] = True
-    p_co, ecl_co, ecs_co = jax.tree.map(
-        np.asarray, system.infer_step(jnp.asarray(buf), valid, impl=impl,
-                                      meter=True))
-    assert p_co[0] == p_solo[0]
-    np.testing.assert_allclose(ecl_co[0], ecl_solo[0], rtol=1e-6)
-    np.testing.assert_allclose(ecs_co[0], ecs_solo[0], rtol=1e-6)
+    co = session.infer_step(buf, valid)
+    assert np.asarray(co.predictions)[0] == p_solo[0]
+    np.testing.assert_allclose(np.asarray(co.e_clause_lanes)[0],
+                               np.asarray(solo.e_clause_lanes)[0],
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(co.e_class_lanes)[0],
+                               np.asarray(solo.e_class_lanes)[0],
+                               rtol=1e-6)
     # and the free lanes metered exactly zero in the solo sweep
-    np.testing.assert_array_equal(ecl_solo[1:], 0.0)
-    np.testing.assert_array_equal(ecs_solo[1:], 0.0)
+    np.testing.assert_array_equal(np.asarray(solo.e_clause_lanes)[1:], 0.0)
+    np.testing.assert_array_equal(np.asarray(solo.e_class_lanes)[1:], 0.0)
 
 
-@pytest.mark.parametrize("impl", ["xla", "pallas"])
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
 @pytest.mark.parametrize("meter", [False, True])
-def test_invalid_lanes_predict_sentinel(small_system, impl, meter):
+def test_invalid_lanes_predict_sentinel(small_system, backend, meter):
     """Free lanes (all-1 literals) fire every nonempty clause, so their
     argmax would look like a real class; ``infer_step`` must return the
     sentinel -1 for ``valid == False`` lanes on BOTH the fused
-    (meter=False) and staged (meter=True) paths, while valid lanes keep
-    matching the direct predict path."""
+    (metering='off') and staged (metering='staged') paths, while valid
+    lanes keep matching the direct predict path."""
     system, lits = small_system
+    session = system.compile(spec(backend, meter=meter, capacity=8))
     cap = 8
     buf = np.ones((cap, system.n_literals), np.int8)
     buf[:3] = lits[:3]
     valid = np.zeros((cap,), bool)
     valid[:3] = True
-    preds, _, _ = system.infer_step(jnp.asarray(buf), valid, impl=impl,
-                                    meter=meter)
-    preds = np.asarray(preds)
+    preds = np.asarray(session.infer_step(buf, valid).predictions)
     assert (preds[3:] == -1).all(), preds
-    direct = np.asarray(system.predict(jnp.asarray(lits[:3]), impl=impl))
+    direct = np.asarray(session.predict(jnp.asarray(lits[:3])).predictions)
     np.testing.assert_array_equal(preds[:3], direct)
 
 
@@ -137,8 +144,9 @@ def test_engine_release_refill_reuses_lanes(small_system):
     refilled on the next step; predictions across refills match the
     direct path."""
     system, lits = small_system
-    direct = np.asarray(system.predict(jnp.asarray(lits[:12]), impl="xla"))
-    eng = IMPACTEngine(system, impl="xla", max_batch=4, meter_energy=False)
+    session = system.compile(spec(meter=False, capacity=4))
+    direct = np.asarray(session.predict(jnp.asarray(lits[:12])).predictions)
+    eng = IMPACTEngine(session)
     done = {}
     for i in range(12):
         eng.submit(lits[i])
@@ -155,8 +163,8 @@ def test_engine_release_refill_reuses_lanes(small_system):
 
 def test_engine_backpressure_and_recovery(small_system):
     system, lits = small_system
-    eng = IMPACTEngine(system, impl="xla", max_batch=4, queue_capacity=2,
-                       meter_energy=False)
+    eng = IMPACTEngine(system.compile(spec(meter=False, capacity=4)),
+                       queue_capacity=2)
     # free slots (4) + queue capacity (2) absorb 6 submissions
     for i in range(6):
         eng.submit(lits[i])
@@ -170,7 +178,7 @@ def test_engine_backpressure_and_recovery(small_system):
 
 def test_engine_unbounded_queue_never_sheds(small_system):
     system, lits = small_system
-    eng = IMPACTEngine(system, impl="xla", max_batch=4, meter_energy=False)
+    eng = IMPACTEngine(system.compile(spec(meter=False, capacity=4)))
     for row in lits:
         eng.submit(row)                        # queue_capacity=None
     assert len(eng.queue.pending) == len(lits)
@@ -182,8 +190,8 @@ def test_target_occupancy_defers_sparse_sweeps(small_system):
     """With target_occupancy=1.0 and a long max_wait, a partially filled
     table holds; filling it (or forcing) fires the sweep."""
     system, lits = small_system
-    eng = IMPACTEngine(system, impl="xla", max_batch=4, max_wait_s=30.0,
-                       target_occupancy=1.0, meter_energy=False)
+    eng = IMPACTEngine(system.compile(spec(meter=False, capacity=4)),
+                       max_wait_s=30.0, target_occupancy=1.0)
     for i in range(3):
         eng.submit(lits[i])
     assert eng.step() == []                    # 3/4 occupied, not stale
@@ -198,8 +206,8 @@ def test_injected_clock_drives_staleness_and_latency(small_system):
     admission policy and the latency ledger fully deterministic."""
     system, lits = small_system
     t = [100.0]
-    eng = IMPACTEngine(system, impl="xla", max_batch=4, max_wait_s=0.5,
-                       target_occupancy=1.0, meter_energy=False,
+    eng = IMPACTEngine(system.compile(spec(meter=False, capacity=4)),
+                       max_wait_s=0.5, target_occupancy=1.0,
                        clock=lambda: t[0])
     eng.submit(lits[0])
     assert eng.step() == []                    # 1/4 lanes, fresh on t
@@ -215,8 +223,8 @@ def test_injected_clock_drives_staleness_and_latency(small_system):
 
 def test_max_wait_fires_stale_partial_sweep(small_system):
     system, lits = small_system
-    eng = IMPACTEngine(system, impl="xla", max_batch=4, max_wait_s=0.02,
-                       target_occupancy=1.0, meter_energy=False)
+    eng = IMPACTEngine(system.compile(spec(meter=False, capacity=4)),
+                       max_wait_s=0.02, target_occupancy=1.0)
     eng.submit(lits[0])
     assert eng.step() == []                    # fresh: policy holds it
     time.sleep(0.03)
@@ -231,8 +239,9 @@ def test_per_request_energy_attribution(small_system):
     """Each request carries its own read-energy bill; the bills sum to the
     batch meters and a solo request's bill equals the reference report."""
     system, lits = small_system
-    _, ref = system.infer_with_report(jnp.asarray(lits[:1]), impl="xla")
-    eng = IMPACTEngine(system, impl="xla", max_batch=8)
+    session = system.compile(spec(capacity=8))
+    ref = session.infer_with_report(jnp.asarray(lits[:1])).report
+    eng = IMPACTEngine(session)
     preds, stats = eng.run(lits[:20])
     recs = eng.request_records
     assert len(recs) == 20
@@ -240,7 +249,7 @@ def test_per_request_energy_attribution(small_system):
     np.testing.assert_allclose(sum(r.e_read_j for r in recs),
                                stats["energy"].read_energy_j, rtol=1e-9)
     # solo-request bill == single-sample reference report
-    solo = IMPACTEngine(system, impl="xla", max_batch=8)
+    solo = IMPACTEngine(session)
     solo.submit(lits[0])
     solo.step(force=True)
     np.testing.assert_allclose(solo.request_records[0].e_read_j,
@@ -249,7 +258,7 @@ def test_per_request_energy_attribution(small_system):
 
 def test_request_latency_percentiles_in_stats(small_system):
     system, lits = small_system
-    eng = IMPACTEngine(system, impl="xla", max_batch=8, meter_energy=False)
+    eng = IMPACTEngine(system.compile(spec(meter=False, capacity=8)))
     _, stats = eng.run(lits[:24])
     lat = stats["latency"]
     assert lat["n"] == 24
@@ -281,14 +290,13 @@ def test_continuous_beats_flush_p95_under_poisson(small_system):
     runs in the perf-smoke CI job on the full benchmark trace)."""
     system, lits = small_system
     arrivals = poisson_arrivals(60, rate_rps=250.0, seed=3)
+    session = system.compile(spec(meter=False, capacity=16))
 
     def replay_pair():
-        cont = IMPACTEngine(system, impl="xla", max_batch=16,
-                            meter_energy=False, max_wait_s=0.0)
+        cont = IMPACTEngine(session, max_wait_s=0.0)
         cont.warmup()
         r_cont = replay_trace(cont, lits, arrivals)
-        flush = IMPACTEngine(system, impl="xla", mode="flush", max_batch=16,
-                             buckets=(16,), meter_energy=False,
+        flush = IMPACTEngine(session, mode="flush", buckets=(16,),
                              max_wait_s=0.06)
         flush.warmup()
         r_flush = replay_trace(flush, lits, arrivals)
