@@ -22,6 +22,15 @@ acceptance invariant recorded in ``BENCH_serve.json``: continuous p95
 per-request latency strictly below flush-to-completion p95 on the same
 Poisson trace.
 
+The ``metered`` section (always produced) is gated on three invariants:
+it must exist, the fused-metered and staged-metered runs must have
+agreed on argmax and per-lane joules (``parity_ok``), and fused-metered
+throughput must stay within a generous floor of the unmetered fused
+kernel (the in-kernel meter's whole point is that billing is nearly
+free; a collapse of that ratio is a regression even when every absolute
+number moved).  The fused/staged ratio is printed for the record — on
+CPU interpret mode it gauges dispatch plumbing, not TPU speed.
+
 When the current run carries a ``sharded`` section (multi-device hosts:
 the CI multi-device leg runs the benchmark under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``), the gate also
@@ -90,6 +99,42 @@ def check_sharded(current: dict) -> list[str]:
     return []
 
 
+def check_metered(current: dict, min_fused_ratio: float = 0.25) -> list[str]:
+    """Gate the in-kernel-metering sweep: the section is mandatory (the
+    benchmark always produces it), the fused and staged meters must have
+    agreed (argmax + per-lane joules), and the fused-metered kernel must
+    hold a sane fraction of unmetered-fused throughput.  The floor is
+    deliberately loose — CPU interpret mode prices kernel dispatch, not
+    the TPU meter — but a collapse below it means the metered path fell
+    off the fused kernel entirely."""
+    metered = current.get("metered")
+    if not metered:
+        return ["metered sweep missing from BENCH_throughput.json "
+                "(benchmarks.impact_throughput must always produce it)"]
+    failures = []
+    for b, ratio in sorted(
+            metered.get("ratio_fused_metered_over_unmetered", {}).items(),
+            key=lambda kv: int(kv[0].lstrip("b"))):
+        verdict = "FAIL" if ratio < min_fused_ratio else "ok"
+        print(f"  metered {b:6s} fused/unmetered samples/s ratio "
+              f"{ratio:6.3f}  floor {min_fused_ratio:.2f}  {verdict}")
+        if ratio < min_fused_ratio:
+            failures.append(
+                f"metered {b}: fused-metered throughput fell to "
+                f"{ratio:.3f}x of the unmetered fused kernel "
+                f"(floor {min_fused_ratio})")
+    for b, ratio in sorted(
+            metered.get("ratio_fused_metered_over_staged", {}).items(),
+            key=lambda kv: int(kv[0].lstrip("b"))):
+        print(f"  metered {b:6s} fused/staged    samples/s ratio "
+              f"{ratio:6.3f}  (for the record)")
+    if not metered.get("parity_ok"):
+        failures.append(
+            "metered sweep: fused-metered argmax or per-lane joules "
+            "diverged from the staged oracle (parity_ok is false)")
+    return failures
+
+
 def check_serve(serve: dict) -> list[str]:
     p95_c = serve["continuous"]["p95_s"]
     p95_f = serve["flush"]["p95_s"]
@@ -126,6 +171,7 @@ def main(argv: list[str] | None = None) -> int:
     print(f"perf gate: {args.current} vs {args.baseline} "
           f"(max regression {args.max_regression:.0%})")
     failures = check_throughput(current, baseline, args.max_regression)
+    failures += check_metered(current)
     failures += check_sharded(current)
     if args.serve:
         with open(args.serve) as f:

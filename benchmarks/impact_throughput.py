@@ -5,7 +5,7 @@ configuration is a frozen ``RuntimeSpec`` resolved once by
 ``IMPACTSystem.compile`` into an ``InferenceSession`` of AOT executables,
 so the timed loops never pay (or hide) jit-cache lookups or retraces.
 
-Three measurements:
+Four measurements:
 
 1. **Throughput sweep** — ``session.predict`` samples/s at the paper's
    MNIST dims (K=1568, n=500, m=10) across batch sizes, for both
@@ -25,7 +25,17 @@ Three measurements:
    acceptance artifact: continuous must show lower p95 at equal offered
    load.
 
-3. **Sharded sweep** (multi-device hosts only) — the same predict path
+3. **Metered sweep** — prices the in-kernel energy meter: the SAME
+   ``infer_step`` sweep through three sessions (``metering="off"`` — the
+   unmetered fused kernel, ``"fused"`` — meters accumulated inside the
+   fused kernel, ``"staged"`` — the per-shard oracle the fused meters
+   are pinned against), with argmax + per-lane-joule parity between the
+   two metered modes asserted and recorded.  Lands under the
+   ``"metered"`` key of ``BENCH_throughput.json``; ``check_perf.py``
+   requires the section, its parity flag, and a sane fused-metered /
+   unmetered ratio.
+
+4. **Sharded sweep** (multi-device hosts only) — the same predict path
    from a (data, model=2) mesh via a ``RuntimeSpec`` topology on an
    R=2/S=2 split grid vs the identical split grid on one device, with
    argmax parity asserted; lands under the ``"sharded"`` key of
@@ -35,6 +45,7 @@ Three measurements:
 ``--quick`` shrinks the sweep (B<=32) for the CI perf-smoke job.
 
 CSV rows:  impact_throughput/<impl>_b<B>, us_per_batch, samples_per_s
+           impact_metered/<mode>_b<B>, us_per_batch, samples_per_s
            impact_sharded/<single|sharded>_xla_b<B>, us_per_batch, s/s
            impact_serve/<mode>, p95_us, samples_per_s
 """
@@ -135,6 +146,65 @@ def throughput_sweep(system, cfg, *, quick: bool) -> dict:
                     for k, v in results.items()})
 
 
+def _time_step(session, lits, valid) -> float:
+    res = session.infer_step(lits, valid)       # compile + warm
+    jax.block_until_ready((res.predictions, res.e_clause_lanes))
+    t0 = time.time()
+    for _ in range(REPEATS):
+        out = session.infer_step(lits, valid)
+        jax.block_until_ready((out.predictions, out.e_clause_lanes))
+    return (time.time() - t0) / REPEATS
+
+
+def metered_sweep(system, cfg, *, quick: bool) -> dict:
+    """The ``metered_fused`` acceptance sample: fused-metered vs
+    unmetered-fused vs staged-metered ``infer_step`` samples/s, plus the
+    parity record ``check_perf.py`` gates on (fused and staged meters
+    must agree — billing at speed is only a win if the joules are the
+    same).  Pallas family throughout: the fused kernel is the production
+    path the meter rides."""
+    rng = np.random.default_rng(0)
+    batch_sizes = QUICK_BATCH_SIZES if quick else BATCH_SIZES
+    sessions = {mode: system.compile(RuntimeSpec(backend="pallas",
+                                                 metering=mode))
+                for mode in ("off", "fused", "staged")}
+    results: dict[str, dict] = {}
+    parity_ok = True
+    for B in batch_sizes:
+        lits = jnp.asarray(rng.random((B, cfg.n_literals)) < 0.5)
+        valid = np.ones((B,), bool)
+        res = {mode: s.infer_step(lits, valid)
+               for mode, s in sessions.items()}
+        parity_ok &= bool(
+            (np.asarray(res["fused"].predictions)
+             == np.asarray(res["staged"].predictions)).all())
+        # atol=0: per-lane energies are ~1e-11 J, far below np.allclose's
+        # default atol=1e-8 — the relative tolerance must do all the work
+        # or an all-zeros meter regression would pass as "parity".
+        parity_ok &= bool(np.allclose(
+            np.asarray(res["fused"].e_clause_lanes),
+            np.asarray(res["staged"].e_clause_lanes), rtol=1e-4, atol=0.0))
+        parity_ok &= bool(np.allclose(
+            np.asarray(res["fused"].e_class_lanes),
+            np.asarray(res["staged"].e_class_lanes), rtol=1e-4, atol=0.0))
+        for mode, session in sessions.items():
+            dt = _time_step(session, lits, valid)
+            key = f"metered_{mode}_b{B}"
+            results[key] = dict(us_per_batch=dt * 1e6,
+                                samples_per_s=B / dt)
+            emit(f"impact_metered/{mode}_b{B}", dt * 1e6, f"{B / dt:.1f}")
+    return dict(
+        quick=quick, parity_ok=parity_ok, results=results,
+        ratio_fused_metered_over_unmetered={
+            f"b{B}": (results[f"metered_fused_b{B}"]["samples_per_s"]
+                      / results[f"metered_off_b{B}"]["samples_per_s"])
+            for B in batch_sizes},
+        ratio_fused_metered_over_staged={
+            f"b{B}": (results[f"metered_fused_b{B}"]["samples_per_s"]
+                      / results[f"metered_staged_b{B}"]["samples_per_s"])
+            for B in batch_sizes})
+
+
 def sharded_sweep(cfg, params, *, quick: bool) -> dict | None:
     """Sharded-vs-single-device ``predict`` at a Fig. 14 split layout.
 
@@ -226,6 +296,7 @@ def main(quick: bool = False, json_dir: pathlib.Path | None = None) -> None:
                           IMPACTConfig(variability=False, finetune=False))
 
     bench = throughput_sweep(system, cfg, quick=quick)
+    bench["metered"] = metered_sweep(system, cfg, quick=quick)
     sharded = sharded_sweep(cfg, params, quick=quick)
     if sharded is not None:            # multi-device hosts only
         bench["sharded"] = sharded

@@ -51,11 +51,19 @@ class EnergyReport:
 
     @property
     def gops(self) -> float:
-        return (self.ops_crosspoint / self.datapoints) / self.latency_s / 1e9
+        # Empty aggregates (0 datapoints / 0 latency) report 0.0 instead
+        # of raising, same convention as energy_per_datapoint_j.
+        if self.latency_s <= 0.0:
+            return 0.0
+        return (self.ops_crosspoint / max(self.datapoints, 1)) \
+            / self.latency_s / 1e9
 
     @property
     def tops_per_w(self) -> float:
-        # MAC-equivalents (2 per crosspoint op) / read energy.
+        # MAC-equivalents (2 per crosspoint op) / read energy; an empty
+        # aggregate (read_energy_j == 0) reports 0.0 instead of raising.
+        if self.read_energy_j <= 0.0:
+            return 0.0
         return (2 * self.ops_crosspoint / self.read_energy_j) / 1e12
 
     @property

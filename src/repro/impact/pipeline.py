@@ -16,8 +16,9 @@ semantics for the multi-pod lowering.
 (``yflash.read_current`` hoisted out of the per-call path) and returns an
 ``IMPACTSystem`` — the *programmed hardware*.  Runtime configuration
 lives one level up: ``system.compile(RuntimeSpec(...))`` resolves a
-frozen spec (backend registry name, mesh topology, metering mode,
-interpret policy, slot capacity) once into an ``InferenceSession`` of
+frozen spec (backend registry name, mesh topology, metering mode —
+``"off"`` / ``"staged"`` / ``"fused"`` in-kernel meters — interpret
+policy, slot capacity) once into an ``InferenceSession`` of
 AOT-compiled executables for ``predict`` / ``infer_step`` /
 ``infer_with_report`` (see ``impact.runtime``).  The old per-call
 ``impl=`` / ``mesh=`` / ``meter=`` kwargs keep working through thin
@@ -182,8 +183,8 @@ class IMPACTSystem:
                           valid: Array | None = None,
                           mesh=None) -> tuple[Array, EnergyReport]:
         """``valid`` (B,) bool marks real lanes in a padded batch; padding
-        lanes are excluded from the energy/ops/datapoint accounting (their
-        predictions still come back and are dropped by the caller)."""
+        lanes are excluded from the energy/ops/datapoint accounting and
+        predict the sentinel -1."""
         session = self._legacy_session("infer_with_report",
                                        dict(impl=impl, mesh=mesh))
         res = session.infer_with_report(literals, valid=valid)

@@ -49,7 +49,7 @@ from .yflash import I_CSA_THRESHOLD, T_READ, V_READ
 
 Array = jax.Array
 
-METERING_MODES = ("off", "staged")
+METERING_MODES = ("off", "staged", "fused")
 PRECISIONS = ("float32",)
 
 #: Canonical input dtypes of every session executable.  Callers may pass
@@ -106,11 +106,18 @@ class RuntimeSpec:
     ``batch_sizes``     extra predict shapes to AOT-compile eagerly
     ==================  =============================================
 
-    ``metering="staged"`` meters read energy on the staged per-shard
-    path (required by ``infer_with_report`` and per-request billing);
-    ``"off"`` serves through the fused kernel at max throughput and
-    bills nothing.  ``precision`` is validated for forward compatibility
-    (the analog model is float32 end to end today).
+    ``metering="fused"`` accumulates the read-energy meters INSIDE the
+    fused kernel (a second VMEM accumulator over the column currents the
+    datapath already computes), so ``infer_with_report`` and per-request
+    billing ride the fused single-pass path at serving speed;
+    ``"staged"`` meters on the staged per-shard path — the slower oracle
+    the fused meters are pinned against; ``"off"`` serves through the
+    fused kernel at max throughput and bills nothing.  On a sharded
+    topology both metered modes lower to the same ``shard_map`` datapath
+    (its per-device stages materialize the partial currents anyway, and
+    the per-lane meters are psummed exactly once).  ``precision`` is
+    validated for forward compatibility (the analog model is float32 end
+    to end today).
     """
     backend: str = "pallas"
     topology: Topology = Topology()
@@ -238,15 +245,17 @@ class InferenceSession:
                                e_class_lanes=e_cs)
 
     def infer_with_report(self, literals, valid=None) -> InferenceResult:
-        """Staged + metered inference with the paper's batch-level
-        ``EnergyReport``.  ``valid`` (B,) bool marks real lanes in a
-        padded batch; padding lanes are excluded from the
-        energy/ops/datapoint accounting (their predictions still come
-        back and are dropped by the caller)."""
+        """Metered inference with the paper's batch-level ``EnergyReport``
+        — a single fused pass under ``metering="fused"``, the staged
+        per-shard path under ``"staged"`` (same joules either way).
+        ``valid`` (B,) bool marks real lanes in a padded batch; padding
+        lanes are excluded from the energy/ops/datapoint accounting and
+        predict the sentinel -1 (same contract as ``infer_step``)."""
         if not self.meters_energy:
             raise RuntimeError(
                 "this session was compiled with metering='off' — "
-                "infer_with_report needs RuntimeSpec(metering='staged')")
+                "infer_with_report needs RuntimeSpec(metering='fused') "
+                "(single-pass, serving speed) or 'staged' (the oracle)")
         lits = self._lits(literals)
         B = lits.shape[0]
         v_np = (np.ones((B,), bool) if valid is None
@@ -314,17 +323,36 @@ class InferenceSession:
             thresh=I_CSA_THRESHOLD, interpret=self.spec.interpret)
 
     def _metered_expr(self, literals, valid, clause_i, nonempty, class_i):
-        """Staged metered core -> (scores (B, m), per-lane summed clause
-        currents (B,), per-lane summed class currents (B,)) — the ONE
-        routing point between the shard_map lowering and the
-        single-device staged path, resolved from the compile-time plan."""
+        """Metered core -> (scores (B, m), per-lane summed clause currents
+        (B,), per-lane summed class currents (B,)) — the ONE routing point
+        between the shard_map lowering, the in-kernel fused meters, and
+        the staged per-shard oracle, resolved from the compile-time spec.
+
+        The three lowerings bill identically (pinned by the parity and
+        property suites): per-lane meters are zero on invalid lanes and
+        padding contributes zero current everywhere.
+        """
         if self.plan is not None:
+            # On a mesh both metered modes share the shard_map datapath:
+            # its per-device stages materialize the partial currents
+            # anyway, so the meters are psummed from what is already
+            # computed — the same no-second-pass property the fused
+            # kernel gives one device.
             return crossbar_sh.fused_impact_shmap(
                 literals, clause_i, nonempty, class_i,
                 thresh=I_CSA_THRESHOLD, mesh=self.mesh,
                 impl=self.backend.name, interpret=self.spec.interpret,
                 valid=valid, meter=True,
                 shard_r=self.plan[0], shard_s=self.plan[1])
+        if self.spec.metering == "fused":
+            scores, i_cl, i_cs = self.backend.fused_impact_metered(
+                literals, clause_i, nonempty, class_i,
+                thresh=I_CSA_THRESHOLD, interpret=self.spec.interpret)
+            # Meters are per-lane, so masking AFTER the fused pass is
+            # exact: an invalid lane bills zero without touching any
+            # other lane's currents.
+            v = valid.astype(scores.dtype)
+            return scores, i_cl * v, i_cs * v
         fired, i_clause = self.backend.impact_clause_bits(
             literals, clause_i, nonempty, thresh=I_CSA_THRESHOLD,
             interpret=self.spec.interpret)
@@ -356,9 +384,15 @@ class InferenceSession:
 
     def _report_fn(self, literals, valid, clause_i, nonempty, class_i):
         self._traces["infer_with_report"] += 1
+        valid = valid.astype(bool)
         scores, i_cl_lane, i_cs_lane = self._metered_expr(
-            literals, valid.astype(bool), clause_i, nonempty, class_i)
-        return jnp.argmax(scores, axis=-1), i_cl_lane.sum(), i_cs_lane.sum()
+            literals, valid, clause_i, nonempty, class_i)
+        # Sentinel invalid lanes like infer_step does: the staged and
+        # fused lowerings see different scores on an excluded lane (one
+        # zeroes its clause drive, the other doesn't), so its argmax is
+        # meaningless — mask it instead of leaking a mode-dependent value.
+        return (jnp.where(valid, jnp.argmax(scores, axis=-1), -1),
+                i_cl_lane.sum(), i_cs_lane.sum())
 
     def __repr__(self) -> str:
         return (f"InferenceSession(backend={self.spec.backend!r}, "

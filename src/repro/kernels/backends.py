@@ -5,12 +5,21 @@ runtime is built from — the Pallas kernels, the pure-einsum oracles, or
 (future) a TPU-native / metered-fused lowering.  Dispatch used to be an
 ``if impl == "xla"`` string switch copy-pasted into every jitted entry
 point; it now lives here, so a new backend slots in by registering an
-object instead of touching call sites:
+object instead of touching call sites — ``MeteredPallasBackend``
+(``"pallas-metered"``, the always-metered fused lowering) is the first
+backend that arrived purely through this seam:
 
-    class MeteredFused(PallasBackend):
-        name = "pallas-metered"
+    class MyLowering(PallasBackend):
+        name = "pallas-mine"
         ...
-    register_backend(MeteredFused())
+    register_backend(MyLowering())
+
+Every backend also lowers ``fused_impact_metered`` — inference plus the
+per-lane read-current meters (the Table 4 energy accounting) in one
+call: the Pallas backends accumulate the meters inside the fused
+kernel's VMEM residency, the reference backend uses the whole-array
+metered oracle, and the base class composes the staged per-shard
+primitives so any third backend meters correctly out of the box.
 
 ``kernels.ops`` keeps the public wrapper signatures (``impl=`` is simply
 the registry key) and the compiled-session runtime (``impact.runtime``)
@@ -107,6 +116,29 @@ class Backend:
                      interpret: bool | None = None, block_b: int = 128,
                      block_n: int = 256) -> Array:
         raise NotImplementedError
+
+    def fused_impact_metered(self, literals: Array, clause_i: Array,
+                             nonempty: Array, class_i: Array, *,
+                             thresh: float, interpret: bool | None = None,
+                             block_b: int = 128, block_n: int = 256,
+                             ) -> tuple[Array, Array, Array]:
+        """-> (scores (B, M), per-lane summed clause-crossbar column
+        currents (B,), per-lane summed class-crossbar column currents
+        (B,)) — inference plus the Table 4 energy meters in one pass.
+
+        Default composition: the staged per-shard primitives, summing the
+        column currents they already materialize.  Kernel backends
+        override this with a fused lowering (``PallasBackend`` accumulates
+        the meters inside the fused kernel's VMEM residency), but ANY
+        registered backend supports ``RuntimeSpec(metering="fused")``
+        through this fallback — correctness never depends on the
+        override, only throughput does.
+        """
+        fired, i_col = self.impact_clause_bits(
+            literals, clause_i, nonempty, thresh=thresh, interpret=interpret)
+        scores, i_cls = self.impact_class_scores(fired, class_i,
+                                                 interpret=interpret)
+        return scores, i_col.sum(axis=(1, 2, 3)), i_cls.sum(axis=(1, 2))
 
     def crossbar_mvm(self, drive: Array, g: Array, *, v_read: float = 2.0,
                      nonlin: float = 1.5, cutoff: float = 10e-9,
@@ -210,13 +242,17 @@ class PallasBackend(Backend):
             interpret=interpret)
         return out[:B, :M]
 
-    def fused_impact(self, literals, clause_i, nonempty, class_i, *,
-                     thresh, interpret=None, block_b=128, block_n=256):
+    def _fused_impact_operands(self, literals, clause_i, nonempty, class_i,
+                               *, block_b, block_n):
+        """Shared neutral-padding plumbing of the fused IMPACT kernels:
+        -> (drive, ccur, ne, wcur, block_n) in the kernel layouts, with
+        padded rows/columns contributing exactly zero current (floating
+        'Z' literal rows, nonempty=0 clause columns, 0 A class cells) —
+        which is what makes the in-kernel meters exact."""
         B, K = literals.shape
         R, C, tr, tc = clause_i.shape
         S, sr, M = class_i.shape
         n_clause = C * tc
-        interpret = self.resolve_interpret(interpret)
 
         # Unify the clause-column axis of both crossbars: the clause tile
         # pads n to C*tc, the class tile to S*sr; dead columns (>= n)
@@ -240,11 +276,38 @@ class PallasBackend(Backend):
 
         wcur = class_i.astype(jnp.float32).reshape(S * sr, M)
         wcur = pad_axis(pad_axis(wcur, ne.shape[1], 0, 0.0), 128, 1, 0.0)
+        return drive, ccur, ne, wcur, block_n
 
+    def fused_impact(self, literals, clause_i, nonempty, class_i, *,
+                     thresh, interpret=None, block_b=128, block_n=256):
+        B, M = literals.shape[0], class_i.shape[2]
+        interpret = self.resolve_interpret(interpret)
+        drive, ccur, ne, wcur, block_n = self._fused_impact_operands(
+            literals, clause_i, nonempty, class_i, block_b=block_b,
+            block_n=block_n)
         out = _impact_kernel.fused_impact(
             drive, ccur, ne, wcur, thresh=thresh, block_b=block_b,
             block_n=block_n, interpret=interpret)
         return out[:B, :M]
+
+    def fused_impact_metered(self, literals, clause_i, nonempty, class_i,
+                             *, thresh, interpret=None, block_b=128,
+                             block_n=256):
+        """The tentpole lowering: scores AND both per-lane current meters
+        from ONE fused kernel pass (second VMEM accumulator), no staged
+        second pass.  Padding contributes exactly zero current, so the
+        sliced meters equal the staged per-shard sums to f32 tolerance."""
+        B, M = literals.shape[0], class_i.shape[2]
+        interpret = self.resolve_interpret(interpret)
+        drive, ccur, ne, wcur, block_n = self._fused_impact_operands(
+            literals, clause_i, nonempty, class_i, block_b=block_b,
+            block_n=block_n)
+        out, meters = _impact_kernel.fused_impact_metered(
+            drive, ccur, ne, wcur, thresh=thresh, block_b=block_b,
+            block_n=block_n, interpret=interpret)
+        return (out[:B, :M],
+                meters[:B, _impact_kernel.METER_LANE_CLAUSE],
+                meters[:B, _impact_kernel.METER_LANE_CLASS])
 
     def crossbar_mvm(self, drive, g, *, v_read=2.0, nonlin=1.5,
                      cutoff=10e-9, interpret=None, block_b=128,
@@ -297,6 +360,11 @@ class XLABackend(Backend):
         return ref.fused_impact_ref(literals, clause_i, nonempty, class_i,
                                     thresh=thresh)
 
+    # fused_impact_metered is inherited: the base composition over THIS
+    # backend's staged primitives is exactly the whole-array metered
+    # oracle (``ref.fused_impact_metered_ref`` spells out the same
+    # expression for direct use in tests).
+
     def crossbar_mvm(self, drive, g, *, v_read=2.0, nonlin=1.5,
                      cutoff=10e-9, interpret=None, block_b=128,
                      block_n=128, block_k=512):
@@ -310,6 +378,30 @@ class XLABackend(Backend):
 
     def impact_class_scores(self, clauses, class_i, *, interpret=None):
         return ref.impact_class_scores_ref(clauses, class_i)
+
+
+class MeteredPallasBackend(PallasBackend):
+    """The always-metered Pallas lowering: every fused inference runs the
+    metered kernel, scores-only callers just drop the meters.
+
+    ``RuntimeSpec(backend="pallas", metering="fused")`` already reaches
+    the metered kernel through ``PallasBackend.fused_impact_metered``;
+    this registered variant exists so the *unmetered* entry points
+    (``predict``, benchmark sweeps) can ride the metered kernel too —
+    the one-to-one A/B that prices the in-kernel meter on the identical
+    call path (``benchmarks/impact_throughput.py`` records it as the
+    ``metered_fused`` sample), and the registry's proof that a new
+    lowering slots in by registration alone.
+    """
+
+    name = "pallas-metered"
+
+    def fused_impact(self, literals, clause_i, nonempty, class_i, *,
+                     thresh, interpret=None, block_b=128, block_n=256):
+        scores, _, _ = self.fused_impact_metered(
+            literals, clause_i, nonempty, class_i, thresh=thresh,
+            interpret=interpret, block_b=block_b, block_n=block_n)
+        return scores
 
 
 # -- registry ---------------------------------------------------------------
@@ -357,3 +449,4 @@ def available_backends() -> tuple[str, ...]:
 
 register_backend(PallasBackend())
 register_backend(XLABackend())
+register_backend(MeteredPallasBackend())

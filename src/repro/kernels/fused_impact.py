@@ -29,6 +29,14 @@ Layouts (prepared by ``ops.fused_impact``):
 R stays whole per block (the digital AND needs every shard's partial bit),
 mirroring ``fused_cotm`` keeping K whole; this bounds R*tr at a few
 thousand rows — exactly the regime of a physical crossbar column height.
+
+``fused_impact_metered`` is the same datapath with in-kernel energy
+metering: the paper (and IMBUE, arXiv:2305.12914) measure read energy as
+``E = V_R * I_col * t_read`` summed over the very column currents the
+inference already computes, so the metered kernel folds each chunk's
+``I_col`` into a second VMEM accumulator while the CSA consumes it —
+joules come out of the single fused pass with no staged second pass and
+without ever materializing the (B, n_pad) clause matrix in HBM.
 """
 from __future__ import annotations
 
@@ -108,6 +116,117 @@ def fused_impact(drive: Array, ccur: Array, nonempty: Array, wcur: Array, *,
         out_specs=pl.BlockSpec((block_b, M), lambda b, n: (b, 0)),
         out_shape=jax.ShapeDtypeStruct((B, M), jnp.float32),
         scratch_shapes=[pltpu.VMEM((block_b, M), jnp.float32)],
+        compiler_params=_compat.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(drive, ccur, nonempty, wcur)
+
+
+#: Lane layout of the metered kernel's (B, METER_LANES) meter output:
+#: lane 0 carries the summed clause-crossbar column currents, lane 1 the
+#: summed class-crossbar column currents.  128 lanes (one VREG row) keep
+#: the output MXU/VPU tile-aligned; the wrapper slices the two live lanes.
+METER_LANE_CLAUSE = 0
+METER_LANE_CLASS = 1
+METER_LANES = 128
+
+
+def _fused_impact_metered_kernel(drive_ref, ccur_ref, ne_ref, wcur_ref,
+                                 out_ref, meter_ref, acc_ref, macc_ref, *,
+                                 n_n: int, n_r: int, thresh: float):
+    """The fused datapath + in-kernel energy meter.
+
+    Identical clause/class compute to ``_fused_impact_kernel``; on top,
+    each chunk's clause column currents are folded into a second VMEM
+    accumulator (``macc_ref``) the moment the CSA consumes them.  The
+    class-current meter needs no extra accumulation at all: the class
+    read is linear, so the summed class column current is exactly the
+    row-sum of the score accumulator — computed once in the epilogue.
+    """
+    n = pl.program_id(1)
+
+    @pl.when(n == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        macc_ref[...] = jnp.zeros_like(macc_ref)
+
+    bb = drive_ref.shape[1]
+    bn = ne_ref.shape[1]
+    fired = jnp.broadcast_to(ne_ref[...] != 0, (bb, bn))
+    i_chunk = jnp.zeros((bb, 1), jnp.float32)
+    for r in range(n_r):                       # static unroll over row shards
+        i_col = jax.lax.dot_general(
+            drive_ref[r], ccur_ref[r],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        fired = fired & (i_col < thresh)       # CSA + digital AND, in VMEM
+        i_chunk += i_col.sum(axis=1, keepdims=True)
+    # Every meter lane accumulates the same per-lane clause current (a
+    # plain VPU broadcast-add — no per-chunk lane select); the epilogue
+    # picks METER_LANE_CLAUSE.  Padded rows/columns carry 0 A by the
+    # wrapper's neutral padding, so they add exactly zero here.
+    macc_ref[...] += i_chunk
+    acc_ref[...] += jax.lax.dot_general(
+        fired.astype(jnp.float32), wcur_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(n == n_n - 1)
+    def _epilogue():
+        out_ref[...] = acc_ref[...]
+        lane = jax.lax.broadcasted_iota(jnp.int32, macc_ref.shape, 1)
+        i_class = acc_ref[...].sum(axis=1, keepdims=True)
+        meter_ref[...] = jnp.where(
+            lane == METER_LANE_CLAUSE, macc_ref[...],
+            jnp.where(lane == METER_LANE_CLASS, i_class, 0.0))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("thresh", "block_b", "block_n", "interpret"))
+def fused_impact_metered(drive: Array, ccur: Array, nonempty: Array,
+                         wcur: Array, *, thresh: float,
+                         block_b: int = BLOCK_B, block_n: int = BLOCK_N,
+                         interpret: bool = False,
+                         ) -> tuple[Array, Array]:
+    """Metered variant of ``fused_impact``: same layouts and constraints,
+    returns ``(class currents (B, M) f32, meters (B, METER_LANES) f32)``
+    where meter lane ``METER_LANE_CLAUSE`` holds the per-lane summed
+    clause-crossbar column current and ``METER_LANE_CLASS`` the per-lane
+    summed class-crossbar column current — the quantities
+    ``impact.energy.per_lane_read_energy`` converts to joules.  The
+    backend plumbing (``PallasBackend.fused_impact_metered``) pads inputs
+    and slices the live meter lanes back out.
+    """
+    R, B, tr = drive.shape
+    R2, tr2, N = ccur.shape
+    N2, M = wcur.shape
+    assert R == R2 and tr == tr2 and N == N2 and nonempty.shape == (1, N)
+    assert (B % block_b == 0 and N % block_n == 0 and tr % 128 == 0
+            and M % 128 == 0), (B, R, tr, N, M)
+    n_n = N // block_n
+
+    return pl.pallas_call(
+        functools.partial(_fused_impact_metered_kernel, n_n=n_n, n_r=R,
+                          thresh=thresh),
+        grid=(B // block_b, n_n),
+        in_specs=[
+            pl.BlockSpec((R, block_b, tr), lambda b, n: (0, b, 0)),
+            pl.BlockSpec((R, tr, block_n), lambda b, n: (0, 0, n)),
+            pl.BlockSpec((1, block_n), lambda b, n: (0, n)),
+            pl.BlockSpec((block_n, M), lambda b, n: (n, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, M), lambda b, n: (b, 0)),
+            pl.BlockSpec((block_b, METER_LANES), lambda b, n: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, M), jnp.float32),
+            jax.ShapeDtypeStruct((B, METER_LANES), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_b, M), jnp.float32),
+                        pltpu.VMEM((block_b, METER_LANES), jnp.float32)],
         compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,

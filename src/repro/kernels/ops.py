@@ -70,7 +70,7 @@ def fused_cotm(literals: Array, include: Array, weights: Array,
 def fused_impact(literals: Array, clause_i: Array, nonempty: Array,
                  class_i: Array, *, thresh: float, impl: str = "pallas",
                  interpret: bool | None = None, block_b: int = 128,
-                 block_n: int = 256, mesh=None) -> Array:
+                 block_n: int = 256, mesh=None, meter: bool = False):
     """Fused analog IMPACT inference: literals -> class currents (B, M) f32.
 
     literals (B, K) bool/{0,1}; clause_i (R, C, tr, tc) f32 per-cell clause
@@ -78,13 +78,21 @@ def fused_impact(literals: Array, clause_i: Array, nonempty: Array,
     (C*tc,) digital mask; class_i (S, sr, M) f32 class crossbar currents.
     ``thresh`` is the CSA decision current (``yflash.I_CSA_THRESHOLD``).
 
+    ``meter=True`` additionally returns the per-lane energy meters —
+    ``(scores, summed clause-crossbar column currents (B,), summed
+    class-crossbar column currents (B,))`` — accumulated inside the fused
+    kernel (``Backend.fused_impact_metered``), so the Table 4 joules
+    cost no staged second pass.  Padding rows/columns contribute exactly
+    zero current to the meters.
+
     ``mesh``: a jax Mesh with a ``model`` axis distributes the R/S row
     shards across devices via ``sharding.crossbar`` (digital AND == psum
     of partial CSA bits, ADC + add == psum of partial class currents) and
-    shards the batch over the data axes.  When only one of R/S divides
-    the model axis, that operand shards and the other is replicated
-    (asymmetric plan); when neither divides, the single-device backend
-    runs, so callers can pass a mesh unconditionally.
+    shards the batch over the data axes; with ``meter=True`` the per-lane
+    meters are psummed alongside.  When only one of R/S divides the model
+    axis, that operand shards and the other is replicated (asymmetric
+    plan); when neither divides, the single-device backend runs, so
+    callers can pass a mesh unconditionally.
 
     Padding is semantically neutral: padded literal rows drive 0 V (a
     floating row contributes no current), padded clause columns carry
@@ -99,9 +107,14 @@ def fused_impact(literals: Array, clause_i: Array, nonempty: Array,
         if plan is not None:
             return _crossbar.fused_impact_shmap(
                 literals, clause_i, nonempty, class_i, thresh=thresh,
-                mesh=mesh, impl=impl, interpret=interpret,
+                mesh=mesh, impl=impl, interpret=interpret, meter=meter,
                 shard_r=plan[0], shard_s=plan[1])
-    return backends.get_backend(impl).fused_impact(
+    backend = backends.get_backend(impl)
+    if meter:
+        return backend.fused_impact_metered(
+            literals, clause_i, nonempty, class_i, thresh=thresh,
+            interpret=interpret, block_b=block_b, block_n=block_n)
+    return backend.fused_impact(
         literals, clause_i, nonempty, class_i, thresh=thresh,
         interpret=interpret, block_b=block_b, block_n=block_n)
 

@@ -102,6 +102,24 @@ def fused_impact_ref(literals: Array, clause_i: Array, nonempty: Array,
     return scores
 
 
+def fused_impact_metered_ref(literals: Array, clause_i: Array,
+                             nonempty: Array, class_i: Array, *,
+                             thresh: float) -> tuple[Array, Array, Array]:
+    """Oracle for the metered fused kernel: ``(scores (B, M), per-lane
+    summed clause-crossbar column currents (B,), per-lane summed
+    class-crossbar column currents (B,))``.
+
+    The meters are the E = V_R * I * t_read quantities of the paper's
+    Table 4 accounting, summed over every physical column of each
+    crossbar (clause-tile leakage columns beyond ``n_clauses`` included —
+    they are real cells drawing real current); ``impact.energy.
+    per_lane_read_energy`` converts them to joules."""
+    fired, i_col = impact_clause_bits_ref(literals, clause_i, nonempty,
+                                          thresh=thresh)
+    scores, i_cls = impact_class_scores_ref(fired, class_i)
+    return scores, i_col.sum(axis=(1, 2, 3)), i_cls.sum(axis=(1, 2))
+
+
 def crossbar_mvm_ref(drive: Array, g: Array, *, v_read: float = 2.0,
                      nonlin: float = 1.5, cutoff: float = 10e-9) -> Array:
     """Analog crossbar column currents with the Y-Flash low-G nonlinearity.

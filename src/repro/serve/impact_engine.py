@@ -52,11 +52,14 @@ spec at ``max_batch`` as a convenience; the legacy ``impl=`` / ``mesh=``
 / ``meter_energy=`` kwargs keep working through a ``SpecDeprecationWarning``
 shim that folds them into the spec.
 
-Energy metering note: a session with ``metering="staged"`` runs the
-STAGED per-shard kernel path — metering needs the column currents the
-fused kernel deliberately never materializes.  ``metering="off"`` serves
-through the fused ``fused_impact`` kernel (the max-throughput
-configuration) and bills nothing.
+Energy metering note: ``metering="fused"`` bills every request from the
+meters the fused kernel accumulates in VMEM while it infers — per-lane
+summed column currents ride the single fused pass, so metered serving
+runs at (near-)unmetered fused throughput (``benchmarks/
+impact_throughput.py`` prices the overhead as the ``metered_fused``
+sample).  ``metering="staged"`` keeps the per-shard oracle path the
+fused meters are pinned against; ``metering="off"`` serves the fused
+kernel and bills nothing.
 """
 from __future__ import annotations
 

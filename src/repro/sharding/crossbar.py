@@ -33,6 +33,16 @@ passed and a plan exists; the compiled-session runtime
 (``impact.runtime``) resolves the plan ONCE at ``compile()`` time from
 ``RuntimeSpec.topology`` instead of re-deriving it per call.
 
+**Energy metering.**  ``meter=True`` psums the per-lane summed column
+currents of both crossbars across the model axis — the partial stages
+each device materializes anyway, billed exactly once (a replicated
+operand's currents are already the full quantity on every device, so
+its psum is skipped).  This one lowering backs BOTH metering modes of a
+sharded ``RuntimeSpec`` (``"staged"`` and ``"fused"``): on a mesh the
+currents exist per device regardless, so there is no staged-vs-fused
+distinction to make — the in-kernel fused meter is a single-device
+specialization, pinned equal to this path by the parity suites.
+
 Parity contract (enforced in ``tests/test_crossbar_sharding.py``): CSA
 bits and argmax predictions are EXACTLY equal to the single-device kernel
 and the einsum oracle on ideal devices; raw class-current scores are

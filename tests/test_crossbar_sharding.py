@@ -219,16 +219,21 @@ def test_no_plan_falls_back_exactly():
 
 
 @multi_device
+@pytest.mark.parametrize("metering", ["staged", "fused"])
 @pytest.mark.parametrize("backend", ["xla", "pallas"])
 @pytest.mark.parametrize("R,tr,S,sr", [
     (4, 80, 4, 30),      # fully sharded plan
     (4, 80, 3, 40),      # asymmetric R-only plan
 ])
-def test_metered_infer_step_parity_under_sharding(backend, R, tr, S, sr):
-    """Sharded metered sweep == single-device staged path: same preds
+def test_metered_infer_step_parity_under_sharding(backend, metering,
+                                                  R, tr, S, sr):
+    """Sharded metered sweep == single-device metered path: same preds
     (sentinel -1 on free lanes), same per-lane energy bills, free lanes
     billed exactly zero — for the fully sharded AND asymmetric plans (a
-    replicated stage's currents must not be psummed into m-fold bills)."""
+    replicated stage's currents must not be psummed into m-fold bills),
+    and for BOTH metering modes (a sharded topology lowers them to the
+    same psummed datapath; single-device 'fused' runs the in-kernel
+    meters — the four (plan, mode) corners of the acceptance sweep)."""
     mesh = _mesh_or_skip(2)
     B, K = 8, 300
     lit, sys_ = _make_system(B, K, 120, 7, R, tr, 3, 40, S, sr, seed=13)
@@ -236,9 +241,11 @@ def test_metered_infer_step_parity_under_sharding(backend, R, tr, S, sr):
     buf[:5] = np.asarray(lit[:5])
     valid = np.zeros((B,), bool)
     valid[:5] = True
-    s_one = sys_.compile(RuntimeSpec(backend=backend, capacity=B))
+    s_one = sys_.compile(RuntimeSpec(backend=backend, metering=metering,
+                                     capacity=B))
     s_mesh = sys_.compile(RuntimeSpec(
-        backend=backend, capacity=B, topology=Topology(mesh=mesh)))
+        backend=backend, metering=metering, capacity=B,
+        topology=Topology(mesh=mesh)))
     assert s_mesh.plan == (True, S % 2 == 0)
     r1 = s_one.infer_step(buf, valid)
     rm = s_mesh.infer_step(buf, valid)
@@ -251,6 +258,40 @@ def test_metered_infer_step_parity_under_sharding(backend, R, tr, S, sr):
                                np.asarray(r1.e_class_lanes), rtol=1e-5)
     np.testing.assert_array_equal(np.asarray(rm.e_clause_lanes)[5:], 0.0)
     np.testing.assert_array_equal(np.asarray(rm.e_class_lanes)[5:], 0.0)
+
+
+@multi_device
+@pytest.mark.parametrize("shard", ["both", "r", "s", "none"])
+def test_fused_metering_bills_identically_across_shard_plans(shard):
+    """RuntimeSpec(metering='fused') under all four forced shard plans
+    (both / R-only / S-only / none): per-lane meters agree with the
+    single-device staged oracle — the ISSUE acceptance sweep.  'none'
+    forces the single-device in-kernel meters even on a meshed system;
+    the sharded plans psum the meters with replicated operands billed
+    exactly once."""
+    mesh = _mesh_or_skip(2)
+    B, K = 8, 300
+    lit, sys_ = _make_system(B, K, 120, 7, 4, 80, 3, 40, 4, 30, seed=15)
+    buf = np.ones((B, K), np.int8)
+    buf[:6] = np.asarray(lit[:6])
+    valid = np.zeros((B,), bool)
+    valid[:6] = True
+    oracle = sys_.compile(RuntimeSpec(backend="xla", metering="staged",
+                                      capacity=B)).infer_step(buf, valid)
+    sess = sys_.compile(RuntimeSpec(
+        backend="xla", metering="fused", capacity=B,
+        topology=Topology(mesh=mesh, shard=shard)))
+    want_plan = {"both": (True, True), "r": (True, False),
+                 "s": (False, True), "none": None}[shard]
+    assert sess.plan == want_plan
+    got = sess.infer_step(buf, valid)
+    np.testing.assert_array_equal(np.asarray(got.predictions),
+                                  np.asarray(oracle.predictions))
+    np.testing.assert_allclose(np.asarray(got.e_clause_lanes),
+                               np.asarray(oracle.e_clause_lanes), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(got.e_class_lanes),
+                               np.asarray(oracle.e_class_lanes), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(got.e_clause_lanes)[6:], 0.0)
 
 
 @multi_device
@@ -323,6 +364,25 @@ SMOKE = textwrap.dedent("""
     np.testing.assert_allclose(
         sum(r.e_read_j for r in eng.request_records),
         stats["energy"].read_energy_j, rtol=1e-6)
+
+    # fused metering on the mesh == staged single-device oracle (per-lane
+    # bills psummed once; free lanes bill zero)
+    buf = np.ones((16, 200), np.int8)
+    buf[:9] = np.asarray(lit[:9], np.int8)
+    vd = np.zeros((16,), bool); vd[:9] = True
+    st = base.compile(RuntimeSpec(backend="xla", metering="staged",
+                                  capacity=16)).infer_step(buf, vd)
+    fu = base.compile(RuntimeSpec(backend="xla", metering="fused",
+                                  capacity=16,
+                                  topology=Topology(mesh=mesh))
+                      ).infer_step(buf, vd)
+    np.testing.assert_array_equal(np.asarray(fu.predictions),
+                                  np.asarray(st.predictions))
+    np.testing.assert_allclose(np.asarray(fu.e_clause_lanes),
+                               np.asarray(st.e_clause_lanes), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(fu.e_class_lanes),
+                               np.asarray(st.e_class_lanes), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(fu.e_clause_lanes)[9:], 0.0)
     print("SHARDED_SMOKE_OK", jax.device_count())
 """)
 
@@ -331,8 +391,9 @@ def test_sharded_smoke_on_forced_host_devices():
     """One real 8-device run in the tier-1 lane (subprocess, because the
     XLA host-device flag must be set before jax initialises): parity of
     the shard_map lowering vs the oracle — including an asymmetric
-    R-only plan — plus session-engine billing.  The full sweeps run
-    in-process in the CI multi-device leg."""
+    R-only plan — plus session-engine billing and a fused-metering
+    sweep billed against the staged single-device oracle.  The full
+    sweeps run in-process in the CI multi-device leg."""
     tests_dir = str(pathlib.Path(__file__).resolve().parent)
     r = subprocess.run(
         [sys.executable, "-c", SMOKE.format(tests_dir=tests_dir)],

@@ -1,0 +1,243 @@
+"""Energy-invariant property suite: the metering contract every lowering
+must satisfy, for STAGED and FUSED metering alike.
+
+The meters are physical quantities (E = V_R * I_col * t_read summed over
+crossbar columns), so they obey invariants no implementation detail may
+break:
+
+* **non-negativity** — conductances and drives are non-negative, so no
+  lane can ever bill negative joules;
+* **invalid/padding lanes bill exactly zero** — a free slot-table lane
+  (all-1 literals: every row floats) and a valid=False lane both draw no
+  billable current;
+* **batch-split additivity** — lanes are physically independent columns
+  of the same crossbar, so serving a batch in one sweep or in two
+  sub-batches bills each datapoint identically and the totals agree in
+  f64;
+* **f64 lane-sum == batch meter** — per-request attribution must sum
+  exactly to the batch-level ``EnergyReport`` (the scheduler's billing
+  ledger is audited against the paper's Table 4 accounting);
+* **staged == fused** — the in-kernel fused meters and the staged
+  per-shard oracle measure the same currents (tight f32 tolerance).
+
+Runs through the compiled-session runtime over hypothesis-generated
+shapes / seeds / (R, S) shard layouts (via ``_hypothesis_compat``, so
+the suite executes with or without hypothesis installed).  The
+reference backend drives the wide sweep; a narrower Pallas sweep pins
+the kernel lowerings to the same contract.  Multi-device shard plans
+are covered by ``test_crossbar_sharding.py``.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.impact import EnergyReport, RuntimeSpec
+from repro.impact.energy import report_from_lane_energies
+from repro.serve.impact_engine import aggregate_reports
+
+from test_fused_impact import _make_system
+
+METERINGS = ("staged", "fused")
+
+
+def _grid(B, K, n, M, R, S, seed, density):
+    """Random (R, C, S) shard factorization of a (K, n, M) system."""
+    tr = -(-K // R)
+    C = 1 + seed % 3
+    tc = -(-n // C)
+    sr = -(-n // S)
+    return _make_system(B, K, n, M, R, tr, C, tc, S, sr,
+                        seed=seed, density=density)
+
+
+def _step(session, lit, n_valid):
+    """One slot-table sweep with ``n_valid`` occupied lanes (the rest are
+    free: all-1 literals, valid=False) -> (result, valid mask)."""
+    B, K = lit.shape
+    buf = np.ones((B, K), np.int8)
+    buf[:n_valid] = np.asarray(lit[:n_valid], np.int8)
+    valid = np.zeros((B,), bool)
+    valid[:n_valid] = True
+    return session.infer_step(buf, valid), valid
+
+
+def _assert_invariants(sys_, session, lit, n_valid):
+    res, valid = _step(session, lit, n_valid)
+    e_cl = np.asarray(res.e_clause_lanes, np.float64)
+    e_cs = np.asarray(res.e_class_lanes, np.float64)
+
+    # non-negative everywhere
+    assert (e_cl >= 0).all() and (e_cs >= 0).all(), (e_cl, e_cs)
+    # invalid / padding lanes bill exactly zero
+    np.testing.assert_array_equal(e_cl[~valid], 0.0)
+    np.testing.assert_array_equal(e_cs[~valid], 0.0)
+    assert (np.asarray(res.predictions)[~valid] == -1).all()
+    # a valid lane that drives at least one row draws real (if only
+    # leakage) clause-crossbar current; an all-1 lane floats every row
+    # and legitimately bills zero
+    driven = (np.asarray(lit[:n_valid]) == 0).any(axis=1)
+    assert (e_cl[:n_valid][driven] > 0.0).all()
+
+    # f64 lane-sum == batch meter (the billing-ledger audit)
+    report = sys_.step_report(e_cl, e_cs, n_valid)
+    assert report.read_energy_j == e_cl.sum() + e_cs.sum()
+    assert report.clause_energy_j == e_cl.sum()
+    assert report.class_energy_j == e_cs.sum()
+    # ...and the one-shot report path measures the same physics
+    rep = session.infer_with_report(lit).report
+    full, _ = _step(session, lit, lit.shape[0])
+    lane_sum = (np.asarray(full.e_clause_lanes, np.float64).sum()
+                + np.asarray(full.e_class_lanes, np.float64).sum())
+    np.testing.assert_allclose(rep.read_energy_j, lane_sum, rtol=1e-5,
+                               atol=1e-30)
+    assert rep.datapoints == lit.shape[0]
+
+    # batch-split additivity: two half sweeps bill each lane identically
+    if n_valid >= 2:
+        h = n_valid // 2
+        ra, _ = _step(session, lit[:h], h)
+        rb, _ = _step(session, lit[h:n_valid], n_valid - h)
+        split_cl = np.concatenate([np.asarray(ra.e_clause_lanes, np.float64),
+                                   np.asarray(rb.e_clause_lanes, np.float64)])
+        split_cs = np.concatenate([np.asarray(ra.e_class_lanes, np.float64),
+                                   np.asarray(rb.e_class_lanes, np.float64)])
+        np.testing.assert_allclose(split_cl, e_cl[:n_valid], rtol=1e-6,
+                                   atol=1e-30)
+        np.testing.assert_allclose(split_cs, e_cs[:n_valid], rtol=1e-6,
+                                   atol=1e-30)
+        np.testing.assert_allclose(split_cl.sum() + split_cs.sum(),
+                                   e_cl.sum() + e_cs.sum(), rtol=1e-6,
+                                   atol=1e-30)
+    return e_cl, e_cs
+
+
+@settings(max_examples=10, deadline=None)
+@given(B=st.integers(2, 12), K=st.integers(4, 96), n=st.integers(2, 48),
+       M=st.integers(2, 8), R=st.integers(1, 3), S=st.integers(1, 3),
+       metering=st.sampled_from(METERINGS),
+       density=st.floats(0.0, 0.3), seed=st.integers(0, 2 ** 16))
+def test_meter_invariants_property(B, K, n, M, R, S, metering, density,
+                                   seed):
+    """The wide sweep (reference backend): every invariant over random
+    shapes, shard layouts, occupancies, and both metering modes."""
+    lit, sys_ = _grid(B, K, n, M, R, S, seed, density)
+    session = sys_.compile(RuntimeSpec(backend="xla", metering=metering,
+                                       capacity=B))
+    _assert_invariants(sys_, session, lit, n_valid=1 + seed % B)
+
+
+@settings(max_examples=5, deadline=None)
+@given(B=st.integers(2, 8), K=st.integers(4, 64), n=st.integers(2, 32),
+       M=st.integers(2, 6), R=st.integers(1, 2), S=st.integers(1, 2),
+       metering=st.sampled_from(METERINGS), seed=st.integers(0, 2 ** 16))
+def test_meter_invariants_property_pallas(B, K, n, M, R, S, metering, seed):
+    """The kernel lowerings obey the same contract (narrower sweep —
+    interpret mode is slow; the staged/fused parity suites carry the
+    exhaustive shapes)."""
+    lit, sys_ = _grid(B, K, n, M, R, S, seed, density=0.15)
+    session = sys_.compile(RuntimeSpec(backend="pallas", metering=metering,
+                                       capacity=B))
+    _assert_invariants(sys_, session, lit, n_valid=1 + seed % B)
+
+
+@settings(max_examples=8, deadline=None)
+@given(B=st.integers(2, 10), K=st.integers(4, 96), n=st.integers(2, 48),
+       M=st.integers(2, 8), R=st.integers(1, 3), S=st.integers(1, 3),
+       density=st.floats(0.0, 0.3), seed=st.integers(0, 2 ** 16))
+def test_staged_equals_fused_property(B, K, n, M, R, S, density, seed):
+    """Mode parity as a property: the fused in-kernel meters and the
+    staged per-shard oracle bill the same joules lane by lane (tight f32
+    tolerance), with exact argmax agreement on valid lanes."""
+    lit, sys_ = _grid(B, K, n, M, R, S, seed, density)
+    n_valid = 1 + seed % B
+    staged, valid = _step(sys_.compile(RuntimeSpec(
+        backend="xla", metering="staged", capacity=B)), lit, n_valid)
+    fused, _ = _step(sys_.compile(RuntimeSpec(
+        backend="xla", metering="fused", capacity=B)), lit, n_valid)
+    np.testing.assert_array_equal(np.asarray(staged.predictions),
+                                  np.asarray(fused.predictions))
+    np.testing.assert_allclose(np.asarray(fused.e_clause_lanes),
+                               np.asarray(staged.e_clause_lanes),
+                               rtol=1e-5, atol=1e-30)
+    np.testing.assert_allclose(np.asarray(fused.e_class_lanes),
+                               np.asarray(staged.e_class_lanes),
+                               rtol=1e-5, atol=1e-30)
+
+
+# --- EnergyReport empty-aggregate guards (regression) -----------------------
+
+def _empty_report(**kw):
+    base = dict(read_energy_j=0.0, clause_energy_j=0.0, class_energy_j=0.0,
+                program_energy_j=0.0, erase_energy_j=0.0, latency_s=0.0,
+                ops_crosspoint=0.0, datapoints=0)
+    base.update(kw)
+    return EnergyReport(**base)
+
+
+def test_empty_report_metrics_do_not_raise():
+    """gops and tops_per_w guard their denominators like
+    energy_per_datapoint_j always has — an empty aggregate reports 0.0
+    instead of ZeroDivisionError."""
+    empty = _empty_report()
+    assert empty.energy_per_datapoint_j == 0.0
+    assert empty.gops == 0.0
+    assert empty.tops_per_w == 0.0
+    # read_energy_j == 0 with real ops/latency: still no raise
+    idle = _empty_report(latency_s=1e-6, ops_crosspoint=1e6, datapoints=4)
+    assert idle.tops_per_w == 0.0
+    assert idle.gops > 0.0
+    # the area-less aggregate still refuses tops_per_mm2 loudly
+    with pytest.raises(ValueError, match="area"):
+        empty.tops_per_mm2
+
+
+def test_empty_lane_fold_and_aggregate_guards():
+    """Folding zero lanes (an all-idle sweep) and aggregating such
+    reports must stay finite end to end."""
+    rep = report_from_lane_energies(
+        np.zeros((0,)), np.zeros((0,)), program_energy_j=0.0,
+        erase_energy_j=0.0, latency_s=0.0, ops_per_datapoint=0.0,
+        datapoints=0)
+    assert rep.read_energy_j == 0.0
+    assert rep.gops == 0.0 and rep.tops_per_w == 0.0
+    agg = aggregate_reports([rep, rep])
+    assert agg.datapoints == 0
+    assert agg.gops == 0.0 and agg.tops_per_w == 0.0
+    assert agg.energy_per_datapoint_j == 0.0
+
+
+def test_report_with_valid_mask_sentinels_and_agrees_across_modes():
+    """infer_with_report under a validity mask: excluded lanes predict
+    the sentinel -1 in BOTH metering modes (their scores are
+    mode-dependent garbage — staged zeroes the drive, fused doesn't),
+    valid lanes agree exactly, and the meters bill only the real lanes."""
+    lit, sys_ = _grid(8, 48, 16, 4, 2, 2, seed=7, density=0.15)
+    valid = np.zeros((8,), bool)
+    valid[:5] = True
+    reports = {}
+    for metering in METERINGS:
+        res = sys_.compile(RuntimeSpec(backend="xla", metering=metering,
+                                       capacity=8)) \
+            .infer_with_report(lit, valid=valid)
+        preds = np.asarray(res.predictions)
+        assert (preds[5:] == -1).all(), preds
+        reports[metering] = (preds, res.report)
+    np.testing.assert_array_equal(reports["staged"][0], reports["fused"][0])
+    rs, rf = reports["staged"][1], reports["fused"][1]
+    assert rs.datapoints == rf.datapoints == 5
+    np.testing.assert_allclose(rf.read_energy_j, rs.read_energy_j,
+                               rtol=1e-5, atol=1e-30)
+
+
+def test_unprogrammed_grid_bills_leakage_only():
+    """density=0: no clause is programmed, nonempty masks every column —
+    class meters are exactly zero (no clause fires, no class row driven)
+    while clause meters only carry LCS leakage."""
+    lit, sys_ = _grid(6, 32, 12, 4, 2, 2, seed=3, density=0.0)
+    for metering in METERINGS:
+        session = sys_.compile(RuntimeSpec(backend="xla", metering=metering,
+                                           capacity=6))
+        res, valid = _step(session, lit, 6)
+        assert (np.asarray(res.e_class_lanes) == 0.0).all()
+        assert (np.asarray(res.e_clause_lanes) >= 0.0).all()

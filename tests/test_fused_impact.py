@@ -19,7 +19,7 @@ from repro.data.synthetic import prototype
 from repro.impact import IMPACTConfig, RuntimeSpec, build_system
 from repro.impact.pipeline import IMPACTSystem
 from repro.impact.yflash import I_CSA_THRESHOLD, read_current
-from repro.kernels import ops, ref
+from repro.kernels import backends, ops, ref
 
 # (B, K, n, M, R, tr, C, tc, S, sr) — mix of single-tile, R>1/S>1 shard
 # splits, ragged (non-multiple-of-block) shapes, and unequal clause-axis
@@ -100,6 +100,58 @@ def test_system_predict_parity(B, K, n, M, R, tr, C, tc, S, sr):
                    .predict(lit).predictions))
 
 
+@pytest.mark.parametrize("B,K,n,M,R,tr,C,tc,S,sr", SHARD_SHAPES)
+def test_fused_metered_matches_staged_and_oracle(B, K, n, M, R, tr, C, tc,
+                                                 S, sr):
+    """The tentpole parity contract: the in-kernel fused meters == the
+    staged per-shard meters == the einsum oracle, across the shard-layout
+    sweep.  Argmax is exact; currents are f32 sums whose association
+    order differs across the three lowerings (the fused kernel chunks
+    columns, the staged path chunks shards), so they get a tight rtol.
+    """
+    lit, sys_ = _make_system(B, K, n, M, R, tr, C, tc, S, sr, seed=6)
+    args = (lit, sys_.clause_i, sys_.nonempty, sys_.class_i)
+    want = ref.fused_impact_metered_ref(*args, thresh=I_CSA_THRESHOLD)
+    fused = ops.fused_impact(*args, thresh=I_CSA_THRESHOLD, meter=True)
+    # the staged meters: per-shard currents the pre-tentpole metered path
+    # materialized, summed per lane (now the oracle the kernel is pinned
+    # against)
+    bk = backends.get_backend("pallas")
+    fired, i_col = bk.impact_clause_bits(lit, sys_.clause_i, sys_.nonempty,
+                                         thresh=I_CSA_THRESHOLD)
+    s_scores, i_cls = bk.impact_class_scores(fired, sys_.class_i)
+    staged = (s_scores, i_col.sum(axis=(1, 2, 3)), i_cls.sum(axis=(1, 2)))
+
+    for got in (fused, staged):
+        np.testing.assert_array_equal(
+            np.asarray(jnp.argmax(got[0], -1)),
+            np.asarray(jnp.argmax(want[0], -1)))
+        np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                                   rtol=1e-6)
+        # clause meter reassociates up to R*tr*C*tc f32 terms
+        np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]),
+                                   rtol=1e-3)
+        np.testing.assert_allclose(np.asarray(got[2]), np.asarray(want[2]),
+                                   rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(fused[1]), np.asarray(staged[1]),
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(fused[2]), np.asarray(staged[2]),
+                               rtol=1e-5)
+
+
+def test_metered_backend_scores_identical_to_unmetered():
+    """The registered ``pallas-metered`` lowering is the SAME datapath
+    with meters riding along: plain fused_impact scores through it are
+    bit-identical to the unmetered kernel."""
+    lit, sys_ = _make_system(16, 100, 50, 10, 2, 64, 1, 64, 2, 32, seed=8)
+    args = (lit, sys_.clause_i, sys_.nonempty, sys_.class_i)
+    np.testing.assert_array_equal(
+        np.asarray(ops.fused_impact(*args, thresh=I_CSA_THRESHOLD,
+                                    impl="pallas-metered")),
+        np.asarray(ops.fused_impact(*args, thresh=I_CSA_THRESHOLD,
+                                    impl="pallas")))
+
+
 def test_all_empty_clause_columns():
     """A tile with NO programmed clause must fire nothing and score zero
     (every column current is pure LCS leakage, masked by nonempty)."""
@@ -176,7 +228,7 @@ def test_golden_analog_matches_digital(golden_trained, backend):
 
 
 def test_infer_with_report_consistent_across_backends(golden_trained):
-    """Energy metering rides the staged path; both backends must report
+    """Energy metering (staged oracle mode): both backends must report
     the same physics (same currents => same joules) and the same preds."""
     cfg, params, lits = golden_trained
     system = build_system(params, cfg, jax.random.key(2),
@@ -193,3 +245,30 @@ def test_infer_with_report_consistent_across_backends(golden_trained):
                                rtol=1e-5)
     np.testing.assert_allclose(rep_p.clause_energy_j, rep_x.clause_energy_j,
                                rtol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["pallas", "xla"])
+def test_fused_metering_report_matches_staged(golden_trained, backend):
+    """metering='fused' on a TRAINED system: the single-pass in-kernel
+    report carries the same joules / preds / accounting as the staged
+    oracle session (the Table 4 anchors ride on this equality)."""
+    cfg, params, lits = golden_trained
+    system = build_system(params, cfg, jax.random.key(2),
+                          IMPACTConfig(variability=False, finetune=True))
+    staged = system.compile(RuntimeSpec(backend=backend,
+                                        metering="staged")) \
+        .infer_with_report(lits[:64])
+    fused = system.compile(RuntimeSpec(backend=backend,
+                                       metering="fused")) \
+        .infer_with_report(lits[:64])
+    np.testing.assert_array_equal(np.asarray(fused.predictions),
+                                  np.asarray(staged.predictions))
+    rs, rf = staged.report, fused.report
+    assert rf.read_energy_j > 0
+    np.testing.assert_allclose(rf.clause_energy_j, rs.clause_energy_j,
+                               rtol=1e-4)
+    np.testing.assert_allclose(rf.class_energy_j, rs.class_energy_j,
+                               rtol=1e-4)
+    assert rf.datapoints == rs.datapoints
+    assert rf.latency_s == rs.latency_s
+    assert rf.ops_crosspoint == rs.ops_crosspoint

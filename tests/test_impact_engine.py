@@ -193,6 +193,35 @@ def test_flush_warmup_removes_cold_batches(small_system):
     assert warm_eng.stats()["cold_batches"] == 0
 
 
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_engine_bills_from_fused_meters(small_system, backend):
+    """The serving acceptance: an engine on a metering='fused' session
+    bills every request from the in-kernel meters — same predictions and
+    (to f32 tolerance) the same per-request joules as the staged-oracle
+    engine, with per-request bills still summing exactly to the batch
+    meter."""
+    system, lits = small_system
+    eng_st = IMPACTEngine(system.compile(
+        RuntimeSpec(backend=backend, metering="staged", capacity=8)))
+    eng_fu = IMPACTEngine(system.compile(
+        RuntimeSpec(backend=backend, metering="fused", capacity=8)))
+    assert eng_fu.meter_energy
+    p_st, s_st = eng_st.run(lits)
+    p_fu, s_fu = eng_fu.run(lits)
+    np.testing.assert_array_equal(p_fu, p_st)
+    bills_st = {r.rid: r.e_read_j for r in eng_st.request_records}
+    bills_fu = {r.rid: r.e_read_j for r in eng_fu.request_records}
+    assert all(b > 0 for b in bills_fu.values())
+    np.testing.assert_allclose(
+        [bills_fu[r] for r in sorted(bills_fu)],
+        [bills_st[r] for r in sorted(bills_st)], rtol=1e-5)
+    # f64 lane-sum == batch meter, on the fused path too
+    np.testing.assert_allclose(sum(bills_fu.values()),
+                               s_fu["energy"].read_energy_j, rtol=1e-9)
+    np.testing.assert_allclose(s_fu["energy"].read_energy_j,
+                               s_st["energy"].read_energy_j, rtol=1e-5)
+
+
 def test_aggregate_reports_requires_nonempty():
     with pytest.raises(AssertionError):
         aggregate_reports([])

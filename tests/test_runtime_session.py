@@ -37,9 +37,13 @@ def small_system():
 # -- backend registry --------------------------------------------------------
 
 def test_registry_contents_and_errors():
-    assert {"pallas", "xla"} <= set(backends.available_backends())
+    assert {"pallas", "xla", "pallas-metered"} \
+        <= set(backends.available_backends())
     assert backends.get_backend("xla").reference
     assert not backends.get_backend("pallas").reference
+    assert not backends.get_backend("pallas-metered").reference
+    assert isinstance(backends.get_backend("pallas-metered"),
+                      backends.PallasBackend)
     with pytest.raises(ValueError, match="unknown backend"):
         backends.get_backend("mythical")
     with pytest.raises(ValueError, match="already registered"):
@@ -90,7 +94,10 @@ def test_interpret_resolver_policy():
 
 def test_spec_validation():
     with pytest.raises(ValueError, match="metering"):
-        RuntimeSpec(metering="fused")
+        RuntimeSpec(metering="always")
+    # every declared metering mode is a valid spec
+    for mode in ("off", "staged", "fused"):
+        assert RuntimeSpec(metering=mode).metering == mode
     with pytest.raises(ValueError, match="precision"):
         RuntimeSpec(precision="bf16")
     with pytest.raises(ValueError, match="capacity"):
