@@ -31,6 +31,13 @@ free; a collapse of that ratio is a regression even when every absolute
 number moved).  The fused/staged ratio is printed for the record — on
 CPU interpret mode it gauges dispatch plumbing, not TPU speed.
 
+The ``predicted_vs_measured`` section (always produced) is the
+calibrated analytic cost model's self-check: every session executable's
+predicted sweep time must land within the recorded band of its measured
+warm-sweep time, and the raw executable-cost ordering invariants
+(metered >= unmetered) must hold — a flip means the lowering lost the
+in-kernel meter.
+
 When the current run carries a ``sharded`` section (multi-device hosts:
 the CI multi-device leg runs the benchmark under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``), the gate also
@@ -135,7 +142,65 @@ def check_metered(current: dict, min_fused_ratio: float = 0.25) -> list[str]:
     return failures
 
 
+def check_cost_model(current: dict) -> list[str]:
+    """Gate the calibrated cost model's predicted-vs-measured section:
+    the section is mandatory (the benchmark always produces it), every
+    entry's predicted/measured ratio must sit inside the recorded band,
+    and the raw-cost ordering invariants carrying a ``must_be_at_least``
+    floor hard-fail on a flip (a metered kernel whose executable costs
+    *less* than the unmetered one has lost its meter — a sign error no
+    throughput floor can see)."""
+    pvm = current.get("predicted_vs_measured")
+    if not pvm:
+        return ["predicted_vs_measured section missing from "
+                "BENCH_throughput.json (benchmarks.impact_throughput "
+                "must always produce it)"]
+    failures = []
+    lo, hi = pvm.get("band", (0.0, float("inf")))
+    for key, e in sorted(pvm.get("entries", {}).items()):
+        ratio = e["ratio_pred_over_meas"]
+        ok = lo <= ratio <= hi
+        ref = " (calibration ref)" if e.get("calibration_ref") else ""
+        print(f"  costmodel {key:28s} pred/meas {ratio:7.3f}  "
+              f"band [{lo:.2f}, {hi:.2f}]  "
+              f"{'ok' if ok else 'FAIL'}{ref}")
+        if not ok:
+            failures.append(
+                f"cost model {key}: predicted/measured ratio {ratio:.3f} "
+                f"outside band [{lo}, {hi}]")
+    if not pvm.get("entries"):
+        failures.append("predicted_vs_measured has no entries")
+    for key, o in sorted(pvm.get("orderings", {}).items()):
+        ratio = o["raw_cost_ratio"]
+        floor = o.get("must_be_at_least")
+        if floor is None:
+            print(f"  costmodel {key:28s} raw-cost ratio {ratio:7.3f}  "
+                  f"(for the record)")
+            continue
+        ok = ratio >= floor
+        print(f"  costmodel {key:28s} raw-cost ratio {ratio:7.3f}  "
+              f"floor {floor:.2f}  {'ok' if ok else 'FAIL'}")
+        if not ok:
+            failures.append(
+                f"cost model {key}: raw executable cost ratio {ratio:.3f} "
+                f"< {floor} — the metered kernel prices below the "
+                f"unmetered one (meter lost in lowering?)")
+    return failures
+
+
 def check_serve(serve: dict) -> list[str]:
+    # A run where a scheduler completed nothing has no percentiles at
+    # all — that is a gate failure to report, not a KeyError to crash
+    # on (zero-completed BENCH_serve.json files happen when the Poisson
+    # trace sheds everything, e.g. a mis-set queue_capacity).
+    missing = [mode for mode in ("continuous", "flush")
+               if "p95_s" not in serve.get(mode, {})]
+    if missing:
+        return [
+            f"serve: no p95_s for {mode} (completed="
+            f"{serve.get(mode, {}).get('completed', 0)}, offered="
+            f"{serve.get('n_requests', '?')}) — scheduler completed "
+            f"no requests" for mode in missing]
     p95_c = serve["continuous"]["p95_s"]
     p95_f = serve["flush"]["p95_s"]
     shed = serve["continuous"].get("shed", 0)
@@ -172,6 +237,7 @@ def main(argv: list[str] | None = None) -> int:
           f"(max regression {args.max_regression:.0%})")
     failures = check_throughput(current, baseline, args.max_regression)
     failures += check_metered(current)
+    failures += check_cost_model(current)
     failures += check_sharded(current)
     if args.serve:
         with open(args.serve) as f:

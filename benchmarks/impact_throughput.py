@@ -65,6 +65,7 @@ from .common import ARTIFACTS, emit
 
 from repro.core import CoTMConfig
 from repro.impact import (IMPACTConfig, RuntimeSpec, Topology, build_system)
+from repro.impact.costmodel import bench_section
 from repro.serve import IMPACTEngine, poisson_arrivals, replay_trace
 
 BATCH_SIZES = (32, 128, 512)
@@ -261,9 +262,13 @@ def sharded_sweep(cfg, params, *, quick: bool) -> dict | None:
 
 def serve_comparison(system, cfg, *, n_requests: int, rate_rps: float,
                      capacity: int, flush_wait_s: float, seed: int,
-                     impl: str = "xla") -> dict:
+                     impl: str = "xla",
+                     trace_dir: pathlib.Path | None = None) -> dict:
     """Replay one seeded Poisson trace through both scheduler modes (one
-    shared compiled session — the schedulers, not the runtime, differ)."""
+    shared compiled session — the schedulers, not the runtime, differ).
+    With ``trace_dir``, each mode's run also lands a Chrome-tracing
+    timeline (``SERVE_<mode>.trace.json``, loadable in Perfetto) as a CI
+    artifact."""
     rng = np.random.default_rng(seed)
     lits = rng.random((n_requests, cfg.n_literals)) < 0.5
     arrivals = poisson_arrivals(n_requests, rate_rps, seed=seed)
@@ -278,7 +283,10 @@ def serve_comparison(system, cfg, *, n_requests: int, rate_rps: float,
                            max_wait_s=flush_wait_s))
     for mode, eng in engines.items():
         eng.warmup()
-        out[mode] = replay_trace(eng, lits, arrivals)
+        trace_path = (str(trace_dir / f"SERVE_{mode}.trace.json")
+                      if trace_dir is not None else None)
+        out[mode] = replay_trace(eng, lits, arrivals,
+                                 trace_path=trace_path)
         emit(f"impact_serve/{mode}", out[mode]["p95_s"] * 1e6,
              f"{out[mode]['samples_per_s']:.1f}")
     out["p95_ratio_flush_over_continuous"] = (
@@ -297,6 +305,12 @@ def main(quick: bool = False, json_dir: pathlib.Path | None = None) -> None:
 
     bench = throughput_sweep(system, cfg, quick=quick)
     bench["metered"] = metered_sweep(system, cfg, quick=quick)
+    # Calibrated analytic cost model over the sessions the sweeps just
+    # timed (compile cache hit — no re-lowering): predicted-vs-measured
+    # ratios check_perf.py gates per backend and metering mode.
+    bench["predicted_vs_measured"] = bench_section(
+        system, bench,
+        batch_sizes=QUICK_BATCH_SIZES if quick else BATCH_SIZES)
     sharded = sharded_sweep(cfg, params, quick=quick)
     if sharded is not None:            # multi-device hosts only
         bench["sharded"] = sharded
@@ -307,7 +321,7 @@ def main(quick: bool = False, json_dir: pathlib.Path | None = None) -> None:
         system, cfg,
         n_requests=80 if quick else 256,
         rate_rps=300.0, capacity=16 if quick else 32,
-        flush_wait_s=0.05, seed=0)
+        flush_wait_s=0.05, seed=0, trace_dir=json_dir)
     with open(json_dir / "BENCH_serve.json", "w") as f:
         json.dump(serve, f, indent=2, sort_keys=True)
 

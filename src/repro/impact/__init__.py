@@ -1,3 +1,4 @@
+from .costmodel import CostEstimate, SweepCostModel
 from .energy import EnergyReport
 from .pipeline import IMPACTConfig, IMPACTSystem, build_system
 from .runtime import (InferenceResult, InferenceSession, RuntimeSpec,
@@ -8,6 +9,7 @@ from .yflash import (DeviceVariation, G_HCS_BOOL, G_LCS, I_CSA_THRESHOLD,
                      erase_pulse, program_pulse, pulse_until, read_current)
 
 __all__ = [
+    "CostEstimate", "SweepCostModel",
     "EnergyReport", "IMPACTConfig", "IMPACTSystem", "build_system",
     "InferenceResult", "InferenceSession", "RuntimeSpec",
     "SpecDeprecationWarning", "Topology",

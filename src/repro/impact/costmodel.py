@@ -1,0 +1,201 @@
+"""Calibrated analytic sweep-cost model: predicted vs measured sweep time.
+
+The byteprofile approach (HLO cost analysis paired with measured step
+time) applied to the compiled-session runtime: every
+``InferenceSession`` entry point is an AOT executable, so XLA's
+``cost_analysis`` gives exact per-executable flops / bytes-accessed for
+the *thing that actually serves* — no re-derivation from model dims.
+An analytic host-time proxy built from those counters is **calibrated
+once per session** (one measured warm-sweep wall time at a reference
+batch) and then *predicts* every other batch shape; the
+predicted/measured ratio is a CI assertion (``check_perf.py`` gates the
+``predicted_vs_measured`` section of ``BENCH_throughput.json``), so a
+p99 regression whose aggregate throughput still passes shows up as a
+cost-model miss on the shape that regressed.
+
+Two kinds of prediction live here, deliberately separate:
+
+* **Host sweep time** (``predicted_s``): the calibrated linear model
+  over ``flops + bytes_accessed``.  Calibration absorbs the
+  machine-speed factor the same way the normalized throughput gate
+  does, so the gated ratio tests *scaling fidelity* (does cost grow
+  with batch the way the executable's counters say it should), not
+  absolute speed.
+* **Analog crossbar time** (``analog_latency_s``): the Fig. 14 cycle
+  model (``energy.inference_latency`` through the system's (R, C)
+  grid) — the floor the hardware twin imposes per sweep, independent
+  of batch.  On CPU interpret mode the host term dominates by orders
+  of magnitude; on a real accelerator the two converge, and
+  ``predicted_s`` is their max.
+
+The *uncalibrated* raw costs also carry an ordering invariant the gate
+hard-fails on: the fused-metered kernel does strictly more work than
+the unmetered fused kernel (a second VMEM meter accumulator), so
+``raw(metered) >= raw(unmetered)`` must hold per batch.  A flip means
+the cost model (or the lowering) lost the meter — exactly the
+regression class aggregate samples/s cannot see.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+#: Generous predicted/measured acceptance band.  Calibration pins the
+#: reference shape to ratio 1.0; other shapes drift with allocator /
+#: threading nonlinearity the linear proxy ignores — the band only has
+#: to catch order-of-magnitude breaks (a shape silently falling off its
+#: compiled executable, a meter pass running twice, ...).
+DEFAULT_BAND = (0.2, 5.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class CostEstimate:
+    """One executable's analytic cost + (optionally) its prediction."""
+    entry: str
+    batch: int
+    flops: float
+    bytes_accessed: float
+    analog_latency_s: float
+
+    @property
+    def raw(self) -> float:
+        """Uncalibrated host-cost proxy.  flops and bytes are summed at
+        unit weight: on the CPU/interpret backends this benchmark runs
+        on there is no measured flop:byte rate to split them, and the
+        calibration factor absorbs the common scale anyway.  Guaranteed
+        positive so calibration can divide by it."""
+        return max(self.flops + self.bytes_accessed, 1.0)
+
+
+class SweepCostModel:
+    """Analytic cost model for ONE session entry point.
+
+    ``estimate`` reads the executable's counters; ``calibrate`` fixes
+    the seconds-per-raw-cost coefficient from a single measured warm
+    sweep; ``predict_s`` prices any batch.  One instance per
+    ``(session, entry)`` — different sessions (backend / metering mode)
+    lower to different executables and calibrate independently.
+    """
+
+    def __init__(self, session, entry: str = "infer_step"):
+        self.session = session
+        self.entry = entry
+        self._scale: float | None = None       # seconds per raw-cost unit
+        self._ref: tuple[int, float] | None = None
+
+    def estimate(self, batch: int) -> CostEstimate:
+        ca = self.session.cost_analysis(self.entry, batch)
+        return CostEstimate(
+            entry=self.entry, batch=batch,
+            flops=ca["flops"], bytes_accessed=ca["bytes_accessed"],
+            analog_latency_s=self.session.system._grid_latency())
+
+    def calibrate(self, batch: int, measured_s: float) -> None:
+        """Fix the host coefficient: ``measured_s`` is one warm-sweep
+        wall time of ``batch`` (compile excluded)."""
+        if measured_s <= 0.0:
+            raise ValueError(f"measured_s must be positive, "
+                             f"got {measured_s}")
+        self._scale = measured_s / self.estimate(batch).raw
+        self._ref = (batch, measured_s)
+
+    @property
+    def calibration(self) -> dict[str, Any]:
+        if self._scale is None:
+            raise RuntimeError("cost model is not calibrated — call "
+                               "calibrate(batch, measured_s) first")
+        return dict(ref_batch=self._ref[0], ref_measured_s=self._ref[1],
+                    seconds_per_unit=self._scale)
+
+    def predict_s(self, batch: int) -> float:
+        """Predicted sweep wall time: the calibrated host term, floored
+        by the Fig. 14 analog crossbar latency."""
+        if self._scale is None:
+            raise RuntimeError("cost model is not calibrated — call "
+                               "calibrate(batch, measured_s) first")
+        est = self.estimate(batch)
+        return max(est.raw * self._scale, est.analog_latency_s)
+
+
+def _entry_record(model: SweepCostModel, batch: int, measured_s: float,
+                  *, is_ref: bool) -> dict[str, Any]:
+    est = model.estimate(batch)
+    pred = model.predict_s(batch)
+    return dict(
+        flops=est.flops, bytes_accessed=est.bytes_accessed,
+        analog_latency_s=est.analog_latency_s,
+        predicted_s=pred, measured_s=measured_s,
+        ratio_pred_over_meas=pred / measured_s,
+        calibration_ref=is_ref)
+
+
+def bench_section(system, bench: dict, *, batch_sizes,
+                  band: tuple[float, float] = DEFAULT_BAND) -> dict:
+    """Build the ``predicted_vs_measured`` section of
+    ``BENCH_throughput.json`` from an already-measured bench payload.
+
+    Reuses the sweep's own timings (``us_per_batch``) as the measured
+    side and the sweep's own sessions (``system.compile`` caches per
+    spec, so no recompilation happens here) as the predicted side:
+
+    * ``predict/<backend>`` — one model per backend family of the
+      throughput sweep, calibrated at the smallest batch;
+    * ``infer_step/pallas-<mode>`` — one model per metering mode of the
+      metered sweep (off / fused / staged lower to different
+      executables), calibrated likewise;
+    * ``orderings`` — the calibration-free raw-cost invariants, one per
+      batch: metered-fused must cost at least unmetered-fused.
+
+    ``check_perf.check_cost_model`` gates every entry's ratio against
+    ``band`` and hard-fails any ordering below 1.0.
+    """
+    from .runtime import RuntimeSpec
+
+    batch_sizes = list(batch_sizes)
+    b_ref = batch_sizes[0]
+    entries: dict[str, dict] = {}
+    calibrations: dict[str, dict] = {}
+
+    def run_family(family: str, spec: RuntimeSpec, entry: str,
+                   measured_key) -> SweepCostModel:
+        model = SweepCostModel(system.compile(spec), entry=entry)
+        model.calibrate(b_ref, measured_key(b_ref))
+        calibrations[family] = model.calibration
+        for B in batch_sizes:
+            entries[f"{family}_b{B}"] = _entry_record(
+                model, B, measured_key(B), is_ref=B == b_ref)
+        return model
+
+    results = bench["results"]
+    for impl in ("xla", "pallas"):
+        run_family(
+            f"predict/{impl}",
+            RuntimeSpec(backend=impl, metering="off"), "predict",
+            lambda B, impl=impl:
+                results[f"{impl}_b{B}"]["us_per_batch"] / 1e6)
+
+    metered = bench.get("metered", {}).get("results", {})
+    models: dict[str, SweepCostModel] = {}
+    for mode in ("off", "fused", "staged"):
+        models[mode] = run_family(
+            f"infer_step/pallas-{mode}",
+            RuntimeSpec(backend="pallas", metering=mode), "infer_step",
+            lambda B, mode=mode:
+                metered[f"metered_{mode}_b{B}"]["us_per_batch"] / 1e6)
+
+    # Calibration-free ordering invariants on the raw executable cost:
+    # the in-kernel meter adds work, it can never remove it.
+    orderings = {}
+    for B in batch_sizes:
+        raw_off = models["off"].estimate(B).raw
+        orderings[f"metered_fused_over_off_b{B}"] = dict(
+            raw_cost_ratio=models["fused"].estimate(B).raw / raw_off,
+            must_be_at_least=1.0)
+        # staged materializes every intermediate the fused kernel keeps
+        # in VMEM; recorded for the record, not gated (a cleverer staged
+        # lowering is allowed to get cheaper).
+        orderings[f"staged_over_off_b{B}"] = dict(
+            raw_cost_ratio=models["staged"].estimate(B).raw / raw_off)
+
+    return dict(band=list(band), calibration=calibrations,
+                entries=entries, orderings=orderings)

@@ -77,6 +77,10 @@ class EnergyReport:
                 "tops_per_mm2 needs the crossbar area: this EnergyReport "
                 "was built without area_mm2 (use IMPACTSystem reports, or "
                 "set area_mm2 from IMPACTSystem.area_mm2())")
+        # Empty aggregates (0 latency) report 0.0 instead of raising,
+        # same convention as the gops / tops_per_w guards above.
+        if self.latency_s <= 0.0:
+            return 0.0
         ops_per_dp = self.ops_crosspoint / max(self.datapoints, 1)
         return (2 * ops_per_dp / self.latency_s) / 1e12 / self.area_mm2
 

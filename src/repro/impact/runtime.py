@@ -222,6 +222,23 @@ class InferenceSession:
         only — nothing is executed, unlike the old warmup sweeps)."""
         self._exe(entry, batch)
 
+    def cost_analysis(self, entry: str, batch: int) -> dict[str, float]:
+        """XLA's cost analysis of the ``(entry, batch)`` executable,
+        normalized to ``{"flops", "bytes_accessed"}`` floats (missing
+        counters report 0.0 — some lowerings omit them).  Compiles the
+        executable on demand like every other session access; feeding
+        the analytic cost model (``impact.costmodel``) this way means
+        predictions always price the exact executable that serves."""
+        exe = self._exe(entry, batch)
+        ca = exe.cost_analysis()
+        # jax has returned both a bare dict and a one-element list of
+        # dicts across versions; normalize either.
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0] if ca else {}
+        ca = ca or {}
+        return dict(flops=float(ca.get("flops", 0.0)),
+                    bytes_accessed=float(ca.get("bytes accessed", 0.0)))
+
     # -- entry points -------------------------------------------------------
     def predict(self, literals) -> InferenceResult:
         """Fast path: fused crossbar->CSA->class-sum scores + argmax."""

@@ -1,12 +1,14 @@
 """Serving: prefill/decode engine, request batching + continuous-batching
-slot table, IMPACT crossbar inference."""
+slot table, IMPACT crossbar inference, Chrome-tracing observability."""
 from .engine import (Backpressure, BatchingQueue, Engine, Request,
                      ServeConfig, SlotTable, latency_percentiles)
 from .impact_engine import (BatchStats, IMPACTEngine, RequestRecord,
                             aggregate_reports, poisson_arrivals,
                             replay_trace)
+from .tracing import REQUEST_PHASES, Tracer, validate_events
 
 __all__ = ["Engine", "ServeConfig", "BatchingQueue", "Request",
            "SlotTable", "Backpressure", "latency_percentiles",
            "IMPACTEngine", "BatchStats", "RequestRecord",
-           "aggregate_reports", "poisson_arrivals", "replay_trace"]
+           "aggregate_reports", "poisson_arrivals", "replay_trace",
+           "Tracer", "validate_events", "REQUEST_PHASES"]

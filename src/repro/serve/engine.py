@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .tracing import PID_REQUESTS, Tracer
+
 Array = jax.Array
 
 
@@ -151,10 +153,19 @@ def _scatter_cache(cache, cache_axes, new_cache, src_rows, dst_rows):
 
 
 class Engine:
-    def __init__(self, model, params, cfg: ServeConfig):
+    """LM serving engine.  ``trace`` (a ``serve.tracing.Tracer``)
+    records the decode timeline as Chrome-tracing spans: ``prefill`` /
+    ``decode`` regions on the scheduler track and one ``request`` span
+    (arrival -> completion, slot id as an arg) per request in
+    ``serve_continuous`` — the same span vocabulary as the IMPACT
+    crossbar engine, so both fronts open in the same viewer."""
+
+    def __init__(self, model, params, cfg: ServeConfig, *,
+                 trace: Tracer | None = None):
         self.model = model
         self.params = params
         self.cfg = cfg
+        self.trace = trace
         self._prefill = jax.jit(
             lambda p, toks, pos: model.prefill(p, toks, pos, cfg.max_len))
         self._decode = jax.jit(
@@ -178,6 +189,9 @@ class Engine:
         logits, cache = self._prefill(self.params, prompts, pos)
         jax.block_until_ready(logits)
         t_prefill = time.time() - t0
+        if self.trace is not None:
+            self.trace.span("prefill", t0, t0 + t_prefill,
+                            args=dict(batch=B, seq=S))
 
         key = jax.random.PRNGKey(seed)
         tok = self._sample(logits, key)
@@ -191,6 +205,9 @@ class Engine:
             out.append(tok)
         jax.block_until_ready(tok)
         t_decode = time.time() - t0
+        if self.trace is not None:
+            self.trace.span("decode", t0, t0 + t_decode,
+                            args=dict(batch=B, n_tokens=n_tokens))
         gen = jnp.concatenate(out, axis=1)
         stats = dict(
             prefill_s=t_prefill, decode_s=t_decode,
@@ -241,13 +258,19 @@ class Engine:
 
         def finish(slot: int, req: Request) -> None:
             table.release(slot)
-            lat[req.rid] = time.time() - req.arrived
+            done = time.time()
+            lat[req.rid] = done - req.arrived
+            if self.trace is not None:
+                self.trace.span("request", req.arrived, done, tid=req.rid,
+                                pid=PID_REQUESTS,
+                                args=dict(rid=req.rid, slot=slot))
 
         while pending or table.occupancy:
             free = table.free_slots()
             if pending and free:
                 k = min(len(free), len(pending))
                 reqs = [pending.popleft() for _ in range(k)]
+                t_adm = time.time()
                 # Full-capacity prefill batch (rows >= k repeat the last
                 # newcomer so the prefill jit sees exactly one shape);
                 # only rows < k are scattered into lanes.
@@ -259,6 +282,10 @@ class Engine:
                     self.params, jnp.asarray(ptoks), jnp.asarray(ppos))
                 first = np.asarray(self._sample(logits, sub))
                 slots = [table.admit(r) for r in reqs]
+                if self.trace is not None:
+                    self.trace.span("prefill", t_adm, time.time(),
+                                    args=dict(admitted=k, slots=slots,
+                                              occupancy=table.occupancy))
                 base = cache if cache is not None else new_cache
                 cache = _scatter_cache(base, axes, new_cache,
                                        np.arange(k), np.asarray(slots))
@@ -270,12 +297,17 @@ class Engine:
                     if n_gen[s] >= r.max_new or self._is_eos(first[i]):
                         finish(s, r)
             if table.occupancy:
+                t_dec = time.time()
                 key, sub = jax.random.split(key)
                 logits, cache = self._decode(
                     self.params, cache, jnp.asarray(tok),
                     jnp.asarray(pos)[:, None])
                 nxt = np.asarray(self._sample(logits, sub))
                 steps += 1
+                if self.trace is not None:
+                    self.trace.span("decode_step", t_dec, time.time(),
+                                    args=dict(step=steps,
+                                              occupancy=table.occupancy))
                 for s, r in list(table.occupied()):
                     out[r.rid].append(nxt[s])
                     tok[s] = nxt[s]

@@ -79,6 +79,7 @@ from ..impact.runtime import (InferenceSession, SpecDeprecationWarning,
                               legacy_spec)
 from .engine import (Backpressure, BatchingQueue, Request, SlotTable,
                      latency_percentiles)
+from .tracing import Tracer
 
 Array = jax.Array
 
@@ -169,6 +170,15 @@ class IMPACTEngine:
     Kwargs are validated per mode — ``buckets`` in continuous mode and
     ``target_occupancy`` in flush mode are rejected instead of silently
     ignored.
+
+    ``trace`` (a ``serve.tracing.Tracer``) records the scheduler
+    timeline as Chrome-tracing spans: per-step ``admission`` / ``sweep``
+    / ``release`` / ``billing`` regions on the scheduler track (lane ids
+    and occupancy as span args) and the ``queued`` -> ``admitted`` ->
+    ``sweep`` -> ``billed`` lifecycle on one track per request, cut from
+    the same clock readings the ``RequestRecord`` ledger stores.  The
+    tracer is re-clocked onto the engine's clock so an injected virtual
+    clock traces deterministically.
     """
 
     def __init__(self, runtime: "InferenceSession | IMPACTSystem", *,
@@ -178,6 +188,7 @@ class IMPACTEngine:
                  target_occupancy: float = 0.0,
                  queue_capacity: int | None = None,
                  clock: Callable[[], float] = time.time,
+                 trace: Tracer | None = None,
                  impl: str | None = None, mesh=None,
                  meter_energy: bool | None = None):
         if mode not in ("continuous", "flush"):
@@ -244,6 +255,11 @@ class IMPACTEngine:
         self.target_occupancy = target_occupancy
         self.queue_capacity = queue_capacity
         self.clock = clock
+        # One time source: span timestamps must be comparable with the
+        # RequestRecord ledger, so the tracer rides the engine's clock.
+        if trace is not None:
+            trace.clock = clock
+        self.trace = trace
         if mode == "flush":
             # Buckets above max_batch are unreachable (a flush never
             # exceeds max_batch and max_batch itself is always a bucket)
@@ -281,10 +297,19 @@ class IMPACTEngine:
     # -- request plumbing ---------------------------------------------------
     def submit(self, literals: np.ndarray) -> int:
         """Enqueue one (K,) literal vector; returns the request id.  Raises
-        ``Backpressure`` when every slot is occupied and the admission
-        queue is at ``queue_capacity``."""
+        ``ValueError`` on a mis-shaped request (the persistent slot-table
+        buffer is compiled at (capacity, K) — admitting a wrong shape
+        would corrupt it; a rejected submit leaves queue and table
+        untouched) and ``Backpressure`` when every slot is occupied and
+        the admission queue is at ``queue_capacity``."""
         lits = np.asarray(literals)
-        assert lits.shape == (self.system.n_literals,), lits.shape
+        # NOT an assert: shape validation guards the persistent lane
+        # buffer and must survive ``python -O``.
+        if lits.shape != (self.system.n_literals,):
+            raise ValueError(
+                f"literals shape {lits.shape} does not match this "
+                f"engine's compiled request shape "
+                f"({self.system.n_literals},)")
         # The engine can absorb (free slots + queue_capacity) requests
         # before the next sweep; beyond that, shed load at the edge.
         if (self.queue_capacity is not None
@@ -336,7 +361,12 @@ class IMPACTEngine:
         """Fire one crossbar sweep and do all per-step accounting."""
         cold = shape not in self._warm
         self._warm.add(shape)
+        occupancy = len(lanes) / shape
         t0 = self.clock()
+        if self.trace is not None:
+            self.trace.begin("sweep", ts=t0, args=dict(
+                shape=shape, n_valid=len(lanes), occupancy=occupancy,
+                cold=cold, lanes=[i for i, _ in lanes]))
         res = self.session.infer_step(lits, valid)
         preds = np.asarray(jax.block_until_ready(res.predictions))
         # float64 before the per-request clause+class add so the request
@@ -345,6 +375,10 @@ class IMPACTEngine:
         e_cs = np.asarray(res.e_class_lanes, np.float64)
         t1 = self.clock()
         dt = t1 - t0
+        if self.trace is not None:
+            self.trace.end("sweep", ts=t1)
+            self.trace.begin("billing", ts=t1,
+                             args=dict(n_requests=len(lanes)))
         recs = [RequestRecord(
             rid=lane.req.rid, arrived=lane.req.arrived,
             admitted=lane.admitted, completed=t1, pred=int(preds[i]),
@@ -354,24 +388,45 @@ class IMPACTEngine:
         self.batch_stats.append(BatchStats(
             bucket=shape, n_valid=len(recs), latency_s=dt,
             samples_per_s=len(recs) / max(dt, 1e-9), cold=cold,
-            occupancy=len(recs) / shape,
+            occupancy=occupancy,
             p50_s=pct.get("p50_s", 0.0), p95_s=pct.get("p95_s", 0.0),
             p99_s=pct.get("p99_s", 0.0)))
         if self.meter_energy:
             self.reports.append(self.system.step_report(e_cl, e_cs,
                                                         len(recs)))
+        if self.trace is not None:
+            t2 = self.clock()
+            self.trace.end("billing", ts=t2)
+            # Per-request lifecycle spans, emitted only now that every
+            # timestamp is known — a written trace always balances.
+            for (i, _), r in zip(lanes, recs):
+                self.trace.request_spans(
+                    rid=r.rid, arrived=r.arrived, admitted=r.admitted,
+                    sweep_start=t0, sweep_end=t1, billed=t2, lane=i,
+                    shape=shape, args=dict(e_read_j=r.e_read_j,
+                                           pred=r.pred))
         return [(r.rid, r.pred) for r in recs]
 
     def _step_continuous(self, force: bool) -> list[tuple[int, int]]:
         now = self.clock()
         # Admission: refill free lanes from the queue FIFO.
+        admitted = []
         for req in self.queue.take_n(self.table.free):
             s = self.table.admit(_Lane(req, now))
             self._lane_lits[s] = req.tokens
+            admitted.append(s)
+        if admitted and self.trace is not None:
+            self.trace.span("admission", now, self.clock(), args=dict(
+                lanes=admitted, occupancy=self.table.occupancy))
         occ = self.table.occupancy
         if occ == 0:
             return []
-        oldest = min(lane.req.arrived for _, lane in self.table.occupied())
+        # Staleness on ADMITTED time, matching the documented policy
+        # ("the oldest admitted request has waited max_wait_s"): queue
+        # wait is already bounded by backpressure, and counting it here
+        # made bursty arrivals fire premature partial sweeps the instant
+        # a long-queued request finally won a lane.
+        oldest = min(lane.admitted for _, lane in self.table.occupied())
         # target_occupancy <= 1, so a full table always satisfies the
         # occupancy clause; staleness fires partial sweeps.
         if not (force
@@ -383,20 +438,30 @@ class IMPACTEngine:
                             self.table.valid_mask(), self.capacity, lanes)
         # One sweep classifies every valid lane: release and reset them so
         # the next step admits into clean (all-1, currentless) lanes.
+        t_rel = self.clock()
         for i, _ in lanes:
             self.table.release(i)
             self._lane_lits[i] = 1
+        if self.trace is not None:
+            self.trace.span("release", t_rel, self.clock(), args=dict(
+                lanes=[i for i, _ in lanes],
+                occupancy=self.table.occupancy))
         return out
 
     def _step_flush(self, force: bool) -> list[tuple[int, int]]:
         if not (self.queue.ready() or (force and self.queue.pending)):
             return []
+        t_take = self.clock()
         batch = self.queue.take()
         bucket = self.bucket_for(len(batch))
         lits, valid = self.pad_to_bucket(batch, bucket,
                                          self.system.n_literals)
         now = self.clock()
         lanes = [(i, _Lane(r, now)) for i, r in enumerate(batch)]
+        if self.trace is not None:
+            self.trace.span("admission", t_take, now, args=dict(
+                lanes=list(range(len(batch))), bucket=bucket,
+                occupancy=len(batch) / bucket))
         return self._execute(lits, valid, bucket, lanes)
 
     def step(self, *, force: bool = False) -> list[tuple[int, int]]:
@@ -472,7 +537,8 @@ def poisson_arrivals(n: int, rate_rps: float, seed: int = 0) -> np.ndarray:
     return np.cumsum(rng.exponential(1.0 / rate_rps, size=n))
 
 def replay_trace(engine: IMPACTEngine, literals: np.ndarray,
-                 arrivals: np.ndarray) -> dict:
+                 arrivals: np.ndarray, *,
+                 trace_path: str | None = None) -> dict:
     """Replay an arrival trace through an engine in wall-clock time:
     request ``i`` is submitted once ``arrivals[i]`` seconds have elapsed,
     the scheduler steps continuously, and per-request end-to-end latency
@@ -480,9 +546,19 @@ def replay_trace(engine: IMPACTEngine, literals: np.ndarray,
     scheduler modes, so continuous vs. flush-to-completion is an equal-
     traffic A/B.  The engine must be on a wall clock (replay paces itself
     with real ``time.sleep``); a frozen injected clock raises instead of
-    hanging.  Returns tail-latency percentiles + throughput."""
+    hanging.  Returns tail-latency percentiles + throughput.
+
+    ``trace_path`` writes the run's Chrome-tracing timeline (loadable in
+    ``chrome://tracing`` / Perfetto) on exit: the engine's attached
+    ``Tracer`` if it has one, else a fresh tracer attached for this
+    replay.  Shed requests appear as ``shed`` instant events on the
+    scheduler track."""
     n = len(arrivals)
     assert literals.shape[0] >= n
+    tracer = engine.trace
+    if trace_path is not None and tracer is None:
+        tracer = Tracer(clock=engine.clock)
+        engine.trace = tracer
     q0 = len(engine.request_records)
     shed = 0
     i = 0
@@ -493,6 +569,8 @@ def replay_trace(engine: IMPACTEngine, literals: np.ndarray,
         while i < n and arrivals[i] <= now:
             if engine.try_submit(literals[i]) is None:
                 shed += 1              # load shed at the backpressure edge
+                if tracer is not None:
+                    tracer.instant("shed", args=dict(offered_index=i))
             i += 1
         out = engine.step(force=i >= n)
         ndone += len(out)
@@ -517,4 +595,7 @@ def replay_trace(engine: IMPACTEngine, literals: np.ndarray,
                completed=len(recs), wall_s=wall,
                samples_per_s=len(recs) / max(wall, 1e-9))
     out.update(latency_percentiles([r.latency_s for r in recs]))
+    if trace_path is not None:
+        tracer.write(trace_path)
+        out["trace_path"] = str(trace_path)
     return out

@@ -1,0 +1,145 @@
+"""The CI perf gate's edge cases — stdlib-only, like the gate itself.
+
+check_perf.py is loaded by file path (``benchmarks`` is a script
+directory, not a package on PYTHONPATH), and every check is exercised on
+minimal synthetic payloads: the gate must *fail*, never crash, on
+degenerate runs (zero completed requests, missing sections, ordering
+flips)."""
+import importlib.util
+import pathlib
+
+import pytest
+
+_PATH = (pathlib.Path(__file__).resolve().parent.parent
+         / "benchmarks" / "check_perf.py")
+_spec = importlib.util.spec_from_file_location("check_perf", _PATH)
+check_perf = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_perf)
+
+
+# -- check_serve -------------------------------------------------------------
+
+def _serve(p95_c=0.01, p95_f=0.05, shed=0):
+    return dict(n_requests=80,
+                continuous=dict(p95_s=p95_c, shed=shed, completed=80),
+                flush=dict(p95_s=p95_f, completed=80),
+                p95_ratio_flush_over_continuous=p95_f / p95_c)
+
+
+def test_check_serve_happy_path():
+    assert check_perf.check_serve(_serve()) == []
+
+
+def test_check_serve_flags_inverted_p95_and_shed():
+    fails = check_perf.check_serve(_serve(p95_c=0.06, shed=3))
+    assert len(fails) == 2
+    assert any("not below" in f for f in fails)
+    assert any("shed 3" in f for f in fails)
+
+
+def test_check_serve_zero_completed_is_gate_failure_not_crash():
+    """Regression: a BENCH_serve.json from a run that completed nothing
+    has no p95_s at all — the gate used to crash with KeyError instead
+    of failing."""
+    empty = dict(n_requests=80,
+                 continuous=dict(completed=0, shed=80),
+                 flush=dict(completed=0, shed=80))
+    fails = check_perf.check_serve(empty)
+    assert len(fails) == 2                      # one per scheduler mode
+    for f in fails:
+        assert "no p95_s" in f and "completed=0" in f
+    # One-sided degenerate runs fail on the empty side only.
+    one = _serve()
+    one["flush"] = dict(completed=0)
+    (fail,) = check_perf.check_serve(one)
+    assert "flush" in fail
+
+
+# -- check_metered -----------------------------------------------------------
+
+def _metered(ratio=0.9, parity=True):
+    return dict(metered=dict(
+        parity_ok=parity,
+        ratio_fused_metered_over_unmetered={"b8": ratio, "b32": ratio},
+        ratio_fused_metered_over_staged={"b8": 1.5}))
+
+
+def test_check_metered_section_is_mandatory():
+    (fail,) = check_perf.check_metered({})
+    assert "missing" in fail
+
+
+def test_check_metered_parity_and_ratio_floor():
+    assert check_perf.check_metered(_metered()) == []
+    fails = check_perf.check_metered(_metered(ratio=0.1, parity=False))
+    assert len(fails) == 3                      # 2 batch floors + parity
+    assert any("parity_ok" in f for f in fails)
+    assert sum("fell to" in f for f in fails) == 2
+
+
+# -- check_cost_model --------------------------------------------------------
+
+def _pvm(ratio=1.2, ordering=1.01):
+    return dict(predicted_vs_measured=dict(
+        band=[0.2, 5.0],
+        calibration={},
+        entries={"predict/xla_b8": dict(
+            ratio_pred_over_meas=ratio, calibration_ref=True)},
+        orderings={
+            "metered_fused_over_off_b8": dict(
+                raw_cost_ratio=ordering, must_be_at_least=1.0),
+            "staged_over_off_b8": dict(raw_cost_ratio=0.3)}))
+
+
+def test_check_cost_model_section_is_mandatory():
+    (fail,) = check_perf.check_cost_model({})
+    assert "missing" in fail
+
+
+def test_check_cost_model_happy_path():
+    assert check_perf.check_cost_model(_pvm()) == []
+
+
+def test_check_cost_model_band_violations():
+    (lo,) = check_perf.check_cost_model(_pvm(ratio=0.05))
+    assert "outside band" in lo
+    (hi,) = check_perf.check_cost_model(_pvm(ratio=50.0))
+    assert "outside band" in hi
+    # Band edges are inclusive.
+    assert check_perf.check_cost_model(_pvm(ratio=0.2)) == []
+    assert check_perf.check_cost_model(_pvm(ratio=5.0)) == []
+
+
+def test_check_cost_model_hard_fails_ordering_flip():
+    """A metered executable pricing below the unmetered one is a sign
+    flip (the lowering lost the meter) — hard failure regardless of how
+    good every ratio looks."""
+    (fail,) = check_perf.check_cost_model(_pvm(ordering=0.97))
+    assert "meter" in fail
+    # The un-floored staged record never fails, however low.
+    assert check_perf.check_cost_model(_pvm()) == []
+
+
+def test_check_cost_model_empty_entries_fail():
+    pvm = _pvm()
+    pvm["predicted_vs_measured"]["entries"] = {}
+    fails = check_perf.check_cost_model(pvm)
+    assert any("no entries" in f for f in fails)
+
+
+# -- check_throughput --------------------------------------------------------
+
+def test_check_throughput_floor_and_missing_keys(capsys):
+    base = dict(normalized={"xla_b8": 1.0, "xla_b32": 2.0},
+                machine=dict(cpu_count=8))
+    cur_ok = dict(normalized={"xla_b8": 1.0, "xla_b32": 1.9},
+                  machine=dict(cpu_count=8))
+    assert check_perf.check_throughput(cur_ok, base, 0.30) == []
+    cur_bad = dict(normalized={"xla_b8": 1.0},
+                   machine=dict(cpu_count=4))
+    fails = check_perf.check_throughput(cur_bad, base, 0.30)
+    assert any("missing" in f for f in fails)
+    assert "WARNING" in capsys.readouterr().out   # cpu-count mismatch
+    fails = check_perf.check_throughput(
+        dict(normalized={"xla_b8": 1.0, "xla_b32": 1.0}), base, 0.30)
+    assert any("floor" in f for f in fails)

@@ -1,0 +1,125 @@
+"""Calibrated sweep-cost model: executable cost analysis is real, the
+calibration contract holds, and the metered-vs-unmetered raw-cost
+ordering the perf gate hard-fails on is true of the actual lowerings."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CoTMConfig
+from repro.core.cotm import CoTMParams
+from repro.impact import (IMPACTConfig, RuntimeSpec, SweepCostModel,
+                          build_system)
+from repro.impact.costmodel import bench_section
+
+
+@pytest.fixture(scope="module")
+def small_system():
+    K, n, m, n_states = 64, 32, 4, 64
+    cfg = CoTMConfig(n_literals=K, n_clauses=n, n_classes=m,
+                     n_states=n_states)
+    rng = np.random.default_rng(0)
+    ta = np.where(rng.random((K, n)) < 0.1, n_states + 1, n_states)
+    w = rng.integers(-20, 20, (m, n))
+    params = CoTMParams(ta_state=jnp.asarray(ta, jnp.int32),
+                        weights=jnp.asarray(w, jnp.int32))
+    return build_system(params, cfg, jax.random.key(0),
+                        IMPACTConfig(variability=False, finetune=False))
+
+
+def test_session_cost_analysis_is_populated(small_system):
+    """Every (backend, metering) executable reports nonzero flops and
+    bytes — the model prices real XLA counters, not fallbacks."""
+    for backend in ("xla", "pallas"):
+        for metering in ("off", "fused", "staged"):
+            sess = small_system.compile(
+                RuntimeSpec(backend=backend, metering=metering))
+            ca = sess.cost_analysis("predict", 8)
+            assert ca["flops"] > 0, (backend, metering)
+            assert ca["bytes_accessed"] > 0, (backend, metering)
+
+
+def test_estimate_raw_monotone_in_batch(small_system):
+    """More lanes can never cost less: raw executable cost is
+    nondecreasing in batch for every backend."""
+    for backend in ("xla", "pallas"):
+        m = SweepCostModel(small_system.compile(
+            RuntimeSpec(backend=backend, metering="off")), entry="predict")
+        raws = [m.estimate(B).raw for B in (4, 8, 16, 32)]
+        assert all(a <= b for a, b in zip(raws, raws[1:])), (backend, raws)
+        assert m.estimate(4).analog_latency_s > 0
+
+
+def test_calibration_contract(small_system):
+    """The reference shape predicts its own measurement exactly; an
+    uncalibrated model refuses to predict; bad measurements are
+    rejected."""
+    m = SweepCostModel(small_system.compile(
+        RuntimeSpec(backend="pallas", metering="fused")))
+    with pytest.raises(RuntimeError, match="not calibrated"):
+        m.predict_s(8)
+    with pytest.raises(ValueError, match="positive"):
+        m.calibrate(8, 0.0)
+    m.calibrate(8, 2e-3)
+    assert m.predict_s(8) == pytest.approx(2e-3)
+    assert m.calibration["ref_batch"] == 8
+    # Scaling follows the raw-cost ratio (possibly floored by the analog
+    # latency, which at these host timescales never binds).
+    want = 2e-3 * m.estimate(32).raw / m.estimate(8).raw
+    assert m.predict_s(32) == pytest.approx(want)
+
+
+def test_analog_floor_binds_when_host_term_vanishes(small_system):
+    """With a vanishing measured host time, the prediction floors at the
+    Fig. 14 crossbar latency instead of promising impossible speed."""
+    m = SweepCostModel(small_system.compile(
+        RuntimeSpec(backend="xla", metering="off")), entry="predict")
+    m.calibrate(8, 1e-15)
+    assert m.predict_s(8) == pytest.approx(
+        m.estimate(8).analog_latency_s)
+
+
+def test_metered_fused_costs_at_least_unmetered(small_system):
+    """The ordering invariant check_perf hard-fails on: the fused-metered
+    executable (meter accumulators ride the kernel) can never price
+    below the unmetered fused kernel."""
+    off = SweepCostModel(small_system.compile(
+        RuntimeSpec(backend="pallas", metering="off")))
+    fused = SweepCostModel(small_system.compile(
+        RuntimeSpec(backend="pallas", metering="fused")))
+    for B in (8, 32):
+        assert fused.estimate(B).raw >= off.estimate(B).raw, B
+
+
+def test_bench_section_shape_and_gateability(small_system):
+    """bench_section produces exactly what check_perf.check_cost_model
+    gates: a band, per-entry ratios with a ratio==1 calibration ref per
+    family, and floored ordering records."""
+    bs = (8, 32)
+    results = {f"{impl}_b{B}": dict(us_per_batch=50.0 + B,
+                                    samples_per_s=1.0)
+               for impl in ("xla", "pallas") for B in bs}
+    metered = {f"metered_{mode}_b{B}": dict(us_per_batch=60.0 + B,
+                                            samples_per_s=1.0)
+               for mode in ("off", "fused", "staged") for B in bs}
+    sec = bench_section(small_system,
+                        dict(results=results,
+                             metered=dict(results=metered)),
+                        batch_sizes=bs)
+    lo, hi = sec["band"]
+    assert 0.0 < lo < 1.0 < hi
+    families = {"predict/xla", "predict/pallas", "infer_step/pallas-off",
+                "infer_step/pallas-fused", "infer_step/pallas-staged"}
+    assert set(sec["calibration"]) == families
+    assert set(sec["entries"]) == {f"{f}_b{B}" for f in families
+                                   for B in bs}
+    for fam in families:
+        ref = sec["entries"][f"{fam}_b{bs[0]}"]
+        assert ref["calibration_ref"] is True
+        assert ref["ratio_pred_over_meas"] == pytest.approx(1.0)
+        assert ref["predicted_s"] > 0 and ref["flops"] > 0
+    for B in bs:
+        o = sec["orderings"][f"metered_fused_over_off_b{B}"]
+        assert o["raw_cost_ratio"] >= o["must_be_at_least"] == 1.0
+        assert "must_be_at_least" not in \
+            sec["orderings"][f"staged_over_off_b{B}"]

@@ -126,6 +126,25 @@ def test_per_mode_kwarg_validation(small_system):
         IMPACTEngine(system.compile(spec()))   # no serving shape compiled
 
 
+def test_submit_rejects_misshaped_request(small_system):
+    """A mis-shaped request raises ValueError — a real exception, not a
+    bare assert (``python -O`` strips asserts, and a wrong-shape row
+    admitted into the persistent (capacity, K) lane buffer corrupts
+    co-resident lanes).  A rejected submit must leave the engine
+    untouched: no queue entry, no slot, no burned request id."""
+    system, lits = small_system
+    eng = IMPACTEngine(system.compile(spec(capacity=8)))
+    for bad in (lits[:2],              # batched: (2, K)
+                lits[0][: 32],         # truncated: (K/2,)
+                lits[0][None, :]):     # leading axis: (1, K)
+        with pytest.raises(ValueError, match="shape"):
+            eng.submit(bad)
+    assert eng.queue.pending == []
+    assert eng.table.occupancy == 0
+    assert eng.request_records == []
+    assert eng.submit(lits[0]) == 0    # first accepted request is rid 0
+
+
 def test_flush_on_full_and_stale(small_system):
     system, lits = small_system
     eng = IMPACTEngine(system.compile(spec(capacity=4)), mode="flush",

@@ -146,3 +146,19 @@ def test_tops_per_mm2_table4_anchor():
                        ops_crosspoint=ops_dp, datapoints=1, area_mm2=area)
     assert rep.tops_per_mm2 == pytest.approx(2 * ops_dp / lat / 1e12 / area)
     assert 0.2 < rep.tops_per_mm2 < 0.3, rep.tops_per_mm2
+
+
+def test_tops_per_mm2_empty_aggregate_reports_zero():
+    """An empty aggregate (0 latency, 0 datapoints) reports 0.0 under the
+    same convention as the gops / tops_per_w guards — not
+    ZeroDivisionError (regression: the latency_s division was the one
+    unguarded denominator in EnergyReport).  The area-less refusal still
+    wins over the empty-aggregate shortcut."""
+    empty = EnergyReport(read_energy_j=0.0, clause_energy_j=0.0,
+                         class_energy_j=0.0, program_energy_j=0.0,
+                         erase_energy_j=0.0, latency_s=0.0,
+                         ops_crosspoint=0.0, datapoints=0, area_mm2=1.0)
+    assert empty.tops_per_mm2 == 0.0
+    assert empty.gops == 0.0 and empty.tops_per_w == 0.0   # same convention
+    with pytest.raises(ValueError, match="area"):
+        dataclasses.replace(empty, area_mm2=None).tops_per_mm2

@@ -221,6 +221,31 @@ def test_injected_clock_drives_staleness_and_latency(small_system):
                                   # then held in-flight by the policy
 
 
+def test_staleness_clock_starts_at_admission_not_arrival(small_system):
+    """The staleness window is measured from ADMISSION, as the policy
+    documents — not from arrival.  A request that sat queued behind a
+    full table must not fire a premature partial sweep the moment it
+    finally wins a lane (queue wait is backpressure's job); the window
+    restarts when the lane is granted."""
+    system, lits = small_system
+    t = [100.0]
+    eng = IMPACTEngine(system.compile(spec(meter=False, capacity=2)),
+                       max_wait_s=0.5, target_occupancy=1.0,
+                       clock=lambda: t[0])
+    for i in range(3):
+        eng.submit(lits[i])
+    assert len(eng.step()) == 2       # full table fires; 3rd still queued
+    t[0] = 100.9                      # 3rd has now *arrived* 0.9s ago
+    assert eng.step() == []           # admitted at 100.9: fresh, holds
+    assert eng.table.occupancy == 1
+    t[0] = 101.5                      # 0.6s since ADMISSION: stale
+    out = eng.step()
+    assert len(out) == 1
+    rec = eng.request_records[-1]
+    assert rec.arrived == 100.0 and rec.admitted == 100.9
+    assert rec.queue_s == pytest.approx(0.9)
+
+
 def test_max_wait_fires_stale_partial_sweep(small_system):
     system, lits = small_system
     eng = IMPACTEngine(system.compile(spec(meter=False, capacity=4)),
