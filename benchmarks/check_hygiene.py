@@ -1,0 +1,70 @@
+"""CI hygiene gate: fail when generated artifacts are tracked in git.
+
+Usage:
+    python benchmarks/check_hygiene.py
+
+Three classes of generated files must never be committed:
+
+* compiled Python bytecode (``*.pyc`` / ``__pycache__`` directories);
+* benchmark outputs under ``artifacts/`` (``BENCH_*.json`` land there on
+  every run — the COMMITTED copies live in ``benchmarks/baselines/``,
+  which this gate deliberately does not match);
+* Chrome-tracing timelines (``*.trace.json`` anywhere — serve runs emit
+  them next to the bench JSON and they are upload-artifact material, not
+  repo material).
+
+Violations print one ``::error file=...`` annotation per path so the CI
+run summary links straight to the offending file.
+
+Stdlib-only on purpose — runs in the hygiene job before (and regardless
+of) any jax install.
+"""
+from __future__ import annotations
+
+import re
+import subprocess
+import sys
+
+#: (label, pattern) pairs; a path matching ANY pattern is a violation.
+RULES: tuple[tuple[str, re.Pattern], ...] = (
+    ("compiled Python bytecode",
+     re.compile(r"(^|/)__pycache__(/|$)|\.pyc$")),
+    ("benchmark artifact JSON",
+     re.compile(r"^artifacts/.*\.json$")),
+    ("Chrome-tracing timeline",
+     re.compile(r"\.trace\.json$")),
+)
+
+
+def find_violations(paths: list[str]) -> list[tuple[str, str]]:
+    """Return ``(path, label)`` for every path matching a hygiene rule."""
+    bad = []
+    for p in paths:
+        for label, rx in RULES:
+            if rx.search(p):
+                bad.append((p, label))
+                break
+    return bad
+
+
+def tracked_files() -> list[str]:
+    """Every path git tracks, from the repo the cwd sits in."""
+    res = subprocess.run(["git", "ls-files"], check=True,
+                         capture_output=True, text=True)
+    return [line for line in res.stdout.splitlines() if line]
+
+
+def main() -> int:
+    paths = tracked_files()
+    bad = find_violations(paths)
+    if bad:
+        for path, label in bad:
+            print(f"::error file={path}::{label} is tracked in git: {path}")
+        print(f"hygiene gate FAILED: {len(bad)} tracked artifact(s)")
+        return 1
+    print(f"hygiene gate passed ({len(paths)} tracked files clean)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -31,6 +31,12 @@ free; a collapse of that ratio is a regression even when every absolute
 number moved).  The fused/staged ratio is printed for the record — on
 CPU interpret mode it gauges dispatch plumbing, not TPU speed.
 
+The ``compressed`` section (always produced) gates the bit-packed
+datapath: packed-backend argmax parity against both the int8 fused
+kernel and the einsum oracle, per-batch int8/packed byte-traffic ratios
+(XLA ``bytes_accessed`` AND the exact operand ``input_bytes``) at a
+>= 4x floor, and a non-degenerate clause-pruning record.
+
 The ``predicted_vs_measured`` section (always produced) is the
 calibrated analytic cost model's self-check: every session executable's
 predicted sweep time must land within the recorded band of its measured
@@ -142,6 +148,60 @@ def check_metered(current: dict, min_fused_ratio: float = 0.25) -> list[str]:
     return failures
 
 
+def check_compressed(current: dict, min_bytes_ratio: float = 4.0) -> list[str]:
+    """Gate the compressed-datapath sweep: the section is mandatory (the
+    benchmark always produces it), the packed backend must have agreed
+    on argmax with both the int8 fused kernel and the einsum oracle
+    (``parity_ok``), and BOTH byte-traffic ratios must clear the 4x
+    floor per batch — XLA ``bytes_accessed`` (what the compiled sweep
+    touches) and the exact operand footprint ``input_bytes``.  They fail
+    differently: a packing pass that dequantizes outside the kernel
+    keeps operands small but restores the full in-kernel traffic; an
+    operand-layout regression does the reverse.  The pruning record must
+    carry a positive effective-clause count and packed-backend parity on
+    its calibration batch."""
+    comp = current.get("compressed")
+    if not comp:
+        return ["compressed sweep missing from BENCH_throughput.json "
+                "(benchmarks.impact_throughput must always produce it)"]
+    failures = []
+    for b, c in sorted(comp.get("cost_analysis", {}).items(),
+                       key=lambda kv: int(kv[0].lstrip("b"))):
+        for metric in ("ratio_bytes_accessed", "ratio_input_bytes"):
+            ratio = c.get(metric)
+            ok = ratio is not None and ratio >= min_bytes_ratio
+            shown = "missing" if ratio is None else f"{ratio:7.3f}"
+            print(f"  compressed {b:6s} int8/packed {metric:21s} {shown}  "
+                  f"floor {min_bytes_ratio:.2f}  {'ok' if ok else 'FAIL'}")
+            if not ok:
+                failures.append(
+                    f"compressed {b}: {metric} {shown} below the "
+                    f"{min_bytes_ratio}x floor — the packed clause "
+                    f"operand is not shrinking sweep traffic")
+    if not comp.get("cost_analysis"):
+        failures.append("compressed sweep has no cost_analysis record")
+    if not comp.get("parity_ok"):
+        failures.append(
+            "compressed sweep: packed-backend argmax diverged from the "
+            "int8 kernel or the einsum oracle (parity_ok is false)")
+    pr = comp.get("pruning", {})
+    print(f"  compressed pruning: {pr.get('n_effective', '?')}/"
+          f"{pr.get('n_clauses', '?')} clauses effective "
+          f"({pr.get('n_never_fired', '?')} never fired, "
+          f"{pr.get('n_duplicates', '?')} duplicates), "
+          f"{pr.get('energy_per_effective_clause_j', 0.0):.3e} J per "
+          f"effective clause per datapoint")
+    if pr.get("n_effective", 0) <= 0:
+        failures.append(
+            "compressed pruning: no effective clauses survived the "
+            "calibration batch (degenerate pruning record)")
+    if not pr.get("packed_parity_on_calibration"):
+        failures.append(
+            "compressed pruning: pruned-system packed predictions "
+            "diverged from the einsum oracle on the calibration batch")
+    return failures
+
+
 def check_cost_model(current: dict) -> list[str]:
     """Gate the calibrated cost model's predicted-vs-measured section:
     the section is mandatory (the benchmark always produces it), every
@@ -237,6 +297,7 @@ def main(argv: list[str] | None = None) -> int:
           f"(max regression {args.max_regression:.0%})")
     failures = check_throughput(current, baseline, args.max_regression)
     failures += check_metered(current)
+    failures += check_compressed(current)
     failures += check_cost_model(current)
     failures += check_sharded(current)
     if args.serve:

@@ -35,7 +35,19 @@ Four measurements:
    requires the section, its parity flag, and a sane fused-metered /
    unmetered ratio.
 
-4. **Sharded sweep** (multi-device hosts only) — the same predict path
+4. **Compressed sweep** — the bit-packed datapath: ``predict`` through
+   the ``pallas-packed`` backend (``packing="2bit"`` — 2-bit ternary
+   clause codes, four cells per byte, dequantized inside the fused
+   kernel) vs the int8-literal/f32-operand fused kernel, with argmax
+   parity against the einsum oracle asserted.  The per-batch
+   ``cost_analysis`` record carries both XLA ``bytes_accessed`` and the
+   exact operand footprint (``session.input_bytes``); ``check_perf.py``
+   gates both ratios at >= 4x.  A clause-pruning record
+   (``train.compression.prune_clauses`` on a calibration batch) lands
+   alongside with the re-anchored energy-per-effective-clause figure.
+   Lands under the ``"compressed"`` key of ``BENCH_throughput.json``.
+
+5. **Sharded sweep** (multi-device hosts only) — the same predict path
    from a (data, model=2) mesh via a ``RuntimeSpec`` topology on an
    R=2/S=2 split grid vs the identical split grid on one device, with
    argmax parity asserted; lands under the ``"sharded"`` key of
@@ -46,12 +58,14 @@ Four measurements:
 
 CSV rows:  impact_throughput/<impl>_b<B>, us_per_batch, samples_per_s
            impact_metered/<mode>_b<B>, us_per_batch, samples_per_s
+           impact_compressed/<int8|packed>_b<B>, us_per_batch, s/s
            impact_sharded/<single|sharded>_xla_b<B>, us_per_batch, s/s
            impact_serve/<mode>, p95_us, samples_per_s
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import pathlib
@@ -65,7 +79,8 @@ from .common import ARTIFACTS, emit
 
 from repro.core import CoTMConfig
 from repro.impact import (IMPACTConfig, RuntimeSpec, Topology, build_system)
-from repro.impact.costmodel import bench_section
+from repro.impact.costmodel import bench_section, bytes_per_sweep
+from repro.train.compression import prune_clauses
 from repro.serve import IMPACTEngine, poisson_arrivals, replay_trace
 
 BATCH_SIZES = (32, 128, 512)
@@ -206,6 +221,66 @@ def metered_sweep(system, cfg, *, quick: bool) -> dict:
             for B in batch_sizes})
 
 
+def compressed_sweep(system, cfg, *, quick: bool) -> dict:
+    """The compressed-datapath acceptance sample: ``pallas-packed``
+    (2-bit ternary clause codes, four cells per byte, in-kernel dequant)
+    vs the int8-literal fused kernel, argmax-parity-checked against the
+    einsum oracle, with the per-batch byte-traffic record
+    (``costmodel.bytes_per_sweep``) ``check_perf.py`` gates at >= 4x.
+
+    The pruning record runs ``prune_clauses`` against a calibration
+    batch drawn at 95% ones-density: at the benchmark's 5% include
+    density a clause carries ~78 include literals, so uniform 50/50
+    literals fire nothing (P ~ 2^-78) while 95%-ones rows fire each
+    clause with P ~ 0.018/row — a realistic mix of firing and dead
+    columns instead of an all-dead or all-alive degenerate record.
+    """
+    rng = np.random.default_rng(0)
+    batch_sizes = QUICK_BATCH_SIZES if quick else BATCH_SIZES
+    sessions = dict(
+        int8=system.compile(RuntimeSpec(backend="pallas", metering="off")),
+        packed=system.compile(RuntimeSpec(
+            backend="pallas-packed", metering="off", packing="2bit")),
+        oracle=system.compile(RuntimeSpec(backend="xla", metering="off")))
+    results: dict[str, dict] = {}
+    cost: dict[str, dict] = {}
+    parity_ok = True
+    for B in batch_sizes:
+        lits = jnp.asarray(rng.random((B, cfg.n_literals)) < 0.5)
+        preds = {kind: np.asarray(s.predict(lits).predictions)
+                 for kind, s in sessions.items()}
+        parity_ok &= bool((preds["packed"] == preds["int8"]).all())
+        parity_ok &= bool((preds["packed"] == preds["oracle"]).all())
+        for kind in ("int8", "packed"):
+            dt = _time_predict(sessions[kind], lits)
+            key = f"{kind}_b{B}"
+            results[key] = dict(us_per_batch=dt * 1e6,
+                                samples_per_s=B / dt)
+            emit(f"impact_compressed/{key}", dt * 1e6, f"{B / dt:.1f}")
+        c8 = bytes_per_sweep(sessions["int8"], "predict", B)
+        cp = bytes_per_sweep(sessions["packed"], "predict", B)
+        cost[f"b{B}"] = dict(
+            int8=c8, packed=cp,
+            ratio_bytes_accessed=(c8["bytes_accessed"]
+                                  / max(cp["bytes_accessed"], 1.0)),
+            ratio_input_bytes=(c8["input_bytes"]
+                               / max(cp["input_bytes"], 1.0)))
+
+    calib = jnp.asarray(rng.random((64, cfg.n_literals)) < 0.95)
+    pruned, stats = prune_clauses(system, calib)
+    sess_pruned = pruned.compile(RuntimeSpec(
+        backend="pallas-packed", metering="off", packing="2bit"))
+    sess_oracle = pruned.compile(RuntimeSpec(backend="xla", metering="off"))
+    prune_parity = bool(
+        (np.asarray(sess_pruned.predict(calib).predictions)
+         == np.asarray(sess_oracle.predict(calib).predictions)).all())
+    return dict(
+        quick=quick, parity_ok=parity_ok, results=results,
+        cost_analysis=cost,
+        pruning=dict(dataclasses.asdict(stats),
+                     packed_parity_on_calibration=prune_parity))
+
+
 def sharded_sweep(cfg, params, *, quick: bool) -> dict | None:
     """Sharded-vs-single-device ``predict`` at a Fig. 14 split layout.
 
@@ -305,6 +380,7 @@ def main(quick: bool = False, json_dir: pathlib.Path | None = None) -> None:
 
     bench = throughput_sweep(system, cfg, quick=quick)
     bench["metered"] = metered_sweep(system, cfg, quick=quick)
+    bench["compressed"] = compressed_sweep(system, cfg, quick=quick)
     # Calibrated analytic cost model over the sessions the sweeps just
     # timed (compile cache hit — no re-lowering): predicted-vs-measured
     # ratios check_perf.py gates per backend and metering mode.

@@ -117,6 +117,30 @@ class SweepCostModel:
         return max(est.raw * self._scale, est.analog_latency_s)
 
 
+def bytes_per_sweep(session, entry: str, batch: int) -> dict[str, float]:
+    """Per-sweep traffic counters for ONE session executable, the record
+    the ``compressed`` bench section ratios int8-vs-packed on:
+
+    * ``bytes_accessed`` / ``flops`` — XLA ``cost_analysis`` of the AOT
+      executable: every byte the compiled program touches, including
+      intermediates (what the compiler says the sweep costs);
+    * ``input_bytes`` — the exact operand-array footprint
+      (``session.input_bytes``): literals + the baked crossbar operands.
+      Layout-level and deterministic — a packed clause operand shrinks
+      this by construction, independent of how a given XLA version
+      prices the kernel body.
+
+    Both are recorded (and gated) because they fail differently: a
+    packing regression that silently dequantizes outside the kernel
+    keeps ``input_bytes`` small but blows up ``bytes_accessed``; an
+    operand-layout regression does the reverse.
+    """
+    ca = session.cost_analysis(entry, batch)
+    return dict(flops=float(ca["flops"]),
+                bytes_accessed=float(ca["bytes_accessed"]),
+                input_bytes=float(session.input_bytes(entry, batch)))
+
+
 def _entry_record(model: SweepCostModel, batch: int, measured_s: float,
                   *, is_ref: bool) -> dict[str, Any]:
     est = model.estimate(batch)

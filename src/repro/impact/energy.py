@@ -133,6 +133,22 @@ def tile_area_mm2(rows: int, cols: int) -> float:
     return rows * cols * AREA_PER_DEVICE_UM2 * 1e-6
 
 
+def energy_per_effective_clause(read_energy_j: float, datapoints: int,
+                                n_effective: int) -> float:
+    """Re-anchored Table 4 figure after clause pruning.
+
+    The paper divides read energy by the PROGRAMMED clause count; once a
+    pruning pass (``train.compression.prune_clauses``) erases never-
+    firing and duplicate columns, the honest per-clause denominator is
+    the count of columns still drawing current.  Degenerate inputs
+    (nothing survived, empty calibration batch) report 0.0 rather than
+    raising — the benchmark records them as-is.
+    """
+    if n_effective <= 0 or datapoints <= 0:
+        return 0.0
+    return read_energy_j / float(datapoints) / float(n_effective)
+
+
 def inference_latency(n_clause_cols: int, n_class_cols: int,
                       clause_tiles_parallel: int = 1) -> float:
     """Fig. 14 timing model.  ``n_clause_cols`` counts ALL clause columns

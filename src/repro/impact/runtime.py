@@ -42,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import backends
+from ..kernels import packing as packing_mod
 from ..sharding import crossbar as crossbar_sh
 from . import energy as energy_mod
 from .energy import EnergyReport
@@ -51,6 +52,12 @@ Array = jax.Array
 
 METERING_MODES = ("off", "staged", "fused")
 PRECISIONS = ("float32",)
+#: Clause-crossbar operand layouts: ``"none"`` streams f32 per-cell
+#: currents, ``"2bit"`` packs the ternary cells into the
+#: ``kernels.packing`` bitplane layout at session build (compile time)
+#: — the executable's dominant operand shrinks ~16x and unpacking fuses
+#: into the kernel on the packed backends.
+PACKINGS = ("none", "2bit")
 
 #: Canonical input dtypes of every session executable.  Callers may pass
 #: bool / int / float {0,1} literals; the session casts ONCE before the
@@ -104,6 +111,7 @@ class RuntimeSpec:
     ``interpret``       ``interpret=`` (None = auto off-TPU)
     ``capacity``        the serving slot-table shape (``max_batch``)
     ``batch_sizes``     extra predict shapes to AOT-compile eagerly
+    ``packing``         (new) clause-operand layout, see ``PACKINGS``
     ==================  =============================================
 
     ``metering="fused"`` accumulates the read-energy meters INSIDE the
@@ -118,11 +126,20 @@ class RuntimeSpec:
     the per-lane meters are psummed exactly once).  ``precision`` is
     validated for forward compatibility (the analog model is float32 end
     to end today).
+
+    ``packing="2bit"`` compiles the COMPRESSED datapath: the session
+    quantizes the clause crossbar to the 2-bit bitplane layout once at
+    build time, the executables take the packed codes + dequant levels
+    as operands (~16x smaller than the f32 currents), and the packed
+    backends unpack inside the kernel.  Argmax parity with the unpacked
+    path holds on every backend and shard plan (the CSA decision bits
+    survive quantization); ``"none"`` (default) is the f32 datapath.
     """
     backend: str = "pallas"
     topology: Topology = Topology()
     metering: str = "staged"
     precision: str = "float32"
+    packing: str = "none"
     interpret: bool | None = None
     capacity: int | None = None
     batch_sizes: tuple[int, ...] = ()
@@ -134,6 +151,9 @@ class RuntimeSpec:
         if self.precision not in PRECISIONS:
             raise ValueError(f"precision must be one of {PRECISIONS}, "
                              f"got {self.precision!r}")
+        if self.packing not in PACKINGS:
+            raise ValueError(f"packing must be one of {PACKINGS}, "
+                             f"got {self.packing!r}")
         if self.capacity is not None and self.capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {self.capacity}")
         object.__setattr__(self, "batch_sizes",
@@ -184,6 +204,13 @@ class InferenceSession:
                 f"topology demands shard={top.shard!r} but neither the "
                 f"spec nor the system provides a mesh")
         self._nonempty = system._nonempty_eff()
+        # Compile-time packing: the quantized clause operand is built
+        # ONCE here (concrete arrays), so every executable of this
+        # session takes the 2-bit codes + levels instead of the f32
+        # currents — the compressed layout is a property of the session,
+        # not of any call.
+        self._packed = (packing_mod.pack_clause_operand(system.clause_i)
+                        if spec.packing == "2bit" else None)
         self._exes: dict[tuple[str, int], Any] = {}
         self._traces: collections.Counter = collections.Counter()
         # Programming-time compilation: the serving sweep and any
@@ -299,9 +326,27 @@ class InferenceSession:
     def _lits(self, literals) -> Array:
         return jnp.asarray(literals, LITERAL_DTYPE)
 
-    def _operands(self) -> tuple[Array, Array, Array]:
+    def _operands(self) -> tuple[Array, ...]:
+        """The weight-side executable operands: ``(clause_i, nonempty,
+        class_i)`` unpacked, ``(bits, levels, nonempty, class_i)`` for a
+        ``packing="2bit"`` session."""
         sys_ = self.system
+        if self._packed is not None:
+            return (self._packed.bits, self._packed.levels,
+                    self._nonempty, sys_.class_i)
         return sys_.clause_i, self._nonempty, sys_.class_i
+
+    def input_bytes(self, entry: str, batch: int) -> int:
+        """Exact byte count of the ``(entry, batch)`` executable's input
+        arrays per sweep (the HBM-resident operand footprint the sweep
+        must stream).  Independent of XLA's ``cost_analysis`` counters —
+        this is the layout-level number the packing gate compares."""
+        n = batch * self.system.n_literals * jnp.dtype(LITERAL_DTYPE).itemsize
+        if entry != "predict":
+            n += batch * jnp.dtype(jnp.bool_).itemsize      # valid mask
+        for op in self._operands():
+            n += op.size * op.dtype.itemsize
+        return int(n)
 
     def _exe(self, entry: str, batch: int):
         key = (entry, batch)
@@ -328,7 +373,23 @@ class InferenceSession:
 
     # The traced bodies below run ONLY inside ``.lower()`` — the trace
     # counter bumps are python side effects that count compilations.
-    def _scores_expr(self, literals, clause_i, nonempty, class_i):
+    def _scores_expr(self, literals, *operands):
+        if self._packed is not None:
+            bits, levels, nonempty, class_i = operands
+            packed = packing_mod.PackedClause(bits=bits, levels=levels)
+            tr = self.system.clause_i.shape[2]
+            if self.plan is not None:
+                return crossbar_sh.fused_impact_shmap(
+                    literals, None, nonempty, class_i,
+                    thresh=I_CSA_THRESHOLD, mesh=self.mesh,
+                    impl=self.backend.name, interpret=self.spec.interpret,
+                    shard_r=self.plan[0], shard_s=self.plan[1],
+                    packed=packed, packed_tr=tr)
+            return self.backend.fused_impact_packed(
+                literals, packed, nonempty, class_i,
+                thresh=I_CSA_THRESHOLD, tr=tr,
+                interpret=self.spec.interpret)
+        clause_i, nonempty, class_i = operands
         if self.plan is not None:
             return crossbar_sh.fused_impact_shmap(
                 literals, clause_i, nonempty, class_i,
@@ -339,7 +400,7 @@ class InferenceSession:
             literals, clause_i, nonempty, class_i,
             thresh=I_CSA_THRESHOLD, interpret=self.spec.interpret)
 
-    def _metered_expr(self, literals, valid, clause_i, nonempty, class_i):
+    def _metered_expr(self, literals, valid, *operands):
         """Metered core -> (scores (B, m), per-lane summed clause currents
         (B,), per-lane summed class currents (B,)) — the ONE routing point
         between the shard_map lowering, the in-kernel fused meters, and
@@ -348,7 +409,36 @@ class InferenceSession:
         The three lowerings bill identically (pinned by the parity and
         property suites): per-lane meters are zero on invalid lanes and
         padding contributes zero current everywhere.
+
+        A ``packing="2bit"`` session meters the QUANTIZED currents (what
+        the packed cells draw): the fused mode rides the packed metered
+        kernel, the staged oracle and the shard_map lowering dequantize
+        the same codes — on an ideal (variability-free) system all of it
+        is bit-identical to the unpacked meters.
         """
+        if self._packed is not None:
+            bits, levels, nonempty, class_i = operands
+            packed = packing_mod.PackedClause(bits=bits, levels=levels)
+            tr = self.system.clause_i.shape[2]
+            if self.plan is not None:
+                return crossbar_sh.fused_impact_shmap(
+                    literals, None, nonempty, class_i,
+                    thresh=I_CSA_THRESHOLD, mesh=self.mesh,
+                    impl=self.backend.name, interpret=self.spec.interpret,
+                    valid=valid, meter=True,
+                    shard_r=self.plan[0], shard_s=self.plan[1],
+                    packed=packed, packed_tr=tr)
+            if self.spec.metering == "fused":
+                scores, i_cl, i_cs = self.backend.fused_impact_packed_metered(
+                    literals, packed, nonempty, class_i,
+                    thresh=I_CSA_THRESHOLD, tr=tr,
+                    interpret=self.spec.interpret)
+                v = valid.astype(scores.dtype)
+                return scores, i_cl * v, i_cs * v
+            # Staged oracle on the dequantized currents.
+            operands = (packing_mod.dequant_clause(bits, levels, tr),
+                        nonempty, class_i)
+        clause_i, nonempty, class_i = operands
         if self.plan is not None:
             # On a mesh both metered modes share the shard_map datapath:
             # its per-device stages materialize the partial currents
@@ -379,31 +469,29 @@ class InferenceSession:
             fired, class_i, interpret=self.spec.interpret)
         return scores, i_clause.sum(axis=(1, 2, 3)), i_class.sum(axis=(1, 2))
 
-    def _predict_fn(self, literals, clause_i, nonempty, class_i):
+    def _predict_fn(self, literals, *operands):
         self._traces["predict"] += 1
-        scores = self._scores_expr(literals, clause_i, nonempty, class_i)
+        scores = self._scores_expr(literals, *operands)
         return jnp.argmax(scores, axis=-1), scores
 
-    def _infer_step_fn(self, literals, valid, clause_i, nonempty, class_i):
+    def _infer_step_fn(self, literals, valid, *operands):
         self._traces["infer_step"] += 1
         valid = valid.astype(bool)
         if not self.meters_energy:
-            scores = self._scores_expr(literals, clause_i, nonempty,
-                                       class_i)
+            scores = self._scores_expr(literals, *operands)
             zeros = jnp.zeros((literals.shape[0],), jnp.float32)
             return (jnp.where(valid, jnp.argmax(scores, axis=-1), -1),
                     zeros, zeros)
-        scores, i_cl, i_cs = self._metered_expr(literals, valid, clause_i,
-                                                nonempty, class_i)
+        scores, i_cl, i_cs = self._metered_expr(literals, valid, *operands)
         e_cl, e_cs = energy_mod.per_lane_read_energy(i_cl, i_cs)
         return (jnp.where(valid, jnp.argmax(scores, axis=-1), -1),
                 e_cl, e_cs)
 
-    def _report_fn(self, literals, valid, clause_i, nonempty, class_i):
+    def _report_fn(self, literals, valid, *operands):
         self._traces["infer_with_report"] += 1
         valid = valid.astype(bool)
         scores, i_cl_lane, i_cs_lane = self._metered_expr(
-            literals, valid, clause_i, nonempty, class_i)
+            literals, valid, *operands)
         # Sentinel invalid lanes like infer_step does: the staged and
         # fused lowerings see different scores on an excluded lane (one
         # zeroes its clause drive, the other doesn't), so its argmax is
@@ -414,6 +502,7 @@ class InferenceSession:
     def __repr__(self) -> str:
         return (f"InferenceSession(backend={self.spec.backend!r}, "
                 f"plan={self.plan}, metering={self.spec.metering!r}, "
+                f"packing={self.spec.packing!r}, "
                 f"capacity={self.spec.capacity}, "
                 f"compiled={self.compiled_shapes()})")
 

@@ -54,6 +54,7 @@ from . import class_sum as _class_kernel
 from . import crossbar_mvm as _mvm_kernel
 from . import fused_cotm as _fused_kernel
 from . import fused_impact as _impact_kernel
+from . import packing
 from . import ref
 
 Array = jax.Array
@@ -145,6 +146,50 @@ class Backend:
                      interpret: bool | None = None, block_b: int = 128,
                      block_n: int = 128, block_k: int = 512) -> Array:
         raise NotImplementedError
+
+    # -- bitplane-packed datapath (kernels.packing layout) -----------------
+    def pack_clause_operand(self, clause_i: Array, *,
+                            split: float | None = None,
+                            ) -> packing.PackedClause:
+        """Quantize a clause-current operand to the 2-bit packed layout.
+        ``split=None`` classifies HCS/LCS at the device-population
+        midpoint (``packing.population_split``)."""
+        return packing.pack_clause_operand(clause_i, split=split)
+
+    def fused_impact_packed(self, literals: Array,
+                            packed: packing.PackedClause, nonempty: Array,
+                            class_i: Array, *, thresh: float, tr: int,
+                            interpret: bool | None = None,
+                            block_b: int = 128, block_n: int = 256) -> Array:
+        """``fused_impact`` on a packed clause operand.  ``tr`` is the
+        UNPACKED per-shard row count (not recoverable from the packed
+        bits — the shard row mapping needs it).
+
+        Default composition: dequantize and delegate, so every
+        registered backend accepts ``RuntimeSpec(packing="2bit")`` out of
+        the box; ``PackedPallasBackend`` overrides with the kernel that
+        unpacks in VMEM and never materializes the f32 operand.
+        """
+        clause_i = packing.dequant_clause(packed.bits, packed.levels, tr)
+        return self.fused_impact(literals, clause_i, nonempty, class_i,
+                                 thresh=thresh, interpret=interpret,
+                                 block_b=block_b, block_n=block_n)
+
+    def fused_impact_packed_metered(self, literals: Array,
+                                    packed: packing.PackedClause,
+                                    nonempty: Array, class_i: Array, *,
+                                    thresh: float, tr: int,
+                                    interpret: bool | None = None,
+                                    block_b: int = 128, block_n: int = 256,
+                                    ) -> tuple[Array, Array, Array]:
+        """Metered packed datapath; meters bill the QUANTIZED currents
+        (what the packed cells draw), same triple as
+        ``fused_impact_metered``."""
+        clause_i = packing.dequant_clause(packed.bits, packed.levels, tr)
+        return self.fused_impact_metered(literals, clause_i, nonempty,
+                                         class_i, thresh=thresh,
+                                         interpret=interpret,
+                                         block_b=block_b, block_n=block_n)
 
     # -- staged analog compositions (Fig. 14 per-shard unroll) -------------
     def impact_clause_bits(self, literals: Array, clause_i: Array,
@@ -379,6 +424,20 @@ class XLABackend(Backend):
     def impact_class_scores(self, clauses, class_i, *, interpret=None):
         return ref.impact_class_scores_ref(clauses, class_i)
 
+    def fused_impact_packed(self, literals, packed, nonempty, class_i, *,
+                            thresh, tr, interpret=None, block_b=128,
+                            block_n=256):
+        return ref.fused_impact_packed_ref(
+            literals, packed.bits, packed.levels, nonempty, class_i,
+            thresh=thresh, tr=tr)
+
+    def fused_impact_packed_metered(self, literals, packed, nonempty,
+                                    class_i, *, thresh, tr, interpret=None,
+                                    block_b=128, block_n=256):
+        return ref.fused_impact_packed_metered_ref(
+            literals, packed.bits, packed.levels, nonempty, class_i,
+            thresh=thresh, tr=tr)
+
 
 class MeteredPallasBackend(PallasBackend):
     """The always-metered Pallas lowering: every fused inference runs the
@@ -402,6 +461,108 @@ class MeteredPallasBackend(PallasBackend):
             literals, clause_i, nonempty, class_i, thresh=thresh,
             interpret=interpret, block_b=block_b, block_n=block_n)
         return scores
+
+
+class PackedPallasBackend(PallasBackend):
+    """The compressed lowering: the fused kernel consumes bitplane-packed
+    clause bits (``kernels.packing`` 2-bit layout) and unpacks them in
+    VMEM — the f32 clause-current operand never exists in HBM, so the
+    dominant sweep operand shrinks ~16x (f32 cell currents -> 2-bit
+    codes) and total sweep input bytes drop well past 4x.
+
+    Sessions built with ``RuntimeSpec(packing="2bit")`` pack ONCE at
+    compile time and feed ``fused_impact_packed`` directly; the plain
+    ``fused_impact`` entry points pack in-trace (constant-folded under
+    jit for weight operands), so this backend is also a drop-in registry
+    key for ``ops.*(impl="pallas-packed")``.
+    """
+
+    name = "pallas-packed"
+
+    def _fused_impact_packed_operands(self, literals, packed, nonempty,
+                                      class_i, *, tr, block_b, block_n):
+        """Neutral-padding plumbing for the packed kernel layouts:
+        -> (drive_p, pbits, levels, ne, wcur, block_n).  Padding packs to
+        CODE_DEAD (0 A) and pads drive with 0, so padded rows/columns
+        contribute exactly zero current — the meters stay exact."""
+        B, K = literals.shape
+        R, C, tr4, tc = packed.bits.shape
+        S, sr, M = class_i.shape
+        n_clause = C * tc
+
+        N = max(n_clause, S * sr)
+        block_n = min(block_n, max(128, -(-N // 128) * 128))
+        tr4_pad = max(128, -(-tr4 // 128) * 128)
+
+        # Bitplane-major drive: drive_p[r, j, b, q] = 1 - lit[b, r*tr+4q+j].
+        lit = pad_axis(literals.astype(jnp.float32), R * tr, 1, 1)
+        drive = (1.0 - lit).reshape(B, R, tr)
+        drive = pad_axis(drive, packing.CELLS_PER_BYTE * tr4, 2, 0.0)
+        drive = drive.reshape(B, R, tr4, packing.CELLS_PER_BYTE)
+        drive = drive.transpose(1, 3, 0, 2)         # (R, 4, B, tr4)
+        drive = pad_axis(pad_axis(drive, block_b, 2, 0.0), tr4_pad, 3, 0.0)
+
+        pbits = packed.bits.transpose(0, 2, 1, 3).reshape(R, tr4, n_clause)
+        pbits = pad_axis(pad_axis(pbits, tr4_pad, 1, 0), block_n, 2, 0)
+        if N > n_clause:
+            pbits = pad_axis(pbits, -(-N // block_n) * block_n, 2, 0)
+
+        levels = jnp.zeros((1, 128), jnp.float32)
+        levels = levels.at[0, :2].set(packed.levels.astype(jnp.float32))
+
+        ne = pad_axis(nonempty.astype(jnp.int8)[None, :],
+                      -(-N // block_n) * block_n, 1, 0)
+
+        wcur = class_i.astype(jnp.float32).reshape(S * sr, M)
+        wcur = pad_axis(pad_axis(wcur, ne.shape[1], 0, 0.0), 128, 1, 0.0)
+        return drive, pbits, levels, ne, wcur, block_n
+
+    def fused_impact_packed(self, literals, packed, nonempty, class_i, *,
+                            thresh, tr, interpret=None, block_b=128,
+                            block_n=256):
+        B, M = literals.shape[0], class_i.shape[2]
+        interpret = self.resolve_interpret(interpret)
+        drive, pbits, levels, ne, wcur, block_n = (
+            self._fused_impact_packed_operands(
+                literals, packed, nonempty, class_i, tr=tr,
+                block_b=block_b, block_n=block_n))
+        out = _impact_kernel.fused_impact_packed(
+            drive, pbits, levels, ne, wcur, thresh=thresh, block_b=block_b,
+            block_n=block_n, interpret=interpret)
+        return out[:B, :M]
+
+    def fused_impact_packed_metered(self, literals, packed, nonempty,
+                                    class_i, *, thresh, tr, interpret=None,
+                                    block_b=128, block_n=256):
+        B, M = literals.shape[0], class_i.shape[2]
+        interpret = self.resolve_interpret(interpret)
+        drive, pbits, levels, ne, wcur, block_n = (
+            self._fused_impact_packed_operands(
+                literals, packed, nonempty, class_i, tr=tr,
+                block_b=block_b, block_n=block_n))
+        out, meters = _impact_kernel.fused_impact_packed_metered(
+            drive, pbits, levels, ne, wcur, thresh=thresh, block_b=block_b,
+            block_n=block_n, interpret=interpret)
+        return (out[:B, :M],
+                meters[:B, _impact_kernel.METER_LANE_CLAUSE],
+                meters[:B, _impact_kernel.METER_LANE_CLASS])
+
+    def fused_impact(self, literals, clause_i, nonempty, class_i, *,
+                     thresh, interpret=None, block_b=128, block_n=256):
+        packed = self.pack_clause_operand(clause_i)
+        return self.fused_impact_packed(
+            literals, packed, nonempty, class_i, thresh=thresh,
+            tr=clause_i.shape[2], interpret=interpret, block_b=block_b,
+            block_n=block_n)
+
+    def fused_impact_metered(self, literals, clause_i, nonempty, class_i,
+                             *, thresh, interpret=None, block_b=128,
+                             block_n=256):
+        packed = self.pack_clause_operand(clause_i)
+        return self.fused_impact_packed_metered(
+            literals, packed, nonempty, class_i, thresh=thresh,
+            tr=clause_i.shape[2], interpret=interpret, block_b=block_b,
+            block_n=block_n)
 
 
 # -- registry ---------------------------------------------------------------
@@ -450,3 +611,4 @@ def available_backends() -> tuple[str, ...]:
 register_backend(PallasBackend())
 register_backend(XLABackend())
 register_backend(MeteredPallasBackend())
+register_backend(PackedPallasBackend())

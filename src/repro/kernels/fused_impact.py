@@ -231,3 +231,209 @@ def fused_impact_metered(drive: Array, ccur: Array, nonempty: Array,
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(drive, ccur, nonempty, wcur)
+
+
+# -- bitplane-packed datapath -------------------------------------------------
+#
+# The clause crossbar is ternary at the device abstraction (HCS include /
+# LCS exclude / dead), so streaming a float32 current per cell moves 16x
+# more bytes than the information content.  The packed kernels consume
+# the ``kernels.packing`` layout instead: 2-bit codes, four literal rows
+# per byte, unpacked INSIDE the kernel — the f32 cell-current operand
+# never exists in HBM.  Layouts (prepared by ``ops.fused_impact_packed``):
+#
+#   drive_p (R, 4, B, tr4)  f32   bitplane-major drive: plane j row q is
+#                                 literal row 4q+j of shard r; pad rows 0
+#   pbits   (R, tr4, N)     uint8 packed codes, columns flattened
+#   levels  (1, 128)        f32   [i_lcs, i_hcs] in lanes 0/1 (VREG row)
+#   ne / wcur / out               as in the unpacked kernel
+#
+# Column current = sum_j drive_p[r, j] @ dequant(plane_j), identical MACs
+# to the unpacked kernel but ~4x fewer clause bytes through HBM/VMEM
+# (uint8 codes vs f32 currents over 4x fewer rows).
+
+_PLANES = 4
+_CODE_BITS = 2
+_CODE_MASK = 3
+
+
+def _dequant_plane(codes32, j, i_lcs, i_hcs):
+    plane = (codes32 >> (_CODE_BITS * j)) & _CODE_MASK
+    return jnp.where(plane == 2, i_hcs,
+                     jnp.where(plane == 1, i_lcs, 0.0)).astype(jnp.float32)
+
+
+def _packed_column_current(drive_ref, pbits_ref, r, i_lcs, i_hcs):
+    codes32 = pbits_ref[r].astype(jnp.int32)            # (tr4, bn)
+    i_col = None
+    for j in range(_PLANES):                            # static bitplane unroll
+        cur = _dequant_plane(codes32, j, i_lcs, i_hcs)
+        part = jax.lax.dot_general(
+            drive_ref[r, j], cur,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        i_col = part if i_col is None else i_col + part
+    return i_col
+
+
+def _fused_impact_packed_kernel(drive_ref, pbits_ref, lvl_ref, ne_ref,
+                                wcur_ref, out_ref, acc_ref, *, n_n: int,
+                                n_r: int, thresh: float):
+    n = pl.program_id(1)
+
+    @pl.when(n == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    lvl = lvl_ref[...]
+    i_lcs, i_hcs = lvl[0, 0], lvl[0, 1]
+    bb = drive_ref.shape[2]
+    bn = ne_ref.shape[1]
+    fired = jnp.broadcast_to(ne_ref[...] != 0, (bb, bn))
+    for r in range(n_r):                       # static unroll over row shards
+        i_col = _packed_column_current(drive_ref, pbits_ref, r, i_lcs, i_hcs)
+        fired = fired & (i_col < thresh)       # CSA + digital AND, in VMEM
+    acc_ref[...] += jax.lax.dot_general(
+        fired.astype(jnp.float32), wcur_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(n == n_n - 1)
+    def _epilogue():
+        out_ref[...] = acc_ref[...]
+
+
+def _packed_specs(R, block_b, tr4, block_n, M):
+    return [
+        pl.BlockSpec((R, _PLANES, block_b, tr4), lambda b, n: (0, 0, b, 0)),
+        pl.BlockSpec((R, tr4, block_n), lambda b, n: (0, 0, n)),
+        pl.BlockSpec((1, 128), lambda b, n: (0, 0)),
+        pl.BlockSpec((1, block_n), lambda b, n: (0, n)),
+        pl.BlockSpec((block_n, M), lambda b, n: (n, 0)),
+    ]
+
+
+def _check_packed_shapes(drive, pbits, levels, nonempty, wcur,
+                         block_b, block_n):
+    R, P, B, tr4 = drive.shape
+    R2, tr42, N = pbits.shape
+    N2, M = wcur.shape
+    assert P == _PLANES and R == R2 and tr4 == tr42 and N == N2
+    assert nonempty.shape == (1, N) and levels.shape == (1, 128)
+    assert pbits.dtype == jnp.uint8
+    assert (B % block_b == 0 and N % block_n == 0 and tr4 % 128 == 0
+            and M % 128 == 0), (B, R, tr4, N, M)
+    return R, B, N, M
+
+
+@functools.partial(
+    jax.jit, static_argnames=("thresh", "block_b", "block_n", "interpret"))
+def fused_impact_packed(drive: Array, pbits: Array, levels: Array,
+                        nonempty: Array, wcur: Array, *, thresh: float,
+                        block_b: int = BLOCK_B, block_n: int = BLOCK_N,
+                        interpret: bool = False) -> Array:
+    """drive (R, 4, B, tr4) f32, pbits (R, tr4, N) uint8, levels (1, 128)
+    f32, nonempty (1, N) int8, wcur (N, M) f32 -> class currents (B, M).
+
+    Same alignment contract as ``fused_impact`` with ``tr4`` (the packed
+    row count) in place of ``tr``; ``ops.fused_impact_packed`` pads
+    arbitrary shapes.
+    """
+    R, B, N, M = _check_packed_shapes(drive, pbits, levels, nonempty, wcur,
+                                      block_b, block_n)
+    n_n = N // block_n
+    tr4 = drive.shape[3]
+
+    return pl.pallas_call(
+        functools.partial(_fused_impact_packed_kernel, n_n=n_n, n_r=R,
+                          thresh=thresh),
+        grid=(B // block_b, n_n),
+        in_specs=_packed_specs(R, block_b, tr4, block_n, M),
+        out_specs=pl.BlockSpec((block_b, M), lambda b, n: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, M), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_b, M), jnp.float32)],
+        compiler_params=_compat.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(drive, pbits, levels, nonempty, wcur)
+
+
+def _fused_impact_packed_metered_kernel(drive_ref, pbits_ref, lvl_ref,
+                                        ne_ref, wcur_ref, out_ref, meter_ref,
+                                        acc_ref, macc_ref, *, n_n: int,
+                                        n_r: int, thresh: float):
+    """Packed datapath + the in-kernel energy meter: the meters bill the
+    QUANTIZED column currents — the currents the packed cells actually
+    draw — keeping the energy story consistent with the datapath."""
+    n = pl.program_id(1)
+
+    @pl.when(n == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        macc_ref[...] = jnp.zeros_like(macc_ref)
+
+    lvl = lvl_ref[...]
+    i_lcs, i_hcs = lvl[0, 0], lvl[0, 1]
+    bb = drive_ref.shape[2]
+    bn = ne_ref.shape[1]
+    fired = jnp.broadcast_to(ne_ref[...] != 0, (bb, bn))
+    i_chunk = jnp.zeros((bb, 1), jnp.float32)
+    for r in range(n_r):                       # static unroll over row shards
+        i_col = _packed_column_current(drive_ref, pbits_ref, r, i_lcs, i_hcs)
+        fired = fired & (i_col < thresh)       # CSA + digital AND, in VMEM
+        i_chunk += i_col.sum(axis=1, keepdims=True)
+    macc_ref[...] += i_chunk
+    acc_ref[...] += jax.lax.dot_general(
+        fired.astype(jnp.float32), wcur_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(n == n_n - 1)
+    def _epilogue():
+        out_ref[...] = acc_ref[...]
+        lane = jax.lax.broadcasted_iota(jnp.int32, macc_ref.shape, 1)
+        i_class = acc_ref[...].sum(axis=1, keepdims=True)
+        meter_ref[...] = jnp.where(
+            lane == METER_LANE_CLAUSE, macc_ref[...],
+            jnp.where(lane == METER_LANE_CLASS, i_class, 0.0))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("thresh", "block_b", "block_n", "interpret"))
+def fused_impact_packed_metered(drive: Array, pbits: Array, levels: Array,
+                                nonempty: Array, wcur: Array, *,
+                                thresh: float, block_b: int = BLOCK_B,
+                                block_n: int = BLOCK_N,
+                                interpret: bool = False,
+                                ) -> tuple[Array, Array]:
+    """Metered variant of ``fused_impact_packed``: returns
+    ``(class currents (B, M), meters (B, METER_LANES))`` with the same
+    lane layout as ``fused_impact_metered``.
+    """
+    R, B, N, M = _check_packed_shapes(drive, pbits, levels, nonempty, wcur,
+                                      block_b, block_n)
+    n_n = N // block_n
+    tr4 = drive.shape[3]
+
+    return pl.pallas_call(
+        functools.partial(_fused_impact_packed_metered_kernel, n_n=n_n,
+                          n_r=R, thresh=thresh),
+        grid=(B // block_b, n_n),
+        in_specs=_packed_specs(R, block_b, tr4, block_n, M),
+        out_specs=[
+            pl.BlockSpec((block_b, M), lambda b, n: (b, 0)),
+            pl.BlockSpec((block_b, METER_LANES), lambda b, n: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, M), jnp.float32),
+            jax.ShapeDtypeStruct((B, METER_LANES), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_b, M), jnp.float32),
+                        pltpu.VMEM((block_b, METER_LANES), jnp.float32)],
+        compiler_params=_compat.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(drive, pbits, levels, nonempty, wcur)

@@ -119,6 +119,44 @@ def fused_impact(literals: Array, clause_i: Array, nonempty: Array,
         interpret=interpret, block_b=block_b, block_n=block_n)
 
 
+def fused_impact_packed(literals: Array, packed, nonempty: Array,
+                        class_i: Array, *, thresh: float, tr: int,
+                        impl: str = "pallas-packed",
+                        interpret: bool | None = None, block_b: int = 128,
+                        block_n: int = 256, mesh=None, meter: bool = False):
+    """``fused_impact`` on a bitplane-packed clause operand.
+
+    ``packed`` is a ``kernels.packing.PackedClause`` — 2-bit codes
+    ``(R, C, ceil(tr/4), tc)`` uint8 plus the ``(2,)`` dequant levels —
+    and ``tr`` is the UNPACKED per-shard row count (the packed bits
+    alone cannot recover it).  Routing mirrors ``fused_impact``: a mesh
+    with a usable ``model`` axis rides the same psum lowering
+    (``sharding.crossbar`` unpacks bitplanes per shard), otherwise the
+    backend's packed kernel runs; ``meter=True`` returns the metered
+    triple billed on the quantized currents.
+    """
+    R, C, tr4, tc = packed.bits.shape
+    S = class_i.shape[0]
+    assert nonempty.shape == (C * tc,), (nonempty.shape, C * tc)
+    if mesh is not None:
+        from ..sharding import crossbar as _crossbar  # lazy: avoids cycle
+        plan = _crossbar.shard_plan(mesh, R, S)
+        if plan is not None:
+            return _crossbar.fused_impact_shmap(
+                literals, None, nonempty, class_i, thresh=thresh,
+                mesh=mesh, impl=impl, interpret=interpret, meter=meter,
+                shard_r=plan[0], shard_s=plan[1], packed=packed,
+                packed_tr=tr)
+    backend = backends.get_backend(impl)
+    if meter:
+        return backend.fused_impact_packed_metered(
+            literals, packed, nonempty, class_i, thresh=thresh, tr=tr,
+            interpret=interpret, block_b=block_b, block_n=block_n)
+    return backend.fused_impact_packed(
+        literals, packed, nonempty, class_i, thresh=thresh, tr=tr,
+        interpret=interpret, block_b=block_b, block_n=block_n)
+
+
 def crossbar_mvm(drive: Array, g: Array, *, v_read: float = 2.0,
                  nonlin: float = 1.5, cutoff: float = 10e-9,
                  impl: str = "pallas", interpret: bool | None = None,

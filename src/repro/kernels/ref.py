@@ -120,6 +120,35 @@ def fused_impact_metered_ref(literals: Array, clause_i: Array,
     return scores, i_col.sum(axis=(1, 2, 3)), i_cls.sum(axis=(1, 2))
 
 
+def fused_impact_packed_ref(literals: Array, bits: Array, levels: Array,
+                            nonempty: Array, class_i: Array, *,
+                            thresh: float, tr: int) -> Array:
+    """Einsum oracle for the bitplane-packed datapath.
+
+    ``bits`` (R, C, tr4, tc) uint8 2-bit codes (see ``kernels.packing``),
+    ``levels`` (2,) f32 dequant currents.  Unpacks to per-cell currents
+    and runs the exact shard-structured oracle — ground truth for the
+    packed Pallas kernel, which must never diverge from "dequantize,
+    then do what the int8 path does".
+    """
+    from . import packing
+    clause_i = packing.dequant_clause(bits, levels, tr)
+    return fused_impact_ref(literals, clause_i, nonempty, class_i,
+                            thresh=thresh)
+
+
+def fused_impact_packed_metered_ref(literals: Array, bits: Array,
+                                    levels: Array, nonempty: Array,
+                                    class_i: Array, *, thresh: float,
+                                    tr: int) -> tuple[Array, Array, Array]:
+    """Metered oracle on the quantized currents (the packed datapath's
+    own energy truth: meters bill the currents the packed cells draw)."""
+    from . import packing
+    clause_i = packing.dequant_clause(bits, levels, tr)
+    return fused_impact_metered_ref(literals, clause_i, nonempty, class_i,
+                                    thresh=thresh)
+
+
 def crossbar_mvm_ref(drive: Array, g: Array, *, v_read: float = 2.0,
                      nonlin: float = 1.5, cutoff: float = 10e-9) -> Array:
     """Analog crossbar column currents with the Y-Flash low-G nonlinearity.

@@ -146,11 +146,43 @@ def _local_column_currents(drive_loc: Array, ci_loc: Array, *, impl: str,
     return jnp.stack(cols, axis=1)
 
 
-def fused_impact_shmap(literals: Array, clause_i: Array, nonempty: Array,
-                       class_i: Array, *, thresh: float, mesh,
-                       impl: str = "pallas", interpret: bool | None = None,
+def _local_column_currents_packed(drive_loc: Array, pb_loc: Array,
+                                  lv_loc: Array, *, impl: str,
+                                  interpret: bool | None) -> Array:
+    """Packed-operand twin of ``_local_column_currents``.
+
+    drive_loc (B, R_loc, 4, tr4) bitplane-major drive; pb_loc
+    (R_loc, C, tr4, tc) uint8 packed codes; lv_loc (2,) dequant levels
+    -> (B, R_loc, C*tc) f32.  Each bitplane is dequantized on-device and
+    driven through the same ``crossbar_mvm`` kernel, so the psum
+    structure above this function is untouched by packing.
+    """
+    R_loc, C, tr4, tc = pb_loc.shape
+    cols = []
+    for r in range(R_loc):                      # static local-shard unroll
+        codes = pb_loc[r].transpose(1, 0, 2).reshape(tr4, C * tc)
+        codes = codes.astype(jnp.int32)
+        i_col = None
+        for j in range(4):                      # static bitplane unroll
+            plane = (codes >> (2 * j)) & 3
+            cur = jnp.where(plane == 2, lv_loc[1],
+                            jnp.where(plane == 1, lv_loc[0], 0.0))
+            part = ops.crossbar_mvm(drive_loc[:, r, j],
+                                    cur.astype(jnp.float32), v_read=1.0,
+                                    cutoff=0.0, impl=impl,
+                                    interpret=interpret)
+            i_col = part if i_col is None else i_col + part
+        cols.append(i_col)
+    return jnp.stack(cols, axis=1)
+
+
+def fused_impact_shmap(literals: Array, clause_i: Array | None,
+                       nonempty: Array, class_i: Array, *, thresh: float,
+                       mesh, impl: str = "pallas",
+                       interpret: bool | None = None,
                        valid: Array | None = None, meter: bool = False,
-                       shard_r: bool = True, shard_s: bool = True):
+                       shard_r: bool = True, shard_s: bool = True,
+                       packed=None, packed_tr: int | None = None):
     """Sharded analog inference: literals (B, K) -> class currents (B, M).
 
     Same contract as ``ops.fused_impact`` (which is the normal entry
@@ -163,9 +195,21 @@ def fused_impact_shmap(literals: Array, clause_i: Array, nonempty: Array,
     ``impact.energy.per_lane_read_energy`` converts to joules — computed
     with the same valid-lane masking as the single-device staged path,
     so per-request bills sum to the batch meter under every plan.
+
+    ``packed`` (a ``kernels.packing.PackedClause``) swaps the clause
+    operand for the 2-bit bitplane layout: the codes shard over the
+    model axis exactly like the f32 currents (same axis-0 placement, so
+    the packed operands ride the same psum lowering) and each device
+    dequantizes only its local shards.  ``packed_tr`` is the unpacked
+    per-shard row count; ``clause_i`` must be None in packed mode.
     """
     B, K = literals.shape
-    R, C, tr, tc = clause_i.shape
+    if packed is not None:
+        assert clause_i is None and packed_tr is not None
+        R, C, tr4, tc = packed.bits.shape
+        tr = packed_tr
+    else:
+        R, C, tr, tc = clause_i.shape
     S, sr, M = class_i.shape
     n = C * tc
     m = model_size(mesh)
@@ -183,16 +227,36 @@ def fused_impact_shmap(literals: Array, clause_i: Array, nonempty: Array,
 
     lit = ref.pad_to(literals.astype(jnp.float32), R * tr, axis=1, value=1)
     drive = (1.0 - lit).reshape(B, R, tr)       # padding rows float ('Z')
+    rspec = "model" if shard_r else None
+    if packed is not None:
+        # Bitplane-major drive (B, R, 4, tr4): plane j row q drives
+        # literal row 4q+j of shard r; rows past tr pad with 0 V.
+        drive = ref.pad_to(drive, 4 * tr4, axis=2, value=0.0)
+        drive = drive.reshape(B, R, tr4, 4).transpose(0, 1, 3, 2)
+        clause_op = packed.bits
+        levels = packed.levels.astype(jnp.float32)
+        drive_spec = P(bspec, rspec, None, None)
+    else:
+        clause_op = clause_i.astype(jnp.float32)
+        levels = jnp.zeros((2,), jnp.float32)   # unused, keeps one wiring
+        drive_spec = P(bspec, rspec, None)
     ne = nonempty.astype(jnp.int8)
     vmask = (jnp.ones((B,), bool) if valid is None
              else valid.astype(bool))
 
-    def local_fn(drive_loc, ci_loc, ne_loc, wi_loc, valid_loc):
-        # drive_loc (B_loc, R_loc, tr); ci_loc (R_loc, C, tr, tc);
-        # wi_loc (S_loc, sr, M); R_loc/S_loc are full R/S for a
-        # replicated operand; everything else replicated over "model".
-        i_col = _local_column_currents(drive_loc, ci_loc, impl=impl,
-                                       interpret=interpret)
+    def local_fn(drive_loc, ci_loc, ne_loc, wi_loc, valid_loc, lv_loc):
+        # drive_loc (B_loc, R_loc, tr) — or (B_loc, R_loc, 4, tr4)
+        # packed; ci_loc (R_loc, C, tr, tc) f32 — or (R_loc, C, tr4, tc)
+        # uint8 packed codes with lv_loc the dequant levels; wi_loc
+        # (S_loc, sr, M); R_loc/S_loc are full R/S for a replicated
+        # operand; everything else replicated over "model".
+        if packed is not None:
+            i_col = _local_column_currents_packed(drive_loc, ci_loc, lv_loc,
+                                                  impl=impl,
+                                                  interpret=interpret)
+        else:
+            i_col = _local_column_currents(drive_loc, ci_loc, impl=impl,
+                                           interpret=interpret)
         # Partial CSA bits: count of local shards whose column current
         # trips the sense amp; with R sharded, the cross-device psum is
         # Fig. 14's digital AND (a clause fires iff the total violation
@@ -242,12 +306,13 @@ def fused_impact_shmap(literals: Array, clause_i: Array, nonempty: Array,
                  else (P(bspec, None), P(bspec), P(bspec)))
     fn = compat.shard_map(
         local_fn, mesh=mesh,
-        in_specs=(P(bspec, "model" if shard_r else None, None),
-                  P("model" if shard_r else None, None, None, None),
+        in_specs=(drive_spec,
+                  P(rspec, None, None, None),
                   P(None),
                   P("model" if shard_s else None, None, None),
-                  P(bspec)),
+                  P(bspec),
+                  P(None)),
         out_specs=out_specs, check_vma=False)
-    out = fn(drive, clause_i.astype(jnp.float32), ne,
-             class_i.astype(jnp.float32), vmask)
+    out = fn(drive, clause_op, ne, class_i.astype(jnp.float32), vmask,
+             levels)
     return out[0] if not meter else out

@@ -1,0 +1,83 @@
+"""The CI hygiene gate's rules — stdlib-only, loaded by file path like
+check_perf (``benchmarks`` is a script directory, not a package).
+
+The rule set must flag generated files (bytecode, ``artifacts/`` JSON,
+``*.trace.json`` timelines) while leaving the COMMITTED benchmark
+baselines under ``benchmarks/baselines/`` alone — that distinction is
+the whole point of the path-anchored ``artifacts/`` rule.
+"""
+import importlib.util
+import pathlib
+import subprocess
+
+_PATH = (pathlib.Path(__file__).resolve().parent.parent
+         / "benchmarks" / "check_hygiene.py")
+_spec = importlib.util.spec_from_file_location("check_hygiene", _PATH)
+check_hygiene = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_hygiene)
+
+
+def test_clean_paths_pass():
+    clean = [
+        "src/repro/kernels/packing.py",
+        "benchmarks/baselines/BENCH_throughput.json",  # committed baseline
+        "benchmarks/check_hygiene.py",
+        ".github/workflows/ci.yml",
+        "artifacts/README",                 # not .json
+        "docs/trace.json.md",               # not *.trace.json
+        "src/repro/impact/artifacts_helper.py",  # 'artifacts/' only at root
+    ]
+    assert check_hygiene.find_violations(clean) == []
+
+
+def test_generated_paths_flagged():
+    bad = [
+        "src/repro/__pycache__/ops.cpython-310.pyc",
+        "__pycache__/x.py",
+        "src/repro/kernels/ops.pyc",
+        "artifacts/BENCH_throughput.json",
+        "artifacts/nested/BENCH_serve.json",
+        "artifacts/SERVE_continuous.trace.json",
+        "somewhere/else/SERVE_flush.trace.json",
+    ]
+    got = check_hygiene.find_violations(bad)
+    assert [p for p, _ in got] == bad
+    labels = dict(got)
+    assert "bytecode" in labels["src/repro/kernels/ops.pyc"]
+    assert "artifact" in labels["artifacts/BENCH_throughput.json"]
+    assert "tracing" in labels["somewhere/else/SERVE_flush.trace.json"]
+
+
+def test_main_against_a_real_repo(tmp_path, monkeypatch, capsys):
+    """End to end on a throwaway git repo: clean tree exits 0; a tracked
+    artifact flips the exit code and prints a ::error annotation."""
+    subprocess.run(["git", "init", "-q", str(tmp_path)], check=True)
+    (tmp_path / "ok.py").write_text("x = 1\n")
+    subprocess.run(["git", "-C", str(tmp_path), "add", "ok.py"],
+                   check=True)
+    monkeypatch.chdir(tmp_path)
+    assert check_hygiene.main() == 0
+    assert "passed" in capsys.readouterr().out
+
+    art = tmp_path / "artifacts"
+    art.mkdir()
+    (art / "BENCH_throughput.json").write_text("{}")
+    subprocess.run(["git", "-C", str(tmp_path), "add", "-f",
+                    "artifacts/BENCH_throughput.json"], check=True)
+    assert check_hygiene.main() == 1
+    out = capsys.readouterr().out
+    assert "::error file=artifacts/BENCH_throughput.json::" in out
+    assert "FAILED" in out
+
+
+def test_this_repo_is_clean():
+    """The gate the hygiene CI job runs, run here too: the actual tree
+    must never track a generated file."""
+    repo = pathlib.Path(__file__).resolve().parent.parent
+    res = subprocess.run(["git", "-C", str(repo), "ls-files"],
+                        capture_output=True, text=True)
+    if res.returncode != 0:
+        import pytest
+        pytest.skip("not a git checkout")
+    paths = [ln for ln in res.stdout.splitlines() if ln]
+    assert check_hygiene.find_violations(paths) == []

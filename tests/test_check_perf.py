@@ -77,6 +77,68 @@ def test_check_metered_parity_and_ratio_floor():
     assert sum("fell to" in f for f in fails) == 2
 
 
+# -- check_compressed --------------------------------------------------------
+
+def _compressed(ratio_ba=4.8, ratio_ib=11.0, parity=True, n_eff=353,
+                prune_parity=True):
+    return dict(compressed=dict(
+        parity_ok=parity,
+        results={"int8_b8": {}, "packed_b8": {}},
+        cost_analysis={"b8": dict(
+            int8=dict(flops=1e6, bytes_accessed=1e8, input_bytes=4e6),
+            packed=dict(flops=1e6, bytes_accessed=1e8 / ratio_ba,
+                        input_bytes=4e6 / ratio_ib),
+            ratio_bytes_accessed=ratio_ba,
+            ratio_input_bytes=ratio_ib)},
+        pruning=dict(n_clauses=500, n_effective=n_eff, n_never_fired=147,
+                     n_duplicates=0, calibration_batch=64,
+                     energy_per_effective_clause_j=2e-13,
+                     packed_parity_on_calibration=prune_parity)))
+
+
+def test_check_compressed_section_is_mandatory():
+    (fail,) = check_perf.check_compressed({})
+    assert "missing" in fail
+
+
+def test_check_compressed_happy_path():
+    assert check_perf.check_compressed(_compressed()) == []
+    # the 4x floor is inclusive
+    assert check_perf.check_compressed(
+        _compressed(ratio_ba=4.0, ratio_ib=4.0)) == []
+
+
+def test_check_compressed_gates_both_byte_ratios():
+    """bytes_accessed and input_bytes fail independently — they catch
+    different regressions (out-of-kernel dequant vs operand layout)."""
+    (fail,) = check_perf.check_compressed(_compressed(ratio_ba=3.9))
+    assert "ratio_bytes_accessed" in fail
+    (fail,) = check_perf.check_compressed(_compressed(ratio_ib=2.0))
+    assert "ratio_input_bytes" in fail
+    fails = check_perf.check_compressed(
+        _compressed(ratio_ba=1.0, ratio_ib=1.0))
+    assert len(fails) == 2
+
+
+def test_check_compressed_missing_ratio_is_a_failure_not_crash():
+    payload = _compressed()
+    del payload["compressed"]["cost_analysis"]["b8"]["ratio_input_bytes"]
+    (fail,) = check_perf.check_compressed(payload)
+    assert "ratio_input_bytes" in fail and "missing" in fail
+    payload["compressed"]["cost_analysis"] = {}
+    fails = check_perf.check_compressed(payload)
+    assert any("no cost_analysis" in f for f in fails)
+
+
+def test_check_compressed_parity_and_pruning_invariants():
+    fails = check_perf.check_compressed(_compressed(parity=False))
+    assert any("parity_ok" in f for f in fails)
+    fails = check_perf.check_compressed(_compressed(n_eff=0))
+    assert any("effective" in f for f in fails)
+    fails = check_perf.check_compressed(_compressed(prune_parity=False))
+    assert any("calibration" in f for f in fails)
+
+
 # -- check_cost_model --------------------------------------------------------
 
 def _pvm(ratio=1.2, ordering=1.01):

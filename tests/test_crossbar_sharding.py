@@ -295,6 +295,60 @@ def test_fused_metering_bills_identically_across_shard_plans(shard):
 
 
 @multi_device
+@pytest.mark.parametrize("shard", ["both", "r", "s", "none"])
+def test_packed_sessions_across_shard_plans(shard):
+    """packing='2bit' under all four forced shard plans: the packed
+    clause operand rides the same psum lowering (bits shard on the
+    R axis like the currents they encode; the dequant levels replicate),
+    so predictions AND per-lane energy bills match the single-device
+    packed kernel — the compressed-datapath acceptance sweep."""
+    mesh = _mesh_or_skip(2)
+    B, K = 8, 300
+    lit, sys_ = _make_system(B, K, 120, 7, 4, 80, 3, 40, 4, 30, seed=41)
+    buf = np.ones((B, K), np.int8)
+    buf[:6] = np.asarray(lit[:6])
+    valid = np.zeros((B,), bool)
+    valid[:6] = True
+    single = sys_.compile(RuntimeSpec(
+        backend="pallas-packed", packing="2bit", metering="fused",
+        capacity=B)).infer_step(buf, valid)
+    sess = sys_.compile(RuntimeSpec(
+        backend="xla", packing="2bit", metering="fused", capacity=B,
+        topology=Topology(mesh=mesh, shard=shard)))
+    want_plan = {"both": (True, True), "r": (True, False),
+                 "s": (False, True), "none": None}[shard]
+    assert sess.plan == want_plan
+    got = sess.infer_step(buf, valid)
+    np.testing.assert_array_equal(np.asarray(got.predictions),
+                                  np.asarray(single.predictions))
+    assert (np.asarray(got.predictions)[6:] == -1).all()
+    np.testing.assert_allclose(np.asarray(got.e_clause_lanes),
+                               np.asarray(single.e_clause_lanes),
+                               rtol=1e-4, atol=0.0)
+    np.testing.assert_allclose(np.asarray(got.e_class_lanes),
+                               np.asarray(single.e_class_lanes),
+                               rtol=1e-4, atol=0.0)
+    np.testing.assert_array_equal(np.asarray(got.e_clause_lanes)[6:], 0.0)
+
+
+@multi_device
+def test_packed_predict_parity_on_mesh():
+    """Unmetered packed predict from a sharded topology matches the
+    unpacked einsum oracle on argmax (quantization preserves the CSA
+    decisions; sharding preserves the quantized physics)."""
+    mesh = _mesh_or_skip(2)
+    lit, sys_ = _make_system(16, 300, 120, 7, 4, 80, 3, 40, 4, 30, seed=43)
+    sharded = sys_.compile(RuntimeSpec(
+        backend="xla", packing="2bit", metering="off",
+        topology=Topology(mesh=mesh)))
+    assert sharded.plan == (True, True)
+    base = sys_.compile(RuntimeSpec(backend="xla", metering="off"))
+    np.testing.assert_array_equal(
+        np.asarray(sharded.predict(lit).predictions),
+        np.asarray(base.predict(lit).predictions))
+
+
+@multi_device
 def test_engine_on_sharded_mesh_bills_exactly():
     """IMPACTEngine serving from a sharded session: predictions match the
     single-device direct path and per-request energy attribution still
@@ -383,6 +437,21 @@ SMOKE = textwrap.dedent("""
     np.testing.assert_allclose(np.asarray(fu.e_class_lanes),
                                np.asarray(st.e_class_lanes), rtol=1e-5)
     np.testing.assert_array_equal(np.asarray(fu.e_clause_lanes)[9:], 0.0)
+
+    # packed (2-bit) operands ride the same psum lowering: sharded packed
+    # session == single-device packed kernel, preds and lane bills alike
+    pk_one = base.compile(RuntimeSpec(backend="pallas-packed",
+                                      packing="2bit", metering="fused",
+                                      capacity=16)).infer_step(buf, vd)
+    pk_mesh = base.compile(RuntimeSpec(backend="xla", packing="2bit",
+                                       metering="fused", capacity=16,
+                                       topology=Topology(mesh=mesh))
+                           ).infer_step(buf, vd)
+    np.testing.assert_array_equal(np.asarray(pk_mesh.predictions),
+                                  np.asarray(pk_one.predictions))
+    np.testing.assert_allclose(np.asarray(pk_mesh.e_clause_lanes),
+                               np.asarray(pk_one.e_clause_lanes),
+                               rtol=1e-4, atol=0.0)
     print("SHARDED_SMOKE_OK", jax.device_count())
 """)
 

@@ -139,6 +139,52 @@ def test_fused_metered_matches_staged_and_oracle(B, K, n, M, R, tr, C, tc,
                                rtol=1e-5)
 
 
+@pytest.mark.parametrize("B,K,n,M,R,tr,C,tc,S,sr", SHARD_SHAPES)
+def test_packed_backend_argmax_parity_with_int8(B, K, n, M, R, tr, C, tc,
+                                                S, sr):
+    """The compressed-datapath acceptance sweep: ``packing="2bit"``
+    through the ``pallas-packed`` backend agrees on argmax with the int8
+    fused kernel AND the einsum oracle across every shard layout — the
+    quantized clause operand preserves all CSA decisions."""
+    lit, sys_ = _make_system(B, K, n, M, R, tr, C, tc, S, sr, seed=41)
+    preds = {}
+    for backend, packing in (("pallas", "none"),
+                             ("pallas-packed", "2bit"),
+                             ("xla", "none")):
+        sess = sys_.compile(RuntimeSpec(backend=backend, packing=packing,
+                                        metering="off"))
+        preds[backend] = np.asarray(sess.predict(lit).predictions)
+    np.testing.assert_array_equal(preds["pallas-packed"], preds["pallas"])
+    np.testing.assert_array_equal(preds["pallas-packed"], preds["xla"])
+
+
+def test_packed_session_fused_metering_matches_staged():
+    """Packed sessions bill the QUANTIZED currents: the in-kernel packed
+    meters must agree with the staged path (which dequantizes the same
+    operand) lane for lane."""
+    lit, sys_ = _make_system(16, 300, 77, 3, 2, 150, 3, 30, 5, 16, seed=43)
+    buf = np.ones((16, 300), np.int8)
+    buf[:11] = np.asarray(lit[:11], np.int8)
+    valid = np.zeros((16,), bool)
+    valid[:11] = True
+    sessions = {
+        mode: sys_.compile(RuntimeSpec(backend="pallas-packed",
+                                       packing="2bit", metering=mode,
+                                       capacity=16))
+        for mode in ("fused", "staged")}
+    res = {mode: s.infer_step(buf, valid) for mode, s in sessions.items()}
+    np.testing.assert_array_equal(np.asarray(res["fused"].predictions),
+                                  np.asarray(res["staged"].predictions))
+    np.testing.assert_allclose(np.asarray(res["fused"].e_clause_lanes),
+                               np.asarray(res["staged"].e_clause_lanes),
+                               rtol=1e-4, atol=0.0)
+    np.testing.assert_allclose(np.asarray(res["fused"].e_class_lanes),
+                               np.asarray(res["staged"].e_class_lanes),
+                               rtol=1e-4, atol=0.0)
+    np.testing.assert_array_equal(
+        np.asarray(res["fused"].e_clause_lanes)[11:], 0.0)
+
+
 def test_metered_backend_scores_identical_to_unmetered():
     """The registered ``pallas-metered`` lowering is the SAME datapath
     with meters riding along: plain fused_impact scores through it are
