@@ -277,6 +277,58 @@ def check_serve(serve: dict) -> list[str]:
     return failures
 
 
+def check_multi_tenant(serve: dict) -> list[str]:
+    """Gate the multi-tenant model-zoo claims: co-resident argmax parity
+    against the per-tenant oracle, tenant-pure billing (bill sums ==
+    shared batch meter), strictly fewer fused sweeps than N independent
+    per-tenant engines on the same trace, and SLO-class ordering (gold
+    p99 below standard p99 — priority admission + immediate firing must
+    actually buy latency)."""
+    mt = serve.get("multi_tenant")
+    if mt is None:
+        return ["serve: BENCH_serve.json has no multi_tenant section "
+                "(benchmarks/impact_throughput.py did not run the "
+                "model-zoo sweep)"]
+    failures = []
+    mism = mt.get("parity_mismatches")
+    if mism != 0:
+        failures.append(
+            f"multi_tenant: {mism} co-resident predictions diverge from "
+            f"the per-tenant single-session oracle "
+            f"(of {mt.get('parity_checked', '?')} checked)")
+    rel = mt.get("billing_rel_err", float("inf"))
+    if not rel < 1e-9:
+        failures.append(
+            f"multi_tenant: per-tenant bill sums drift {rel:.3e} from "
+            f"the shared batch meter (>= 1e-9) — billing is not "
+            f"tenant-pure")
+    sweeps = mt.get("sweeps", {})
+    co = sweeps.get("coresident", float("inf"))
+    per = sweeps.get("per_tenant_engines", 0)
+    if not co < per:
+        failures.append(
+            f"multi_tenant: co-resident serving took {co} sweeps vs "
+            f"{per} for per-tenant engines — crossbar co-residency is "
+            f"not coalescing work")
+    slo = mt.get("per_slo", {})
+    gold = slo.get("gold", {}).get("p99_s")
+    std = slo.get("standard", {}).get("p99_s")
+    if gold is None or std is None:
+        failures.append(
+            f"multi_tenant: missing per-SLO p99 (classes present: "
+            f"{sorted(slo)}) — need both 'gold' and 'standard'")
+    else:
+        print(f"  multi-tenant p99: gold {gold * 1e3:.2f} ms, standard "
+              f"{std * 1e3:.2f} ms; sweeps {co} coresident vs {per} "
+              f"per-tenant engines")
+        if not gold < std:
+            failures.append(
+                f"multi_tenant: gold p99 {gold:.4f}s is not below "
+                f"standard p99 {std:.4f}s — SLO classes are not "
+                f"differentiating service")
+    return failures
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("current", help="BENCH_throughput.json from this run")
@@ -302,7 +354,9 @@ def main(argv: list[str] | None = None) -> int:
     failures += check_sharded(current)
     if args.serve:
         with open(args.serve) as f:
-            failures += check_serve(json.load(f))
+            serve = json.load(f)
+        failures += check_serve(serve)
+        failures += check_multi_tenant(serve)
     if failures:
         print("\nPERF GATE FAILED:")
         for msg in failures:

@@ -81,7 +81,8 @@ from repro.core import CoTMConfig
 from repro.impact import (IMPACTConfig, RuntimeSpec, Topology, build_system)
 from repro.impact.costmodel import bench_section, bytes_per_sweep
 from repro.train.compression import prune_clauses
-from repro.serve import IMPACTEngine, poisson_arrivals, replay_trace
+from repro.serve import (IMPACTEngine, ModelZoo, SLOClass, poisson_arrivals,
+                         replay_trace, replay_zoo_trace)
 
 BATCH_SIZES = (32, 128, 512)
 QUICK_BATCH_SIZES = (8, 32)
@@ -369,6 +370,144 @@ def serve_comparison(system, cfg, *, n_requests: int, rate_rps: float,
     return out
 
 
+def multi_tenant_sweep(*, n_tenants: int, n_requests: int, rate_rps: float,
+                       capacity: int, seed: int,
+                       trace_dir: pathlib.Path | None = None) -> dict:
+    """Mixed Poisson traffic over a co-resident model zoo (>= 8 tenants,
+    two SLO classes) vs N independent per-tenant engines.
+
+    Three gated claims land in the ``multi_tenant`` section of
+    ``BENCH_serve.json``:
+
+    * **parity_mismatches == 0** — every co-resident sweep's prediction
+      equals the per-tenant single-session oracle (checked exhaustively
+      on a deterministic pass before the timed replay);
+    * **billing_rel_err < 1e-9** — the per-tenant bill sums reproduce
+      the shared batch meter (tenant-pure energy attribution);
+    * **sweeps.coresident < sweeps.per_tenant_engines** — the shared
+      block-diagonal grid serves the same trace in strictly fewer fused
+      sweeps than one engine per tenant (the co-residency payoff).
+
+    Per-SLO-class p99 comes from the zoo's tenant-threaded ledger; with
+    ``trace_dir`` the replay lands ``SERVE_multitenant.trace.json`` (one
+    Perfetto process track per tenant) as a CI artifact.
+    """
+    rng = np.random.default_rng(seed)
+    # Small per-tenant CoTMs with distinct class counts; the combined
+    # block-diagonal grid stays inside one tile (the co-residency
+    # builder's constraint).
+    systems, cfgs = [], []
+    for t in range(n_tenants):
+        cfg, params = _random_cotm(jax.random.key(100 + t), K=128, n=48,
+                                   m=4 + t % 4, density=0.08)
+        systems.append(build_system(
+            params, cfg, jax.random.key(200 + t),
+            IMPACTConfig(variability=False, finetune=False)))
+        cfgs.append(cfg)
+    gold = SLOClass(name="gold", priority=0, max_wait_s=0.0)
+    std = SLOClass(name="standard", priority=1, target_occupancy=0.5,
+                   max_wait_s=0.02)
+    slo_of = lambda t: gold if t < 2 else std
+    spec = RuntimeSpec(backend="xla", metering="staged")
+    zoo = ModelZoo.build(
+        [(f"t{t}", s, slo_of(t)) for t, s in enumerate(systems)],
+        spec, capacity=capacity, clock=time.monotonic)
+    zoo.warmup()
+
+    # Oracle sessions + deterministic parity pass: mixed batches through
+    # the shared grid, every prediction against the standalone session.
+    oracle = [s.compile(dataclasses.replace(spec, capacity=1))
+              for s in systems]
+    tenant_of, rows = [], []
+    for i in range(n_requests):
+        t = int(rng.integers(n_tenants))
+        tenant_of.append(t)
+        rows.append((rng.random(cfgs[t].n_literals) < 0.5).astype(np.int8))
+    mismatches = 0
+    rid_to_idx = {}
+    for i, (t, row) in enumerate(zip(tenant_of, rows)):
+        rid_to_idx[zoo.submit(f"t{t}", row)] = i
+    done = dict(zoo.drain())
+    for rid, pred in done.items():
+        i = rid_to_idx[rid]
+        t = tenant_of[i]
+        ref = int(np.asarray(oracle[t].predict(
+            rows[i][None, :]).predictions)[0])
+        mismatches += int(pred != ref)
+    st = zoo.stats()
+    bill = sum(v["e_read_j"] for v in st["per_tenant"].values())
+    meter = st["energy"].read_energy_j
+    billing_rel_err = abs(bill - meter) / max(meter, 1e-300)
+
+    # Timed replay of one mixed Poisson trace -> per-SLO p99 + the
+    # co-resident sweep count.
+    arrivals = poisson_arrivals(n_requests, rate_rps, seed=seed)
+    reqs = [(f"t{t}", row) for t, row in zip(tenant_of, rows)]
+    sweeps0 = zoo.resident_sweeps + zoo.standby_sweeps
+    rec0 = len(zoo.request_records)
+    trace_path = (str(trace_dir / "SERVE_multitenant.trace.json")
+                  if trace_dir is not None else None)
+    replay = replay_zoo_trace(zoo, reqs, arrivals, trace_path=trace_path)
+    coresident_sweeps = (zoo.resident_sweeps + zoo.standby_sweeps
+                         - sweeps0)
+    # Per-SLO-class tails over the TIMED replay only (the parity pass
+    # above also lands in the zoo's lifetime ledger).
+    from repro.serve import latency_percentiles
+    slo_name = {f"t{t}": slo_of(t).name for t in range(n_tenants)}
+    slo_lat: dict[str, list[float]] = {}
+    for r in zoo.request_records[rec0:]:
+        slo_lat.setdefault(slo_name[r.tenant], []).append(r.latency_s)
+    per_slo = {name: dict(priority=(gold if name == "gold"
+                                    else std).priority,
+                          **latency_percentiles(lat))
+               for name, lat in slo_lat.items()}
+
+    # Baseline: the same per-tenant sub-traces through N independent
+    # engines (same capacity/policy knobs), counting their sweeps.
+    per_engine_sweeps = 0
+    for t in range(n_tenants):
+        idx = [i for i in range(n_requests) if tenant_of[i] == t]
+        if not idx:
+            continue
+        slo = slo_of(t)
+        eng = IMPACTEngine(
+            systems[t].compile(dataclasses.replace(spec,
+                                                   capacity=capacity)),
+            max_wait_s=slo.max_wait_s,
+            target_occupancy=slo.target_occupancy,
+            clock=time.monotonic)
+        eng.warmup()
+        sub_arrivals = arrivals[idx] - arrivals[idx[0]]
+        replay_trace(eng, np.stack([rows[i] for i in idx]), sub_arrivals)
+        per_engine_sweeps += len(eng.batch_stats)
+
+    out = dict(
+        n_tenants=n_tenants, n_requests=n_requests, rate_rps=rate_rps,
+        capacity=capacity, seed=seed, impl=spec.backend,
+        parity_checked=len(done), parity_mismatches=mismatches,
+        billing_rel_err=billing_rel_err,
+        sweeps=dict(coresident=coresident_sweeps,
+                    per_tenant_engines=per_engine_sweeps),
+        completed=replay["completed"], shed=replay["shed"],
+        samples_per_s=replay["samples_per_s"],
+        per_slo={name: dict(priority=d["priority"], p50_s=d["p50_s"],
+                            p99_s=d["p99_s"], n=d["n"])
+                 for name, d in per_slo.items()},
+        per_tenant={tid: dict(completed=d["completed"], shed=d["shed"],
+                              e_read_j=d["e_read_j"])
+                    for tid, d in replay["zoo"]["per_tenant"].items()},
+    )
+    if trace_path is not None:
+        out["trace_path"] = trace_path
+    for name, d in sorted(per_slo.items()):
+        emit(f"impact_multitenant/{name}", d["p99_s"] * 1e6,
+             f"n={d['n']}")
+    emit("impact_multitenant/sweeps",
+         float(coresident_sweeps),
+         f"vs {per_engine_sweeps} per-tenant")
+    return out
+
+
 def main(quick: bool = False, json_dir: pathlib.Path | None = None) -> None:
     json_dir = pathlib.Path(json_dir) if json_dir else ARTIFACTS
     json_dir.mkdir(parents=True, exist_ok=True)
@@ -398,6 +537,9 @@ def main(quick: bool = False, json_dir: pathlib.Path | None = None) -> None:
         n_requests=80 if quick else 256,
         rate_rps=300.0, capacity=16 if quick else 32,
         flush_wait_s=0.05, seed=0, trace_dir=json_dir)
+    serve["multi_tenant"] = multi_tenant_sweep(
+        n_tenants=8, n_requests=96 if quick else 320,
+        rate_rps=400.0, capacity=16, seed=0, trace_dir=json_dir)
     with open(json_dir / "BENCH_serve.json", "w") as f:
         json.dump(serve, f, indent=2, sort_keys=True)
 

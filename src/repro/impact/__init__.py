@@ -1,8 +1,9 @@
 from .costmodel import CostEstimate, SweepCostModel
 from .energy import EnergyReport
 from .pipeline import IMPACTConfig, IMPACTSystem, build_system
-from .runtime import (InferenceResult, InferenceSession, RuntimeSpec,
-                      SpecDeprecationWarning, Topology)
+from .runtime import (CoResidentPlan, InferenceResult, InferenceSession,
+                      RuntimeSpec, SpecDeprecationWarning, TenantSpan,
+                      Topology, build_coresident)
 from .tiles import (ClassTile, ClauseTile, encode_class_tile,
                     encode_clause_tile, weight_targets)
 from .yflash import (DeviceVariation, G_HCS_BOOL, G_LCS, I_CSA_THRESHOLD,
@@ -11,8 +12,8 @@ from .yflash import (DeviceVariation, G_HCS_BOOL, G_LCS, I_CSA_THRESHOLD,
 __all__ = [
     "CostEstimate", "SweepCostModel",
     "EnergyReport", "IMPACTConfig", "IMPACTSystem", "build_system",
-    "InferenceResult", "InferenceSession", "RuntimeSpec",
-    "SpecDeprecationWarning", "Topology",
+    "CoResidentPlan", "InferenceResult", "InferenceSession", "RuntimeSpec",
+    "SpecDeprecationWarning", "TenantSpan", "Topology", "build_coresident",
     "ClassTile", "ClauseTile", "encode_class_tile", "encode_clause_tile",
     "weight_targets", "DeviceVariation", "G_HCS_BOOL", "G_LCS",
     "I_CSA_THRESHOLD", "erase_pulse", "program_pulse", "pulse_until",

@@ -43,6 +43,7 @@ import numpy as np
 
 from ..kernels import backends
 from ..kernels import packing as packing_mod
+from ..kernels import ref as kernels_ref
 from ..sharding import crossbar as crossbar_sh
 from . import energy as energy_mod
 from .energy import EnergyReport
@@ -96,6 +97,81 @@ class Topology:
 
 
 @dataclasses.dataclass(frozen=True)
+class TenantSpan:
+    """Half-open block spans of ONE resident tenant inside a co-resident
+    combined grid: literal rows ``[lit_lo, lit_hi)``, clause columns
+    ``[col_lo, col_hi)``, class columns ``[cls_lo, cls_hi)``.  Produced
+    by ``build_coresident`` — the spans ARE the block-diagonal placement,
+    and everything off-block is 0 A by construction."""
+    lit_lo: int
+    lit_hi: int
+    col_lo: int
+    col_hi: int
+    cls_lo: int
+    cls_hi: int
+
+    def __post_init__(self):
+        for lo, hi, what in ((self.lit_lo, self.lit_hi, "literal"),
+                             (self.col_lo, self.col_hi, "clause"),
+                             (self.cls_lo, self.cls_hi, "class")):
+            if not 0 <= lo < hi:
+                raise ValueError(f"tenant {what} span [{lo}, {hi}) is "
+                                 f"empty or negative")
+
+
+@dataclasses.dataclass(frozen=True)
+class CoResidentPlan:
+    """Hashable placement of T tenants on one shared crossbar grid.
+
+    Ordered, non-overlapping ``TenantSpan`` blocks; tenant t's *model
+    id* is its index here, and a co-resident session's executables take
+    a per-lane ``model_ids`` (B,) int32 operand selecting which tenant
+    each slot-table lane belongs to.  A frozen ``RuntimeSpec`` carries
+    the plan (``coresident=``), so session caching and retrace guards
+    work unchanged.
+    """
+    spans: tuple[TenantSpan, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "spans", tuple(self.spans))
+        if not self.spans:
+            raise ValueError("a CoResidentPlan needs at least one tenant")
+        for a, b in zip(self.spans, self.spans[1:]):
+            if (b.lit_lo < a.lit_hi or b.col_lo < a.col_hi
+                    or b.cls_lo < a.cls_hi):
+                raise ValueError(
+                    "tenant spans must be ordered and non-overlapping "
+                    f"(got {a} then {b})")
+
+    @property
+    def n_tenants(self) -> int:
+        return len(self.spans)
+
+    @property
+    def clause_spans(self) -> tuple[tuple[int, int], ...]:
+        return tuple((s.col_lo, s.col_hi) for s in self.spans)
+
+    @property
+    def class_spans(self) -> tuple[tuple[int, int], ...]:
+        return tuple((s.cls_lo, s.cls_hi) for s in self.spans)
+
+    @property
+    def literal_spans(self) -> tuple[tuple[int, int], ...]:
+        return tuple((s.lit_lo, s.lit_hi) for s in self.spans)
+
+    def validate_against(self, system) -> None:
+        last = self.spans[-1]
+        if (last.lit_hi > system.n_literals
+                or last.col_hi > system.n_clauses
+                or last.cls_hi > system.n_classes):
+            raise ValueError(
+                f"co-resident plan {last} exceeds the combined grid "
+                f"(K={system.n_literals}, n={system.n_clauses}, "
+                f"M={system.n_classes}) — compile the plan against the "
+                f"system build_coresident returned it with")
+
+
+@dataclasses.dataclass(frozen=True)
 class RuntimeSpec:
     """Declarative, hashable description of ONE inference runtime.
 
@@ -134,6 +210,13 @@ class RuntimeSpec:
     backends unpack inside the kernel.  Argmax parity with the unpacked
     path holds on every backend and shard plan (the CSA decision bits
     survive quantization); ``"none"`` (default) is the f32 datapath.
+
+    ``coresident`` (a ``CoResidentPlan`` from ``build_coresident``)
+    compiles the MULTI-TENANT datapath: the system is a block-diagonal
+    combined grid, every executable takes a per-lane ``model_ids``
+    operand, predictions are tenant-LOCAL (argmax restricted to the
+    lane's own class span), and per-lane meters are tenant-pure.
+    Composes with ``packing="2bit"`` and all four shard plans.
     """
     backend: str = "pallas"
     topology: Topology = Topology()
@@ -143,6 +226,7 @@ class RuntimeSpec:
     interpret: bool | None = None
     capacity: int | None = None
     batch_sizes: tuple[int, ...] = ()
+    coresident: CoResidentPlan | None = None
 
     def __post_init__(self):
         if self.metering not in METERING_MODES:
@@ -204,6 +288,17 @@ class InferenceSession:
                 f"topology demands shard={top.shard!r} but neither the "
                 f"spec nor the system provides a mesh")
         self._nonempty = system._nonempty_eff()
+        # Co-residency: the spec's plan is validated against the combined
+        # grid once, and the tenant span tables become small embedded
+        # constants of every executable (the per-lane model_ids operand
+        # indexes them at run time).
+        self.coresident = spec.coresident
+        if self.coresident is not None:
+            self.coresident.validate_against(system)
+            self._clause_spans = jnp.asarray(self.coresident.clause_spans,
+                                             jnp.int32)
+            self._class_spans = jnp.asarray(self.coresident.class_spans,
+                                            jnp.int32)
         # Compile-time packing: the quantized clause operand is built
         # ONCE here (concrete arrays), so every executable of this
         # session takes the 2-bit codes + levels instead of the f32
@@ -267,28 +362,64 @@ class InferenceSession:
                     bytes_accessed=float(ca.get("bytes accessed", 0.0)))
 
     # -- entry points -------------------------------------------------------
-    def predict(self, literals) -> InferenceResult:
-        """Fast path: fused crossbar->CSA->class-sum scores + argmax."""
+    def _model_ids(self, model_ids, batch: int) -> Array | None:
+        """Canonicalize the per-lane tenant selector: required (and only
+        accepted) on a co-resident session."""
+        if self.coresident is None:
+            if model_ids is not None:
+                raise ValueError(
+                    "model_ids= only applies to a co-resident session "
+                    "(RuntimeSpec(coresident=...))")
+            return None
+        if model_ids is None:
+            raise ValueError(
+                "a co-resident session needs model_ids (B,) int32 — "
+                "which tenant does each lane belong to?")
+        mids = jnp.asarray(model_ids, jnp.int32)
+        if mids.shape != (batch,):
+            raise ValueError(f"model_ids shape {mids.shape} does not "
+                             f"match the batch ({batch},)")
+        return mids
+
+    def predict(self, literals, model_ids=None) -> InferenceResult:
+        """Fast path: fused crossbar->CSA->class-sum scores + argmax.
+
+        On a co-resident session ``model_ids`` (B,) int32 selects each
+        lane's tenant; predictions are tenant-LOCAL class indices and
+        ``scores`` is the combined (B, M_total) current vector (zero
+        outside each lane's own class span).
+        """
         lits = self._lits(literals)
+        mids = self._model_ids(model_ids, lits.shape[0])
         exe = self._exe("predict", lits.shape[0])
-        preds, scores = exe(lits, *self._operands())
+        if mids is None:
+            preds, scores = exe(lits, *self._operands())
+        else:
+            preds, scores = exe(lits, mids, *self._operands())
         return InferenceResult(predictions=preds, scores=scores)
 
-    def infer_step(self, literals, valid) -> InferenceResult:
+    def infer_step(self, literals, valid, model_ids=None) -> InferenceResult:
         """One scheduler sweep over a fixed-capacity slot buffer.
 
         ``valid`` (B,) marks occupied lanes; invalid lanes predict the
         sentinel -1 and bill exactly zero.  Per-lane read energies are
         zeros when the spec's metering is ``"off"`` (fused-kernel path).
+        On a co-resident session ``model_ids`` selects each lane's
+        tenant and predictions are tenant-local.
         """
         lits = self._lits(literals)
         v = jnp.asarray(valid, jnp.bool_)
+        mids = self._model_ids(model_ids, lits.shape[0])
         exe = self._exe("infer_step", lits.shape[0])
-        preds, e_cl, e_cs = exe(lits, v, *self._operands())
+        if mids is None:
+            preds, e_cl, e_cs = exe(lits, v, *self._operands())
+        else:
+            preds, e_cl, e_cs = exe(lits, v, mids, *self._operands())
         return InferenceResult(predictions=preds, e_clause_lanes=e_cl,
                                e_class_lanes=e_cs)
 
-    def infer_with_report(self, literals, valid=None) -> InferenceResult:
+    def infer_with_report(self, literals, valid=None,
+                          model_ids=None) -> InferenceResult:
         """Metered inference with the paper's batch-level ``EnergyReport``
         — a single fused pass under ``metering="fused"``, the staged
         per-shard path under ``"staged"`` (same joules either way).
@@ -304,9 +435,14 @@ class InferenceSession:
         B = lits.shape[0]
         v_np = (np.ones((B,), bool) if valid is None
                 else np.asarray(valid, bool))
+        mids = self._model_ids(model_ids, B)
         exe = self._exe("infer_with_report", B)
-        preds, i_cl_sum, i_cs_sum = exe(lits, jnp.asarray(v_np),
-                                        *self._operands())
+        if mids is None:
+            preds, i_cl_sum, i_cs_sum = exe(lits, jnp.asarray(v_np),
+                                            *self._operands())
+        else:
+            preds, i_cl_sum, i_cs_sum = exe(lits, jnp.asarray(v_np), mids,
+                                            *self._operands())
         sys_ = self.system
         e_clause = float(V_READ * i_cl_sum * T_READ)
         e_class = float(V_READ * i_cs_sum * T_READ)
@@ -344,6 +480,8 @@ class InferenceSession:
         n = batch * self.system.n_literals * jnp.dtype(LITERAL_DTYPE).itemsize
         if entry != "predict":
             n += batch * jnp.dtype(jnp.bool_).itemsize      # valid mask
+        if self.coresident is not None:
+            n += batch * jnp.dtype(jnp.int32).itemsize      # model_ids
         for op in self._operands():
             n += op.size * op.dtype.itemsize
         return int(n)
@@ -361,6 +499,22 @@ class InferenceSession:
         lit = jax.ShapeDtypeStruct((batch, sys_.n_literals), LITERAL_DTYPE)
         valid = jax.ShapeDtypeStruct((batch,), jnp.bool_)
         consts = self._operands()
+        if self.coresident is not None:
+            # Co-resident executables take the per-lane tenant selector
+            # as one extra runtime operand, between the masks and the
+            # weight-side constants.
+            mids = jax.ShapeDtypeStruct((batch,), jnp.int32)
+            if entry == "predict":
+                lowered = jax.jit(self._predict_fn).lower(lit, mids, *consts)
+            elif entry == "infer_step":
+                lowered = jax.jit(self._infer_step_fn).lower(
+                    lit, valid, mids, *consts)
+            elif entry == "infer_with_report":
+                lowered = jax.jit(self._report_fn).lower(
+                    lit, valid, mids, *consts)
+            else:
+                raise ValueError(f"unknown entry point {entry!r}")
+            return lowered.compile()
         if entry == "predict":
             lowered = jax.jit(self._predict_fn).lower(lit, *consts)
         elif entry == "infer_step":
@@ -469,29 +623,164 @@ class InferenceSession:
             fired, class_i, interpret=self.spec.interpret)
         return scores, i_clause.sum(axis=(1, 2, 3)), i_class.sum(axis=(1, 2))
 
-    def _predict_fn(self, literals, *operands):
+    # -- co-resident traced expressions -------------------------------------
+    def _co_lane_cols(self, model_ids):
+        """(B, n) per-lane clause-column ownership mask (the CSA gating
+        step of co-residency — see ``kernels.ref.coresident_lane_mask``)."""
+        return kernels_ref.coresident_lane_mask(
+            model_ids, self._clause_spans, self.system.n_clauses)
+
+    def _co_pred(self, scores, model_ids):
+        """Tenant-LOCAL argmax: restrict each lane's argmax to its own
+        class span and rebase to span-local indices, so a co-resident
+        lane predicts exactly what a standalone single-tenant session
+        would."""
+        lo = self._class_spans[model_ids, 0]
+        hi = self._class_spans[model_ids, 1]
+        col = jnp.arange(scores.shape[1], dtype=jnp.int32)[None, :]
+        mask = jnp.logical_and(col >= lo[:, None], col < hi[:, None])
+        masked = jnp.where(mask, scores, -jnp.inf)
+        return jnp.argmax(masked, axis=-1).astype(jnp.int32) - lo
+
+    def _co_scores_expr(self, literals, model_ids, *operands):
+        """Co-resident twin of ``_scores_expr``: the same three routings
+        (shard_map / packed / single-device) through the co-resident
+        registry primitives, which gate fired bits to each lane's own
+        clause-column span before the class stage."""
+        if self._packed is not None:
+            bits, levels, nonempty, class_i = operands
+            packed = packing_mod.PackedClause(bits=bits, levels=levels)
+            tr = self.system.clause_i.shape[2]
+            if self.plan is not None:
+                return crossbar_sh.fused_impact_shmap(
+                    literals, None, nonempty, class_i,
+                    thresh=I_CSA_THRESHOLD, mesh=self.mesh,
+                    impl=self.backend.name, interpret=self.spec.interpret,
+                    shard_r=self.plan[0], shard_s=self.plan[1],
+                    packed=packed, packed_tr=tr,
+                    lane_cols=self._co_lane_cols(model_ids))
+            return self.backend.fused_impact_coresident_packed(
+                literals, packed, nonempty, class_i, model_ids,
+                self._clause_spans, thresh=I_CSA_THRESHOLD, tr=tr,
+                interpret=self.spec.interpret)
+        clause_i, nonempty, class_i = operands
+        if self.plan is not None:
+            return crossbar_sh.fused_impact_shmap(
+                literals, clause_i, nonempty, class_i,
+                thresh=I_CSA_THRESHOLD, mesh=self.mesh,
+                impl=self.backend.name, interpret=self.spec.interpret,
+                shard_r=self.plan[0], shard_s=self.plan[1],
+                lane_cols=self._co_lane_cols(model_ids))
+        return self.backend.fused_impact_coresident(
+            literals, clause_i, nonempty, class_i, model_ids,
+            self._clause_spans, thresh=I_CSA_THRESHOLD,
+            interpret=self.spec.interpret)
+
+    def _co_metered_expr(self, literals, valid, model_ids, *operands):
+        """Metered co-resident core, mirroring ``_metered_expr``'s
+        routing.  Both metering modes bill identically here: on a mesh
+        the shard_map lowering meters the partial stages it materializes
+        anyway (the lane mask rides ``lane_cols``); off-mesh the fused
+        mode runs the co-resident registry primitive and masks invalid
+        lanes after (exact — meters are per-lane), while the staged
+        oracle masks fired bits before the class drive.  Valid lanes see
+        the identical composition either way, and both per-lane meters
+        are tenant-pure (foreign clause columns draw 0 A; the lane mask
+        runs before the class drive)."""
+        if self._packed is not None:
+            bits, levels, nonempty, class_i = operands
+            packed = packing_mod.PackedClause(bits=bits, levels=levels)
+            tr = self.system.clause_i.shape[2]
+            if self.plan is not None:
+                return crossbar_sh.fused_impact_shmap(
+                    literals, None, nonempty, class_i,
+                    thresh=I_CSA_THRESHOLD, mesh=self.mesh,
+                    impl=self.backend.name, interpret=self.spec.interpret,
+                    valid=valid, meter=True,
+                    shard_r=self.plan[0], shard_s=self.plan[1],
+                    packed=packed, packed_tr=tr,
+                    lane_cols=self._co_lane_cols(model_ids))
+            if self.spec.metering == "fused":
+                scores, i_cl, i_cs = (
+                    self.backend.fused_impact_coresident_packed_metered(
+                        literals, packed, nonempty, class_i, model_ids,
+                        self._clause_spans, thresh=I_CSA_THRESHOLD, tr=tr,
+                        interpret=self.spec.interpret))
+                v = valid.astype(scores.dtype)
+                return scores, i_cl * v, i_cs * v
+            operands = (packing_mod.dequant_clause(bits, levels, tr),
+                        nonempty, class_i)
+        clause_i, nonempty, class_i = operands
+        if self.plan is not None:
+            return crossbar_sh.fused_impact_shmap(
+                literals, clause_i, nonempty, class_i,
+                thresh=I_CSA_THRESHOLD, mesh=self.mesh,
+                impl=self.backend.name, interpret=self.spec.interpret,
+                valid=valid, meter=True,
+                shard_r=self.plan[0], shard_s=self.plan[1],
+                lane_cols=self._co_lane_cols(model_ids))
+        if self.spec.metering == "fused":
+            scores, i_cl, i_cs = self.backend.fused_impact_coresident_metered(
+                literals, clause_i, nonempty, class_i, model_ids,
+                self._clause_spans, thresh=I_CSA_THRESHOLD,
+                interpret=self.spec.interpret)
+            v = valid.astype(scores.dtype)
+            return scores, i_cl * v, i_cs * v
+        fired, i_clause = self.backend.impact_clause_bits(
+            literals, clause_i, nonempty, thresh=I_CSA_THRESHOLD,
+            interpret=self.spec.interpret)
+        fired = jnp.logical_and(fired, self._co_lane_cols(model_ids))
+        fired = jnp.logical_and(fired, valid[:, None])
+        i_clause = i_clause * valid[:, None, None, None]
+        scores, i_class = self.backend.impact_class_scores(
+            fired, class_i, interpret=self.spec.interpret)
+        return scores, i_clause.sum(axis=(1, 2, 3)), i_class.sum(axis=(1, 2))
+
+    def _predict_fn(self, literals, *args):
         self._traces["predict"] += 1
-        scores = self._scores_expr(literals, *operands)
+        if self.coresident is not None:
+            model_ids, *operands = args
+            scores = self._co_scores_expr(literals, model_ids, *operands)
+            return self._co_pred(scores, model_ids), scores
+        scores = self._scores_expr(literals, *args)
         return jnp.argmax(scores, axis=-1), scores
 
-    def _infer_step_fn(self, literals, valid, *operands):
+    def _infer_step_fn(self, literals, valid, *args):
         self._traces["infer_step"] += 1
         valid = valid.astype(bool)
+        if self.coresident is not None:
+            model_ids, *operands = args
+            if not self.meters_energy:
+                scores = self._co_scores_expr(literals, model_ids, *operands)
+                zeros = jnp.zeros((literals.shape[0],), jnp.float32)
+                return (jnp.where(valid, self._co_pred(scores, model_ids),
+                                  -1), zeros, zeros)
+            scores, i_cl, i_cs = self._co_metered_expr(
+                literals, valid, model_ids, *operands)
+            e_cl, e_cs = energy_mod.per_lane_read_energy(i_cl, i_cs)
+            return (jnp.where(valid, self._co_pred(scores, model_ids), -1),
+                    e_cl, e_cs)
         if not self.meters_energy:
-            scores = self._scores_expr(literals, *operands)
+            scores = self._scores_expr(literals, *args)
             zeros = jnp.zeros((literals.shape[0],), jnp.float32)
             return (jnp.where(valid, jnp.argmax(scores, axis=-1), -1),
                     zeros, zeros)
-        scores, i_cl, i_cs = self._metered_expr(literals, valid, *operands)
+        scores, i_cl, i_cs = self._metered_expr(literals, valid, *args)
         e_cl, e_cs = energy_mod.per_lane_read_energy(i_cl, i_cs)
         return (jnp.where(valid, jnp.argmax(scores, axis=-1), -1),
                 e_cl, e_cs)
 
-    def _report_fn(self, literals, valid, *operands):
+    def _report_fn(self, literals, valid, *args):
         self._traces["infer_with_report"] += 1
         valid = valid.astype(bool)
+        if self.coresident is not None:
+            model_ids, *operands = args
+            scores, i_cl_lane, i_cs_lane = self._co_metered_expr(
+                literals, valid, model_ids, *operands)
+            return (jnp.where(valid, self._co_pred(scores, model_ids), -1),
+                    i_cl_lane.sum(), i_cs_lane.sum())
         scores, i_cl_lane, i_cs_lane = self._metered_expr(
-            literals, valid, *operands)
+            literals, valid, *args)
         # Sentinel invalid lanes like infer_step does: the staged and
         # fused lowerings see different scores on an excluded lane (one
         # zeroes its clause drive, the other doesn't), so its argmax is
@@ -505,6 +794,91 @@ class InferenceSession:
                 f"packing={self.spec.packing!r}, "
                 f"capacity={self.spec.capacity}, "
                 f"compiled={self.compiled_shapes()})")
+
+
+def build_coresident(systems) -> tuple[Any, CoResidentPlan]:
+    """Pack several small single-tile systems block-diagonally onto ONE
+    shared crossbar grid -> ``(combined IMPACTSystem, CoResidentPlan)``.
+
+    Tenant t's clause grid occupies literal rows ``[lit_lo, lit_hi)`` x
+    clause columns ``[col_lo, col_hi)`` and its class grid clause rows
+    ``[col_lo, col_hi)`` x class columns ``[cls_lo, cls_hi)``; every
+    off-block cell holds 0 S / 0 A — a physically absent device — so
+    cross-tenant current leakage is exactly zero by construction, not
+    merely below a tolerance.  Member tile *padding* cells (rows/columns
+    beyond each member's true dims) are dropped: only the real
+    ``[:K_t, :n_t]`` / ``[:n_t, :M_t]`` regions are copied, which keeps
+    score and argmax parity with each standalone session exact (padding
+    rows float, padding columns never fire).
+
+    Members must be single-tile (R = C = S = 1): co-residency is the
+    many-small-models regime (IMBUE-style — several TM clause grids fit
+    one crossbar's footprint); a model big enough to shard has the whole
+    fabric to itself.  The combined grid must also still fit one tile of
+    the first member's ``IMPACTConfig``.
+
+    Compile with ``combined.compile(RuntimeSpec(coresident=plan, ...))``;
+    tenant t's lanes pass ``model_ids == t``.
+    """
+    systems = list(systems)
+    if not systems:
+        raise ValueError("build_coresident needs at least one system")
+    from .pipeline import IMPACTSystem  # avoid import cycle at module load
+
+    for i, s in enumerate(systems):
+        R, C = s.clause_i.shape[0], s.clause_i.shape[1]
+        S = s.class_i.shape[0]
+        if (R, C, S) != (1, 1, 1):
+            raise ValueError(
+                f"co-residency packs single-tile systems; member {i} has "
+                f"a (R={R}, C={C}, S={S}) shard grid — a model that "
+                f"large should own the fabric (shard it) instead of "
+                f"co-residing")
+    K_tot = sum(s.n_literals for s in systems)
+    n_tot = sum(s.n_clauses for s in systems)
+    M_tot = sum(s.n_classes for s in systems)
+    cfg = systems[0].cfg
+    if (K_tot > cfg.max_tile_rows or n_tot > cfg.max_tile_cols
+            or n_tot > cfg.max_class_rows):
+        raise ValueError(
+            f"combined co-resident grid (K={K_tot}, n={n_tot}) does not "
+            f"fit one tile (max_tile_rows={cfg.max_tile_rows}, "
+            f"max_tile_cols={cfg.max_tile_cols}, "
+            f"max_class_rows={cfg.max_class_rows}) — fewer residents per "
+            f"fabric, or bigger tiles")
+
+    clause_g = np.zeros((1, 1, K_tot, n_tot), np.float32)
+    clause_i = np.zeros((1, 1, K_tot, n_tot), np.float32)
+    nonempty = np.zeros((n_tot,), bool)
+    class_g = np.zeros((1, n_tot, M_tot), np.float32)
+    class_i = np.zeros((1, n_tot, M_tot), np.float32)
+    spans = []
+    k0 = c0 = m0 = 0
+    prog = erase = 0.0
+    for s in systems:
+        K, n, M = s.n_literals, s.n_clauses, s.n_classes
+        clause_g[0, 0, k0:k0 + K, c0:c0 + n] = np.asarray(
+            s.clause_g[0, 0, :K, :n])
+        clause_i[0, 0, k0:k0 + K, c0:c0 + n] = np.asarray(
+            s.clause_i[0, 0, :K, :n])
+        nonempty[c0:c0 + n] = np.asarray(s.nonempty[:n])
+        class_g[0, c0:c0 + n, m0:m0 + M] = np.asarray(s.class_g[0, :n, :M])
+        class_i[0, c0:c0 + n, m0:m0 + M] = np.asarray(s.class_i[0, :n, :M])
+        spans.append(TenantSpan(lit_lo=k0, lit_hi=k0 + K,
+                                col_lo=c0, col_hi=c0 + n,
+                                cls_lo=m0, cls_hi=m0 + M))
+        k0, c0, m0 = k0 + K, c0 + n, m0 + M
+        prog += float(s.encode_stats.get("program_energy_j", 0.0))
+        erase += float(s.encode_stats.get("erase_energy_j", 0.0))
+    combined = IMPACTSystem(
+        clause_g=jnp.asarray(clause_g), nonempty=jnp.asarray(nonempty),
+        class_g=jnp.asarray(class_g), clause_i=jnp.asarray(clause_i),
+        class_i=jnp.asarray(class_i), n_literals=K_tot, n_clauses=n_tot,
+        n_classes=M_tot, cfg=cfg,
+        encode_stats=dict(program_energy_j=prog, erase_energy_j=erase,
+                          coresident_members=len(systems)),
+        mesh=systems[0].mesh)
+    return combined, CoResidentPlan(spans=tuple(spans))
 
 
 def legacy_spec(*, impl: str | None = None, mesh=None,

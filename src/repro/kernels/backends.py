@@ -191,6 +191,88 @@ class Backend:
                                          interpret=interpret,
                                          block_b=block_b, block_n=block_n)
 
+    # -- crossbar co-residency (block-diagonal multi-tenant grids) ---------
+    def fused_impact_coresident(self, literals: Array, clause_i: Array,
+                                nonempty: Array, class_i: Array,
+                                model_ids: Array, clause_spans: Array, *,
+                                thresh: float,
+                                interpret: bool | None = None,
+                                block_b: int = 128,
+                                block_n: int = 256) -> Array:
+        """``fused_impact`` on a block-diagonal co-resident grid with a
+        per-lane tenant mask (``model_ids`` (B,) int32 indexing
+        ``clause_spans`` (T, 2) ``[lo, hi)`` clause-column spans).
+
+        A lane drives only its own tenant's literal rows, so foreign
+        clause columns draw exactly 0 A — but 0 A is below the CSA
+        threshold, so foreign nonempty columns would spuriously fire.
+        The mask, applied between the clause and class stages, gates
+        those bits off; with off-block cells at 0 A this makes
+        cross-tenant leakage exactly zero by construction (see
+        ``ref.coresident_lane_mask``).
+
+        Default composition from the staged primitives, so every
+        registered backend serves co-resident sweeps (the Pallas
+        backends ride their ``crossbar_mvm`` kernels through it); the
+        einsum oracle is ``ref.fused_impact_coresident_ref``.
+        """
+        fired, _ = self.impact_clause_bits(
+            literals, clause_i, nonempty, thresh=thresh, interpret=interpret)
+        fired = jnp.logical_and(
+            fired, ref.coresident_lane_mask(model_ids, clause_spans,
+                                            fired.shape[1]))
+        scores, _ = self.impact_class_scores(fired, class_i,
+                                             interpret=interpret)
+        return scores
+
+    def fused_impact_coresident_metered(
+            self, literals: Array, clause_i: Array, nonempty: Array,
+            class_i: Array, model_ids: Array, clause_spans: Array, *,
+            thresh: float, interpret: bool | None = None,
+            block_b: int = 128, block_n: int = 256,
+            ) -> tuple[Array, Array, Array]:
+        """Metered co-resident sweep, same triple as
+        ``fused_impact_metered``.  Both per-lane meters are tenant-pure:
+        the clause meter because foreign columns draw 0 A, the class
+        meter because the lane mask runs before the class drive."""
+        fired, i_col = self.impact_clause_bits(
+            literals, clause_i, nonempty, thresh=thresh, interpret=interpret)
+        fired = jnp.logical_and(
+            fired, ref.coresident_lane_mask(model_ids, clause_spans,
+                                            fired.shape[1]))
+        scores, i_cls = self.impact_class_scores(fired, class_i,
+                                                 interpret=interpret)
+        return scores, i_col.sum(axis=(1, 2, 3)), i_cls.sum(axis=(1, 2))
+
+    def fused_impact_coresident_packed(
+            self, literals: Array, packed: packing.PackedClause,
+            nonempty: Array, class_i: Array, model_ids: Array,
+            clause_spans: Array, *, thresh: float, tr: int,
+            interpret: bool | None = None, block_b: int = 128,
+            block_n: int = 256) -> Array:
+        """Co-resident sweep on a 2-bit packed clause operand:
+        dequantize and delegate, so ``packing="2bit"`` composes with
+        co-residency on every backend."""
+        clause_i = packing.dequant_clause(packed.bits, packed.levels, tr)
+        return self.fused_impact_coresident(
+            literals, clause_i, nonempty, class_i, model_ids, clause_spans,
+            thresh=thresh, interpret=interpret, block_b=block_b,
+            block_n=block_n)
+
+    def fused_impact_coresident_packed_metered(
+            self, literals: Array, packed: packing.PackedClause,
+            nonempty: Array, class_i: Array, model_ids: Array,
+            clause_spans: Array, *, thresh: float, tr: int,
+            interpret: bool | None = None, block_b: int = 128,
+            block_n: int = 256) -> tuple[Array, Array, Array]:
+        """Metered packed co-resident sweep (meters bill the quantized
+        currents, like ``fused_impact_packed_metered``)."""
+        clause_i = packing.dequant_clause(packed.bits, packed.levels, tr)
+        return self.fused_impact_coresident_metered(
+            literals, clause_i, nonempty, class_i, model_ids, clause_spans,
+            thresh=thresh, interpret=interpret, block_b=block_b,
+            block_n=block_n)
+
     # -- staged analog compositions (Fig. 14 per-shard unroll) -------------
     def impact_clause_bits(self, literals: Array, clause_i: Array,
                            nonempty: Array, *, thresh: float,

@@ -149,6 +149,71 @@ def fused_impact_packed_metered_ref(literals: Array, bits: Array,
                                     thresh=thresh)
 
 
+def coresident_lane_mask(model_ids: Array, clause_spans: Array,
+                         n: Array | int) -> Array:
+    """Per-lane ownership mask over the combined clause columns.
+
+    model_ids (B,) int32; clause_spans (T, 2) int32 rows of ``[lo, hi)``
+    clause-column spans per resident tenant -> (B, n) bool, True exactly
+    on lane b's own tenant's columns.
+
+    Physically this is the CSA gating step of co-residency: a lane only
+    drives its own tenant's literal rows (foreign literal slices float at
+    1), so every *foreign* clause column sees exactly 0 A — but 0 A is
+    below the CSA threshold, so a foreign nonempty column would read as
+    "fired" and spuriously drive foreign class rows.  Masking fired bits
+    to the lane's own span keeps the class stage — and hence the class
+    meter — tenant-pure, making cross-tenant leakage exactly zero by
+    construction rather than merely small.
+    """
+    lo = clause_spans[model_ids, 0][:, None]
+    hi = clause_spans[model_ids, 1][:, None]
+    col = jnp.arange(n, dtype=jnp.int32)[None, :]
+    return jnp.logical_and(col >= lo, col < hi)
+
+
+def fused_impact_coresident_ref(literals: Array, clause_i: Array,
+                                nonempty: Array, class_i: Array,
+                                model_ids: Array, clause_spans: Array, *,
+                                thresh: float) -> Array:
+    """Einsum oracle for the co-resident fused sweep.
+
+    Identical to ``fused_impact_ref`` on a block-diagonal combined grid,
+    plus the per-lane clause-column mask between the clause and class
+    stages.  Scores land only in each lane's own tenant's class columns;
+    every cross-tenant score entry is exactly 0.
+    """
+    fired, _ = impact_clause_bits_ref(literals, clause_i, nonempty,
+                                      thresh=thresh)
+    fired = jnp.logical_and(
+        fired, coresident_lane_mask(model_ids, clause_spans,
+                                    fired.shape[1]))
+    scores, _ = impact_class_scores_ref(fired, class_i)
+    return scores
+
+
+def fused_impact_coresident_metered_ref(
+        literals: Array, clause_i: Array, nonempty: Array, class_i: Array,
+        model_ids: Array, clause_spans: Array, *, thresh: float,
+        ) -> tuple[Array, Array, Array]:
+    """Metered co-resident oracle: ``(scores, e_clause (B,), e_class (B,))``
+    summed column currents per lane, same units as
+    ``fused_impact_metered_ref``.
+
+    Both meters are tenant-pure: the clause meter because foreign columns
+    draw exactly 0 A (their literal rows float), the class meter because
+    the lane mask zeroes foreign fired bits before they can drive class
+    rows.  Off-block cells of the combined grid hold 0 A and never bill.
+    """
+    fired, i_col = impact_clause_bits_ref(literals, clause_i, nonempty,
+                                          thresh=thresh)
+    fired = jnp.logical_and(
+        fired, coresident_lane_mask(model_ids, clause_spans,
+                                    fired.shape[1]))
+    scores, i_cls = impact_class_scores_ref(fired, class_i)
+    return scores, i_col.sum(axis=(1, 2, 3)), i_cls.sum(axis=(1, 2))
+
+
 def crossbar_mvm_ref(drive: Array, g: Array, *, v_read: float = 2.0,
                      nonlin: float = 1.5, cutoff: float = 10e-9) -> Array:
     """Analog crossbar column currents with the Y-Flash low-G nonlinearity.

@@ -1,14 +1,19 @@
 """Serving: prefill/decode engine, request batching + continuous-batching
-slot table, IMPACT crossbar inference, Chrome-tracing observability."""
+slot table, IMPACT crossbar inference, the multi-tenant model zoo, and
+Chrome-tracing observability."""
 from .engine import (Backpressure, BatchingQueue, Engine, Request,
                      ServeConfig, SlotTable, latency_percentiles)
 from .impact_engine import (BatchStats, IMPACTEngine, RequestRecord,
                             aggregate_reports, poisson_arrivals,
                             replay_trace)
-from .tracing import REQUEST_PHASES, Tracer, validate_events
+from .tracing import (PID_TENANT_BASE, REQUEST_PHASES, Tracer,
+                      validate_events)
+from .zoo import ModelZoo, SLOClass, TenantState, replay_zoo_trace
 
 __all__ = ["Engine", "ServeConfig", "BatchingQueue", "Request",
            "SlotTable", "Backpressure", "latency_percentiles",
            "IMPACTEngine", "BatchStats", "RequestRecord",
            "aggregate_reports", "poisson_arrivals", "replay_trace",
-           "Tracer", "validate_events", "REQUEST_PHASES"]
+           "ModelZoo", "SLOClass", "TenantState", "replay_zoo_trace",
+           "Tracer", "validate_events", "REQUEST_PHASES",
+           "PID_TENANT_BASE"]

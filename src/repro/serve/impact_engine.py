@@ -112,13 +112,16 @@ def aggregate_reports(reports: Sequence[EnergyReport]) -> EnergyReport:
 @dataclasses.dataclass
 class RequestRecord:
     """Per-request accounting: queue wait + service latency and the read
-    energy this request's datapoint drew on the crossbar."""
+    energy this request's datapoint drew on the crossbar.  ``tenant``
+    threads the owning tenant through the ledger (multi-tenant zoos);
+    the single-tenant engine records everything under ``"default"``."""
     rid: int
     arrived: float
     admitted: float
     completed: float
     pred: int
     e_read_j: float = 0.0
+    tenant: str = "default"
 
     @property
     def latency_s(self) -> float:
@@ -243,6 +246,11 @@ class IMPACTEngine:
                 raise ValueError(
                     f"max_batch={max_batch} does not match the session's "
                     f"compiled capacity {session.capacity}")
+        if session.coresident is not None:
+            raise ValueError(
+                "IMPACTEngine is the single-tenant front — a co-resident "
+                "session routes per-lane model ids and needs the "
+                "multi-tenant router (serve.zoo.ModelZoo)")
         self.session = session
         self.system = session.system
         self.impl = session.spec.backend
@@ -255,11 +263,6 @@ class IMPACTEngine:
         self.target_occupancy = target_occupancy
         self.queue_capacity = queue_capacity
         self.clock = clock
-        # One time source: span timestamps must be comparable with the
-        # RequestRecord ledger, so the tracer rides the engine's clock.
-        if trace is not None:
-            trace.clock = clock
-        self.trace = trace
         if mode == "flush":
             # Buckets above max_batch are unreachable (a flush never
             # exceeds max_batch and max_batch itself is always a bucket)
@@ -269,19 +272,63 @@ class IMPACTEngine:
                                   | {max_batch} if b <= max_batch)
         else:
             self.buckets = [max_batch]
-        self.queue = BatchingQueue(max_batch=max_batch, max_wait_s=max_wait_s,
-                                   clock=clock)
-        self.table = SlotTable(max_batch)
-        self._lane_lits = np.ones((max_batch, self.system.n_literals),
-                                  np.int8)
-        self.batch_stats: list[BatchStats] = []
-        self.reports: list[EnergyReport] = []
-        self.request_records: list[RequestRecord] = []
-        self._next_rid = 0
-        # Shapes the session compiled at build time start warm: the
-        # continuous sweep can never be cold on a session engine.
-        self._warm: set[int] = {b for (_, b)
-                                in session.compiled_shapes("infer_step")}
+        # The engine is the single-tenant special case of the model zoo:
+        # one tenant ("default") owning the whole grid, its SLO class
+        # carrying the engine's admission knobs.  Queue, slot table,
+        # lane buffer, and all ledgers live on the zoo; the engine
+        # exposes them as properties so existing callers (and the
+        # flush-mode scheduler below) see one state.
+        from .zoo import ModelZoo, SLOClass   # deferred: zoo imports us
+        slo = SLOClass(name="default", priority=0,
+                       target_occupancy=target_occupancy,
+                       max_wait_s=max_wait_s,
+                       queue_capacity=queue_capacity)
+        self._zoo = ModelZoo(session, [("default", slo)], clock=clock,
+                             trace=trace)
+
+    # -- zoo-backed state (the engine IS a one-tenant zoo) -------------------
+    @property
+    def queue(self) -> BatchingQueue:
+        return self._zoo.tenants[0].queue
+
+    @property
+    def table(self) -> SlotTable:
+        return self._zoo.table
+
+    @property
+    def _lane_lits(self) -> np.ndarray:
+        return self._zoo._lane_lits
+
+    @property
+    def batch_stats(self) -> list[BatchStats]:
+        return self._zoo.batch_stats
+
+    @property
+    def reports(self) -> list[EnergyReport]:
+        return self._zoo.reports
+
+    @property
+    def request_records(self) -> list[RequestRecord]:
+        return self._zoo.request_records
+
+    @property
+    def _next_rid(self) -> int:
+        return self._zoo._next_rid
+
+    @property
+    def _warm(self) -> set[int]:
+        return self._zoo._warm
+
+    @property
+    def trace(self) -> Tracer | None:
+        return self._zoo.trace
+
+    @trace.setter
+    def trace(self, tracer: Tracer | None) -> None:
+        # One time source: span timestamps must be comparable with the
+        # RequestRecord ledger, so the tracer rides the engine's clock
+        # (attach_trace re-clocks it).
+        self._zoo.attach_trace(tracer)
 
     def warmup(self) -> None:
         """Ensure every sweep shape this engine can fire is a compiled
@@ -302,30 +349,7 @@ class IMPACTEngine:
         would corrupt it; a rejected submit leaves queue and table
         untouched) and ``Backpressure`` when every slot is occupied and
         the admission queue is at ``queue_capacity``."""
-        lits = np.asarray(literals)
-        # NOT an assert: shape validation guards the persistent lane
-        # buffer and must survive ``python -O``.
-        if lits.shape != (self.system.n_literals,):
-            raise ValueError(
-                f"literals shape {lits.shape} does not match this "
-                f"engine's compiled request shape "
-                f"({self.system.n_literals},)")
-        # The engine can absorb (free slots + queue_capacity) requests
-        # before the next sweep; beyond that, shed load at the edge.
-        if (self.queue_capacity is not None
-                and len(self.queue.pending)
-                >= self.queue_capacity + self.table.free):
-            raise Backpressure(
-                f"{self.table.occupancy}/{self.table.capacity} slots busy "
-                f"and {len(self.queue.pending)} requests queued "
-                f"(queue_capacity={self.queue_capacity})")
-        rid = self._next_rid
-        self._next_rid += 1
-        # Stamp arrival on the engine's clock so staleness checks and
-        # latency records never mix time sources.
-        self.queue.add(Request(rid, lits.astype(np.int8), max_new=0,
-                               arrived=self.clock()))
-        return rid
+        return self._zoo.submit("default", literals)
 
     def try_submit(self, literals: np.ndarray) -> int | None:
         """``submit`` that signals backpressure as ``None`` instead of
@@ -358,95 +382,13 @@ class IMPACTEngine:
     # -- execution ----------------------------------------------------------
     def _execute(self, lits: Array, valid: np.ndarray, shape: int,
                  lanes: list[tuple[int, _Lane]]) -> list[tuple[int, int]]:
-        """Fire one crossbar sweep and do all per-step accounting."""
-        cold = shape not in self._warm
-        self._warm.add(shape)
-        occupancy = len(lanes) / shape
-        t0 = self.clock()
-        if self.trace is not None:
-            self.trace.begin("sweep", ts=t0, args=dict(
-                shape=shape, n_valid=len(lanes), occupancy=occupancy,
-                cold=cold, lanes=[i for i, _ in lanes]))
-        res = self.session.infer_step(lits, valid)
-        preds = np.asarray(jax.block_until_ready(res.predictions))
-        # float64 before the per-request clause+class add so the request
-        # bills sum to the (float64) batch meter, not to f32 rounding.
-        e_cl = np.asarray(res.e_clause_lanes, np.float64)
-        e_cs = np.asarray(res.e_class_lanes, np.float64)
-        t1 = self.clock()
-        dt = t1 - t0
-        if self.trace is not None:
-            self.trace.end("sweep", ts=t1)
-            self.trace.begin("billing", ts=t1,
-                             args=dict(n_requests=len(lanes)))
-        recs = [RequestRecord(
-            rid=lane.req.rid, arrived=lane.req.arrived,
-            admitted=lane.admitted, completed=t1, pred=int(preds[i]),
-            e_read_j=float(e_cl[i] + e_cs[i])) for i, lane in lanes]
-        self.request_records.extend(recs)
-        pct = latency_percentiles([r.latency_s for r in recs])
-        self.batch_stats.append(BatchStats(
-            bucket=shape, n_valid=len(recs), latency_s=dt,
-            samples_per_s=len(recs) / max(dt, 1e-9), cold=cold,
-            occupancy=occupancy,
-            p50_s=pct.get("p50_s", 0.0), p95_s=pct.get("p95_s", 0.0),
-            p99_s=pct.get("p99_s", 0.0)))
-        if self.meter_energy:
-            self.reports.append(self.system.step_report(e_cl, e_cs,
-                                                        len(recs)))
-        if self.trace is not None:
-            t2 = self.clock()
-            self.trace.end("billing", ts=t2)
-            # Per-request lifecycle spans, emitted only now that every
-            # timestamp is known — a written trace always balances.
-            for (i, _), r in zip(lanes, recs):
-                self.trace.request_spans(
-                    rid=r.rid, arrived=r.arrived, admitted=r.admitted,
-                    sweep_start=t0, sweep_end=t1, billed=t2, lane=i,
-                    shape=shape, args=dict(e_read_j=r.e_read_j,
-                                           pred=r.pred))
-        return [(r.rid, r.pred) for r in recs]
-
-    def _step_continuous(self, force: bool) -> list[tuple[int, int]]:
-        now = self.clock()
-        # Admission: refill free lanes from the queue FIFO.
-        admitted = []
-        for req in self.queue.take_n(self.table.free):
-            s = self.table.admit(_Lane(req, now))
-            self._lane_lits[s] = req.tokens
-            admitted.append(s)
-        if admitted and self.trace is not None:
-            self.trace.span("admission", now, self.clock(), args=dict(
-                lanes=admitted, occupancy=self.table.occupancy))
-        occ = self.table.occupancy
-        if occ == 0:
-            return []
-        # Staleness on ADMITTED time, matching the documented policy
-        # ("the oldest admitted request has waited max_wait_s"): queue
-        # wait is already bounded by backpressure, and counting it here
-        # made bursty arrivals fire premature partial sweeps the instant
-        # a long-queued request finally won a lane.
-        oldest = min(lane.admitted for _, lane in self.table.occupied())
-        # target_occupancy <= 1, so a full table always satisfies the
-        # occupancy clause; staleness fires partial sweeps.
-        if not (force
-                or occ >= self.capacity * self.target_occupancy
-                or (now - oldest) >= self.max_wait_s):
-            return []
-        lanes = list(self.table.occupied())
-        out = self._execute(jnp.asarray(self._lane_lits),
-                            self.table.valid_mask(), self.capacity, lanes)
-        # One sweep classifies every valid lane: release and reset them so
-        # the next step admits into clean (all-1, currentless) lanes.
-        t_rel = self.clock()
-        for i, _ in lanes:
-            self.table.release(i)
-            self._lane_lits[i] = 1
-        if self.trace is not None:
-            self.trace.span("release", t_rel, self.clock(), args=dict(
-                lanes=[i for i, _ in lanes],
-                occupancy=self.table.occupancy))
-        return out
+        """Fire one crossbar sweep and do all per-step accounting (on the
+        zoo's shared ledger path, under the engine's one tenant)."""
+        from .zoo import _ZooLane
+        tenant = self._zoo.tenants[0]
+        zlanes = [(i, _ZooLane(l.req, l.admitted, tenant))
+                  for i, l in lanes]
+        return self._zoo.execute_batch(lits, valid, shape, zlanes)
 
     def _step_flush(self, force: bool) -> list[tuple[int, int]]:
         if not (self.queue.ready() or (force and self.queue.pending)):
@@ -470,7 +412,7 @@ class IMPACTEngine:
         drain the tail of a run)."""
         if self.mode == "flush":
             return self._step_flush(force)
-        return self._step_continuous(force)
+        return self._zoo.step(force=force)
 
     def run(self, literals: np.ndarray) -> tuple[np.ndarray, dict]:
         """Serve a (B, K) request burst to completion; returns predictions
@@ -532,7 +474,16 @@ class IMPACTEngine:
 # -- arrival-trace replay (mixed-traffic benchmarking) ----------------------
 
 def poisson_arrivals(n: int, rate_rps: float, seed: int = 0) -> np.ndarray:
-    """Cumulative arrival offsets (seconds) of a seeded Poisson process."""
+    """Cumulative arrival offsets (seconds) of a seeded Poisson process.
+
+    ``rate_rps`` must be positive (it is the mean arrival rate; zero or
+    negative rates have no inter-arrival distribution) and ``n`` must be
+    non-negative — both raise ``ValueError`` instead of returning NaN/
+    empty-on-negative surprises from numpy."""
+    if rate_rps <= 0:
+        raise ValueError(f"rate_rps must be > 0, got {rate_rps}")
+    if n < 0:
+        raise ValueError(f"n must be >= 0, got {n}")
     rng = np.random.default_rng(seed)
     return np.cumsum(rng.exponential(1.0 / rate_rps, size=n))
 
@@ -588,7 +539,9 @@ def replay_trace(engine: IMPACTEngine, literals: np.ndarray,
             if engine.clock() == before:
                 raise RuntimeError(
                     "replay_trace requires a wall clock: the engine's "
-                    "injected clock did not advance across a sleep")
+                    "injected clock did not advance across a sleep — "
+                    "construct the engine with clock=time.monotonic (or "
+                    "another real clock) to replay traces")
     wall = engine.clock() - t0
     recs = engine.request_records[q0:]
     out = dict(mode=engine.mode, offered=n, shed=shed,

@@ -27,7 +27,10 @@ Design notes:
   always balances, even if the engine still holds queued work.
 * **Threading model.**  ``pid`` 0 is the engine (scheduler tid 0);
   ``pid`` 1 holds one tid per request (tid == rid).  Metadata events
-  name both so the viewer shows "scheduler" / "req N" tracks.
+  name both so the viewer shows "scheduler" / "req N" tracks.  Multi-
+  tenant producers (``serve.zoo``) claim one pid per tenant from
+  ``PID_TENANT_BASE`` up via ``name_process`` — one Perfetto track
+  group per tenant, request tids nested under it.
 
 The emitter is engine-agnostic on purpose: ``serve.impact_engine``
 threads it through the crossbar scheduler and ``serve.engine`` through
@@ -45,6 +48,9 @@ from typing import Any, Callable, Iterator
 
 PID_ENGINE = 0
 PID_REQUESTS = 1
+#: First pid available to per-tenant request tracks (``serve.zoo``): the
+#: zoo names pid ``PID_TENANT_BASE + model_id`` after each tenant.
+PID_TENANT_BASE = 2
 
 #: Span names of the per-request lifecycle, in timeline order.
 REQUEST_PHASES = ("queued", "admitted", "sweep", "billed")
@@ -63,23 +69,32 @@ class Tracer:
     def __post_init__(self):
         self.events: list[dict[str, Any]] = []
         self._named: set[tuple[int, int | None]] = set()
+        self._pid_names: dict[int, str] = {}
 
     def __len__(self) -> int:
         return len(self.events)
 
     # -- naming ------------------------------------------------------------
+    def name_process(self, pid: int, name: str) -> None:
+        """Claim a custom name for a process track (e.g. one per tenant:
+        ``name_process(PID_TENANT_BASE + t, f"tenant {tid}")``).  Must be
+        called before the first event on that pid; later calls on an
+        already-emitted pid are ignored (metadata is emitted once)."""
+        self._pid_names[pid] = name
+
     def _ensure_named(self, pid: int, tid: int) -> None:
         """Emit process/thread metadata once per track so the viewer
         labels the engine and request rows."""
         if (pid, None) not in self._named:
             self._named.add((pid, None))
-            name = "engine" if pid == PID_ENGINE else "requests"
+            name = self._pid_names.get(
+                pid, "engine" if pid == PID_ENGINE else "requests")
             self.events.append(dict(name="process_name", ph="M", pid=pid,
                                     tid=0, args=dict(name=name)))
         if (pid, tid) not in self._named:
             self._named.add((pid, tid))
             name = ("scheduler" if pid == PID_ENGINE and tid == 0
-                    else f"req {tid}" if pid == PID_REQUESTS
+                    else f"req {tid}" if pid >= PID_REQUESTS
                     else f"tid {tid}")
             self.events.append(dict(name="thread_name", ph="M", pid=pid,
                                     tid=tid, args=dict(name=name)))
@@ -140,22 +155,24 @@ class Tracer:
     def request_spans(self, *, rid: int, arrived: float, admitted: float,
                       sweep_start: float, sweep_end: float, billed: float,
                       lane: int, shape: int, args: dict | None = None,
-                      ) -> None:
+                      pid: int = PID_REQUESTS) -> None:
         """The per-request lifecycle as four contiguous spans on the
         request's own track.  ``queued`` + ``admitted`` + ``sweep`` is
         exactly ``RequestRecord.latency_s`` (same clock readings); the
         ``billed`` epilogue prices the host-side accounting after the
-        sweep returned."""
+        sweep returned.  ``pid`` selects the track group — the default
+        single-tenant "requests" process, or a per-tenant pid named via
+        ``name_process`` (the multi-tenant zoo)."""
         extra = dict(lane=lane, shape=shape)
         if args:
             extra.update(args)
-        self.span("queued", arrived, admitted, tid=rid, pid=PID_REQUESTS,
+        self.span("queued", arrived, admitted, tid=rid, pid=pid,
                   args=dict(rid=rid))
         self.span("admitted", admitted, sweep_start, tid=rid,
-                  pid=PID_REQUESTS, args=dict(lane=lane))
+                  pid=pid, args=dict(lane=lane))
         self.span("sweep", sweep_start, sweep_end, tid=rid,
-                  pid=PID_REQUESTS, args=extra)
-        self.span("billed", sweep_end, billed, tid=rid, pid=PID_REQUESTS)
+                  pid=pid, args=extra)
+        self.span("billed", sweep_end, billed, tid=rid, pid=pid)
 
     # -- rendering -----------------------------------------------------------
     def to_json(self) -> list[dict[str, Any]]:

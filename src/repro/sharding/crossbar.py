@@ -182,7 +182,8 @@ def fused_impact_shmap(literals: Array, clause_i: Array | None,
                        interpret: bool | None = None,
                        valid: Array | None = None, meter: bool = False,
                        shard_r: bool = True, shard_s: bool = True,
-                       packed=None, packed_tr: int | None = None):
+                       packed=None, packed_tr: int | None = None,
+                       lane_cols: Array | None = None):
     """Sharded analog inference: literals (B, K) -> class currents (B, M).
 
     Same contract as ``ops.fused_impact`` (which is the normal entry
@@ -202,6 +203,15 @@ def fused_impact_shmap(literals: Array, clause_i: Array | None,
     the packed operands ride the same psum lowering) and each device
     dequantizes only its local shards.  ``packed_tr`` is the unpacked
     per-shard row count; ``clause_i`` must be None in packed mode.
+
+    ``lane_cols`` (B, C*tc) bool is the co-residency tenant mask (see
+    ``kernels.ref.coresident_lane_mask``): ANDed into the fired bits
+    AFTER the cross-device violation psum and BEFORE the class drive,
+    so a lane's spuriously-fired foreign columns (0 A < CSA threshold)
+    never reach foreign class rows.  It shards over the batch axes like
+    ``valid`` and is replicated over ``model``, which composes with all
+    four shard plans unchanged — the clause psum is mask-independent and
+    the class psum sees already-masked drives.
     """
     B, K = literals.shape
     if packed is not None:
@@ -243,8 +253,11 @@ def fused_impact_shmap(literals: Array, clause_i: Array | None,
     ne = nonempty.astype(jnp.int8)
     vmask = (jnp.ones((B,), bool) if valid is None
              else valid.astype(bool))
+    lcols = (jnp.ones((B, n), bool) if lane_cols is None
+             else lane_cols.astype(bool))        # all-ones keeps one wiring
 
-    def local_fn(drive_loc, ci_loc, ne_loc, wi_loc, valid_loc, lv_loc):
+    def local_fn(drive_loc, ci_loc, ne_loc, wi_loc, valid_loc, lv_loc,
+                 lc_loc):
         # drive_loc (B_loc, R_loc, tr) — or (B_loc, R_loc, 4, tr4)
         # packed; ci_loc (R_loc, C, tr, tc) f32 — or (R_loc, C, tr4, tc)
         # uint8 packed codes with lv_loc the dequant levels; wi_loc
@@ -267,6 +280,7 @@ def fused_impact_shmap(literals: Array, clause_i: Array | None,
             viol = jax.lax.psum(viol, "model")
         fired = jnp.logical_and(viol == 0, ne_loc.astype(bool)[None, :])
         fired = jnp.logical_and(fired, valid_loc[:, None])
+        fired = jnp.logical_and(fired, lc_loc)  # co-residency tenant mask
 
         # Class stage: with S sharded, this device drives only its local
         # S_loc row-shards with the matching slice of clause bits and
@@ -311,8 +325,9 @@ def fused_impact_shmap(literals: Array, clause_i: Array | None,
                   P(None),
                   P("model" if shard_s else None, None, None),
                   P(bspec),
-                  P(None)),
+                  P(None),
+                  P(bspec, None)),
         out_specs=out_specs, check_vma=False)
     out = fn(drive, clause_op, ne, class_i.astype(jnp.float32), vmask,
-             levels)
+             levels, lcols)
     return out[0] if not meter else out

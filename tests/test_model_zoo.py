@@ -1,0 +1,430 @@
+"""Multi-tenant model zoo: co-resident builder/session parity, the
+tenant-aware router (priority admission, per-class SLO firing, per-tenant
+shed), tenant-pure billing, per-tenant trace tracks, standby/eviction/
+rebalance, and the single-tenant engine shim."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.impact import (CoResidentPlan, IMPACTConfig, RuntimeSpec,
+                          TenantSpan, build_coresident)
+from repro.serve import (Backpressure, IMPACTEngine, ModelZoo, SLOClass,
+                         Tracer, poisson_arrivals, replay_trace,
+                         replay_zoo_trace, validate_events)
+from repro.serve.tracing import PID_REQUESTS, PID_TENANT_BASE
+
+from test_fused_impact import _make_system
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+def member_systems(n_tenants=3, K=12, n=6, seed0=0):
+    """Small single-tile members with distinct class counts (so a routing
+    bug that mixes tenants cannot silently agree)."""
+    return [_make_system(4, K, n, 3 + i, 1, K, 1, n, 1, K, seed=seed0 + i)[1]
+            for i in range(n_tenants)]
+
+
+def standalone_pred(system, row):
+    sess = system.compile(RuntimeSpec(backend="xla", metering="staged",
+                                      capacity=1))
+    return int(np.asarray(sess.predict(row[None, :]).predictions)[0])
+
+
+def random_rows(systems, rng):
+    return [rng.integers(0, 2, size=s.n_literals).astype(np.int8)
+            for s in systems]
+
+
+# -- co-resident builder ------------------------------------------------------
+
+def test_build_coresident_block_diagonal_dims():
+    systems = member_systems(3)
+    combined, plan = build_coresident(systems)
+    assert combined.n_literals == sum(s.n_literals for s in systems)
+    assert combined.n_clauses == sum(s.n_clauses for s in systems)
+    assert combined.n_classes == sum(s.n_classes for s in systems)
+    assert plan.n_tenants == 3
+    # spans tile the combined grid in order, without overlap
+    assert plan.spans[0].lit_lo == 0
+    for a, b in zip(plan.spans, plan.spans[1:]):
+        assert b.lit_lo == a.lit_hi
+        assert b.col_lo == a.col_hi
+        assert b.cls_lo == a.cls_hi
+    last = plan.spans[-1]
+    assert (last.lit_hi, last.col_hi, last.cls_hi) == (
+        combined.n_literals, combined.n_clauses, combined.n_classes)
+    # off-block cells are exactly zero (no cross-tenant current paths)
+    ci = np.array(combined.clause_i[0, 0])
+    cs = np.array(combined.class_i[0])
+    for i, sp in enumerate(plan.spans):
+        blk = ci[sp.lit_lo:sp.lit_hi, sp.col_lo:sp.col_hi].copy()
+        ci[sp.lit_lo:sp.lit_hi, sp.col_lo:sp.col_hi] = 0.0
+        cs[sp.col_lo:sp.col_hi, sp.cls_lo:sp.cls_hi] = 0.0
+        assert blk.any()
+    assert not ci.any() and not cs.any()
+    assert combined.encode_stats["coresident_members"] == 3
+
+
+def test_build_coresident_rejects_sharded_members():
+    systems = member_systems(1, K=12, n=6)
+    sharded = _make_system(4, 24, 12, 3, 2, 12, 2, 6, 1, 24)[1]
+    with pytest.raises(ValueError, match="single-tile"):
+        build_coresident([systems[0], sharded])
+
+
+def test_build_coresident_rejects_oversized_grid():
+    big = member_systems(1, K=12, n=6)[0]
+    n_fit = big.cfg.max_tile_cols // big.n_clauses
+    with pytest.raises(ValueError, match="does not fit"):
+        build_coresident([big] * (n_fit + 1))
+
+
+def test_coresident_plan_validates_spans():
+    with pytest.raises(ValueError):
+        TenantSpan(0, 0, 0, 4, 0, 2)            # empty literal span
+    with pytest.raises(ValueError, match="at least one tenant"):
+        CoResidentPlan(spans=())
+    a = TenantSpan(0, 4, 0, 2, 0, 2)
+    overlap = TenantSpan(2, 8, 2, 4, 2, 4)      # literal overlap with a
+    with pytest.raises(ValueError):
+        CoResidentPlan(spans=(a, overlap))
+
+
+# -- co-resident session parity ----------------------------------------------
+
+@pytest.mark.parametrize("backend,packing", [
+    ("xla", "none"), ("pallas", "none"), ("pallas-packed", "2bit")])
+def test_coresident_session_matches_standalone(backend, packing):
+    systems = member_systems(3)
+    combined, plan = build_coresident(systems)
+    sess = combined.compile(RuntimeSpec(
+        backend=backend, packing=packing, metering="staged", capacity=6,
+        coresident=plan))
+    rng = np.random.default_rng(1)
+    rows = random_rows(systems, rng)
+    lits = np.ones((6, combined.n_literals), np.int8)
+    mids = np.zeros((6,), np.int32)
+    valid = np.zeros((6,), bool)
+    for i, (sp, row) in enumerate(zip(plan.spans, rows)):
+        lits[i, sp.lit_lo:sp.lit_hi] = row
+        mids[i] = i
+        valid[i] = True
+    res = sess.infer_step(lits, valid, model_ids=mids)
+    preds = np.asarray(res.predictions)
+    for i, (s, row) in enumerate(zip(systems, rows)):
+        assert preds[i] == standalone_pred(s, row)  # tenant-LOCAL classes
+    assert (preds[3:] == -1).all()                  # invalid-lane sentinel
+    e = np.asarray(res.e_clause_lanes) + np.asarray(res.e_class_lanes)
+    assert (e[3:] == 0.0).all()                     # padded lanes bill zero
+
+
+def test_coresident_session_requires_model_ids():
+    systems = member_systems(2)
+    combined, plan = build_coresident(systems)
+    sess = combined.compile(RuntimeSpec(backend="xla", capacity=4,
+                                        coresident=plan))
+    lits = np.ones((4, combined.n_literals), np.int8)
+    with pytest.raises(ValueError, match="model_ids"):
+        sess.infer_step(lits, np.ones((4,), bool))
+    plain = systems[0].compile(RuntimeSpec(backend="xla", capacity=4))
+    with pytest.raises(ValueError, match="co-resident"):
+        plain.infer_step(np.ones((4, systems[0].n_literals), np.int8),
+                         np.ones((4,), bool),
+                         model_ids=np.zeros((4,), np.int32))
+
+
+# -- zoo routing --------------------------------------------------------------
+
+def make_zoo(n_tenants=3, *, capacity=6, clock=None, trace=None,
+             slos=None, max_resident=None, standby_capacity=4,
+             standby_pool=2, backend="xla"):
+    systems = member_systems(n_tenants)
+    if slos is None:
+        slos = [SLOClass(name="standard", priority=1, max_wait_s=0.0)
+                for _ in systems]
+    zoo = ModelZoo.build(
+        [(f"t{i}", s, slo) for i, (s, slo) in enumerate(zip(systems, slos))],
+        RuntimeSpec(backend=backend, metering="staged"),
+        capacity=capacity, max_resident=max_resident,
+        standby_capacity=standby_capacity, standby_pool=standby_pool,
+        clock=clock if clock is not None else time.monotonic, trace=trace)
+    return zoo, systems
+
+
+def test_zoo_serves_all_tenants_with_parity():
+    zoo, systems = make_zoo(3)
+    rng = np.random.default_rng(2)
+    want = {}
+    for rep in range(3):
+        rows = random_rows(systems, rng)
+        for t, row in zip(zoo.tenants, rows):
+            want[zoo.submit(t.tid, row)] = standalone_pred(
+                systems[t.index], row)
+    got = dict(zoo.drain())
+    assert got == want
+    st = zoo.stats()
+    assert st["sweeps"]["standby"] == 0
+    for t in zoo.tenants:
+        assert st["per_tenant"][t.tid]["completed"] == 3
+
+
+def test_zoo_priority_orders_admission():
+    clk = FakeClock()
+    gold = SLOClass(name="gold", priority=0, max_wait_s=0.0)
+    std = SLOClass(name="standard", priority=1, max_wait_s=0.0)
+    # capacity 2 < offered 3: the gold tenant must win a lane even though
+    # it registered (and submitted) last.
+    zoo, systems = make_zoo(3, capacity=2, clock=clk,
+                            slos=[std, std, gold])
+    rng = np.random.default_rng(3)
+    rows = random_rows(systems, rng)
+    for t, row in zip(zoo.tenants, rows):
+        zoo.submit(t.tid, row)
+    done = zoo.step(force=True)
+    by_tenant = {zoo.request_records[-len(done) + i].tenant
+                 for i in range(len(done))}
+    assert "t2" in by_tenant                  # gold admitted first
+    assert len(done) == 2
+    done2 = zoo.step(force=True)
+    assert len(done2) == 1                    # leftover standard request
+
+
+def test_zoo_slo_firing_policy():
+    clk = FakeClock()
+    gold = SLOClass(name="gold", priority=0, max_wait_s=0.0)
+    bulk = SLOClass(name="bulk", priority=1, target_occupancy=1.0,
+                    max_wait_s=10.0)
+    zoo, systems = make_zoo(2, capacity=6, clock=clk, slos=[bulk, gold])
+    rng = np.random.default_rng(4)
+    rows = random_rows(systems, rng)
+    # A lone bulk request neither meets its occupancy target nor goes
+    # stale: the sweep defers.
+    zoo.submit("t0", rows[0])
+    assert zoo.step() == []
+    assert zoo.table.occupancy == 1
+    # One gold arrival satisfies ITS class (max_wait 0) -> the shared
+    # sweep fires, carrying the bulk lane along.
+    zoo.submit("t1", rows[1])
+    done = zoo.step()
+    assert len(done) == 2
+
+
+def test_zoo_per_tenant_shed_isolation():
+    clk = FakeClock()
+    bounded = SLOClass(name="bounded", priority=1, max_wait_s=10.0,
+                       target_occupancy=1.0, queue_capacity=1)
+    open_ = SLOClass(name="open", priority=1, max_wait_s=10.0,
+                     target_occupancy=1.0)
+    zoo, systems = make_zoo(2, capacity=3, clock=clk,
+                            slos=[bounded, open_])
+    rng = np.random.default_rng(5)
+    row0 = rng.integers(0, 2, size=systems[0].n_literals).astype(np.int8)
+    row1 = rng.integers(0, 2, size=systems[1].n_literals).astype(np.int8)
+    # Partially fill the shared table with the unbounded tenant (a full
+    # table would satisfy target_occupancy=1 and fire).
+    zoo.submit("t1", row1)
+    zoo.submit("t1", row1)
+    zoo.step()                                # admits, defers (no SLO met)
+    assert zoo.table.free == 1
+    # Bounded tenant absorbs queue_capacity + free slots = 2 ...
+    assert zoo.try_submit("t0", row0) is not None
+    assert zoo.try_submit("t0", row0) is not None
+    with pytest.raises(Backpressure):
+        zoo.submit("t0", row0)
+    # ... while the unbounded tenant keeps queueing.
+    assert zoo.try_submit("t1", row1) is not None
+    assert zoo.tenant("t0").shed == 0         # raise path doesn't count
+    assert zoo.try_submit("t0", row0) is None
+    assert zoo.tenant("t0").shed == 1
+
+
+def test_zoo_submit_validates_shape_and_tenant():
+    zoo, systems = make_zoo(2)
+    with pytest.raises(KeyError, match="unknown tenant"):
+        zoo.submit("nope", np.ones((systems[0].n_literals,), np.int8))
+    with pytest.raises(ValueError, match="shape"):
+        zoo.submit("t0", np.ones((systems[0].n_literals + 1,), np.int8))
+
+
+def test_zoo_billing_is_tenant_pure():
+    zoo, systems = make_zoo(3)
+    rng = np.random.default_rng(6)
+    for _ in range(4):
+        for t, row in zip(zoo.tenants, random_rows(systems, rng)):
+            zoo.submit(t.tid, row)
+        zoo.drain()
+    st = zoo.stats()
+    bill = sum(v["e_read_j"] for v in st["per_tenant"].values())
+    meter = st["energy"].read_energy_j
+    assert bill == pytest.approx(meter, rel=1e-9)
+    # each tenant's bill equals its standalone bill on the same rows
+    assert all(v["e_read_j"] > 0 for v in st["per_tenant"].values())
+
+
+def test_zoo_trace_per_tenant_tracks():
+    clk = FakeClock()
+    tr = Tracer(clock=clk)
+    zoo, systems = make_zoo(3, clock=clk, trace=tr)
+    rng = np.random.default_rng(7)
+    for t, row in zip(zoo.tenants, random_rows(systems, rng)):
+        clk.t += 0.001
+        zoo.submit(t.tid, row)
+    clk.t += 0.001
+    zoo.step(force=True)
+    events = tr.to_json()
+    validate_events(events)
+    pids = {e["pid"] for e in events if e.get("ph") != "M"}
+    # scheduler track + one process track per tenant, none on the shared
+    # single-tenant "requests" pid
+    assert {PID_TENANT_BASE + t.index for t in zoo.tenants} <= pids
+    assert PID_REQUESTS not in pids
+    names = {e["args"]["name"] for e in events
+             if e.get("ph") == "M" and e["name"] == "process_name"}
+    assert {"tenant t0", "tenant t1", "tenant t2"} <= names
+
+
+# -- standby pool / rebalance -------------------------------------------------
+
+def test_zoo_standby_serving_and_promotion():
+    zoo, systems = make_zoo(4, capacity=6, max_resident=2,
+                            standby_capacity=4, standby_pool=1)
+    assert [t.tid for t in zoo.tenants if t.resident] == ["t0", "t1"]
+    rng = np.random.default_rng(8)
+    rows = random_rows(systems, rng)
+    # standby tenants answer correctly from their dedicated sessions
+    for tid, sysi in (("t2", 2), ("t3", 3)):
+        rid = zoo.submit(tid, rows[sysi])
+        got = dict(zoo.drain())[rid]
+        assert got == standalone_pred(systems[sysi], rows[sysi])
+    assert zoo.stats()["sweeps"]["standby"] == 2
+    # pool of 1: serving t3 evicted t2's session
+    assert set(zoo._standby_sessions) == {"t3"}
+    # heavy t2 traffic then rebalance: t2 joins the resident set
+    for _ in range(20):
+        zoo.submit("t2", rows[2])
+        zoo.drain()
+    assert zoo.rebalance() is True
+    assert zoo.tenant("t2").resident
+    assert len([t for t in zoo.tenants if t.resident]) == 2
+    rid = zoo.submit("t2", rows[2])
+    assert dict(zoo.drain())[rid] == standalone_pred(systems[2], rows[2])
+
+
+def test_zoo_rebalance_requires_idle_table():
+    clk = FakeClock()
+    never = SLOClass(name="bulk", priority=1, target_occupancy=1.0,
+                     max_wait_s=10.0)
+    zoo, systems = make_zoo(3, capacity=6, max_resident=2, clock=clk,
+                            slos=[never] * 3)
+    rng = np.random.default_rng(9)
+    rows = random_rows(systems, rng)
+    for _ in range(8):
+        zoo.submit("t2", rows[2])
+    zoo.step(force=True)
+    zoo.submit("t0", rows[0])
+    zoo.step()                                 # admitted, sweep deferred
+    assert zoo.table.occupancy == 1
+    with pytest.raises(RuntimeError, match="idle"):
+        zoo.rebalance()
+    zoo.step(force=True)
+    assert zoo.rebalance() is True
+
+
+def test_zoo_coresident_fewer_sweeps_than_per_tenant_engines():
+    n_tenants, reps = 4, 3
+    zoo, systems = make_zoo(n_tenants)
+    rng = np.random.default_rng(10)
+    for _ in range(reps):
+        for t, row in zip(zoo.tenants, random_rows(systems, rng)):
+            zoo.submit(t.tid, row)
+        zoo.drain()
+    # One shared sweep per round vs one sweep per tenant per round.
+    assert zoo.resident_sweeps == reps
+    assert zoo.resident_sweeps < n_tenants * reps
+
+
+# -- replay + satellites ------------------------------------------------------
+
+def test_replay_zoo_trace_mixed_traffic(tmp_path):
+    zoo, systems = make_zoo(3)
+    rng = np.random.default_rng(11)
+    n = 24
+    reqs = []
+    for i in range(n):
+        t = zoo.tenants[int(rng.integers(len(zoo.tenants)))]
+        reqs.append((t.tid, rng.integers(
+            0, 2, size=t.n_literals).astype(np.int8)))
+    path = tmp_path / "zoo.trace.json"
+    out = replay_zoo_trace(zoo, reqs, poisson_arrivals(n, 400.0, seed=1),
+                           trace_path=str(path))
+    assert out["completed"] + out["shed"] == n
+    assert out["zoo"]["per_tenant"].keys() == {"t0", "t1", "t2"}
+    import json
+    validate_events(json.loads(path.read_text()))
+
+
+def test_replay_zoo_trace_frozen_clock_raises():
+    clk = FakeClock()
+    zoo, systems = make_zoo(2, clock=clk)
+    reqs = [("t0", np.ones((systems[0].n_literals,), np.int8))] * 2
+    never = SLOClass(name="bulk", priority=1, target_occupancy=1.0,
+                     max_wait_s=10.0)
+    for t in zoo.tenants:
+        t.slo = never                      # force the replay loop to idle
+    with pytest.raises(RuntimeError, match="time.monotonic"):
+        replay_zoo_trace(zoo, reqs, np.array([0.0, 10.0]))
+
+
+def test_poisson_arrivals_rejects_bad_args():
+    with pytest.raises(ValueError, match="rate_rps"):
+        poisson_arrivals(10, 0.0)
+    with pytest.raises(ValueError, match="rate_rps"):
+        poisson_arrivals(10, -1.0)
+    with pytest.raises(ValueError, match="n must be"):
+        poisson_arrivals(-1, 5.0)
+    assert poisson_arrivals(0, 5.0).shape == (0,)
+
+
+def test_replay_trace_frozen_clock_names_the_fix():
+    system = member_systems(1)[0]
+    clk = FakeClock()
+    eng = IMPACTEngine(system.compile(RuntimeSpec(backend="xla",
+                                                  capacity=4)),
+                       target_occupancy=1.0, max_wait_s=10.0, clock=clk)
+    lits = np.ones((2, system.n_literals), np.int8)
+    with pytest.raises(RuntimeError, match="time.monotonic"):
+        replay_trace(eng, lits, np.array([0.0, 10.0]))
+
+
+# -- single-tenant engine shim ------------------------------------------------
+
+def test_engine_is_one_tenant_zoo():
+    system = member_systems(1)[0]
+    eng = IMPACTEngine(system.compile(RuntimeSpec(backend="xla",
+                                                  metering="staged",
+                                                  capacity=4)))
+    assert len(eng._zoo.tenants) == 1
+    assert eng._zoo.tenants[0].slo.name == "default"
+    rid = eng.submit(np.ones((system.n_literals,), np.int8))
+    assert rid == 0
+    (rid2, pred), = eng.step(force=True)
+    assert rid2 == rid
+    assert eng.request_records[0].tenant == "default"
+    assert eng._zoo.standby_sweeps == 0
+
+
+def test_engine_rejects_coresident_session():
+    systems = member_systems(2)
+    combined, plan = build_coresident(systems)
+    sess = combined.compile(RuntimeSpec(backend="xla", capacity=4,
+                                        coresident=plan))
+    with pytest.raises(ValueError, match="ModelZoo"):
+        IMPACTEngine(sess)
