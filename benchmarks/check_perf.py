@@ -112,6 +112,37 @@ def check_sharded(current: dict) -> list[str]:
     return []
 
 
+def check_roofline(current: dict) -> list[str]:
+    """Require the roofline section (every run must place its compiled
+    executables on the roofline) and print it for the record — the
+    values themselves are NOT gated: CI interpret-mode-on-CPU achieved
+    fractions say nothing about TPU behaviour, the section exists so
+    the scoreboard is never silently dropped."""
+    roof = current.get("roofline")
+    if not roof:
+        return ["roofline: section missing from BENCH_throughput.json "
+                "(benchmarks/roofline.py impact_roofline must run in "
+                "every sweep)"]
+    sessions = roof.get("sessions", {})
+    if not sessions:
+        return ["roofline: section has no per-session rows"]
+    bad = [k for k, r in sessions.items()
+           if not all(key in r for key in
+                      ("intensity_flops_per_byte", "bound_side",
+                       "roofline_bound_samples_per_s"))]
+    if bad:
+        return [f"roofline: malformed rows (missing keys): {sorted(bad)}"]
+    print(f"  roofline ({roof.get('entry')}, peak {roof.get('peak_flops'):.3g}"
+          f" flop/s, hbm {roof.get('hbm_bw'):.3g} B/s):")
+    for key, r in sorted(sessions.items()):
+        ach = r.get("achieved_fraction")
+        print(f"    {key:14s} intensity {r['intensity_flops_per_byte']:8.2f} "
+              f"flop/B  bound={r['bound_side']:7s} "
+              f"cap {r['roofline_bound_samples_per_s']:12.3e} samples/s  "
+              f"achieved {'n/a' if ach is None else f'{ach:.2e}'}")
+    return []
+
+
 def check_metered(current: dict, min_fused_ratio: float = 0.25) -> list[str]:
     """Gate the in-kernel-metering sweep: the section is mandatory (the
     benchmark always produces it), the fused and staged meters must have
@@ -351,6 +382,7 @@ def main(argv: list[str] | None = None) -> int:
     failures += check_metered(current)
     failures += check_compressed(current)
     failures += check_cost_model(current)
+    failures += check_roofline(current)
     failures += check_sharded(current)
     if args.serve:
         with open(args.serve) as f:

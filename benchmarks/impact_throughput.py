@@ -76,6 +76,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .common import ARTIFACTS, emit
+from .roofline import impact_roofline
 
 from repro.core import CoTMConfig
 from repro.impact import (IMPACTConfig, RuntimeSpec, Topology, build_system)
@@ -525,6 +526,11 @@ def main(quick: bool = False, json_dir: pathlib.Path | None = None) -> None:
     # ratios check_perf.py gates per backend and metering mode.
     bench["predicted_vs_measured"] = bench_section(
         system, bench,
+        batch_sizes=QUICK_BATCH_SIZES if quick else BATCH_SIZES)
+    # Roofline placement of the same executables (XLA cost counters vs
+    # the v5e peaks) — recorded for the scoreboard, not gated.
+    bench["roofline"] = impact_roofline(
+        system, bench["results"],
         batch_sizes=QUICK_BATCH_SIZES if quick else BATCH_SIZES)
     sharded = sharded_sweep(cfg, params, quick=quick)
     if sharded is not None:            # multi-device hosts only

@@ -21,6 +21,13 @@ Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
 MODEL_FLOPS = 6 N_act D (train) / 2 N_act D (inference) + explicit
 attention terms; the ratio MODEL_FLOPS / HLO_flops exposes remat recompute,
 causal-mask waste and replicated attention (heads % 16 != 0).
+
+``impact_roofline`` is the IMPACT-session variant: it places every
+compiled session executable on the same v5e roofline from XLA's
+cost-analysis counters and records the achieved fraction against the
+measured throughput sweep (``benchmarks/impact_throughput.py`` embeds
+it as the ``roofline`` section of ``BENCH_throughput.json``;
+``check_perf.py`` requires the section but does not gate its values).
 """
 from __future__ import annotations
 
@@ -29,10 +36,6 @@ import pathlib
 import sys
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
-
-from repro.configs import ARCH_IDS, get_config  # noqa: E402
-from repro.models import build  # noqa: E402
-from repro.models.config import SHAPES  # noqa: E402
 
 ARTIFACTS = pathlib.Path(__file__).resolve().parents[1] / "artifacts"
 
@@ -44,6 +47,7 @@ LINK_BW = 50e9           # B/s / link
 def n_active(cfg) -> float:
     """Active (per-token matmul) params: excludes the embedding gather and
     scales routed experts by top_k/E (x capacity factor)."""
+    from repro.models import build
     model = build(cfg)
     n = float(model.n_params())
     n -= cfg.vocab * cfg.d_model * (cfg.n_codebooks
@@ -96,6 +100,7 @@ def model_flops(cfg, shape, n_chips: int) -> float:
 def analytic_memory_floor(cfg, shape, n_chips: int) -> float:
     """Per-device HBM bytes that MUST move: params (bf16) once + cache
     read/write (decode) or boundary activations (train/prefill)."""
+    from repro.models import build
     model = build(cfg)
     n = float(model.n_params())
     B, S = shape.global_batch, shape.seq_len
@@ -123,6 +128,8 @@ def load_cells(mesh_dir: str):
 
 
 def analyze(mesh_dir: str = "16x16"):
+    from repro.configs import get_config
+    from repro.models.config import SHAPES
     n_chips = 512 if mesh_dir == "2x16x16" else 256
     rows = []
     for rec in load_cells(mesh_dir):
@@ -161,6 +168,48 @@ def analyze(mesh_dir: str = "16x16"):
                 "temp_size_in_bytes", 0) / 2**30,
         ))
     return rows
+
+
+# -- IMPACT session roofline -------------------------------------------------
+
+def impact_roofline(system, throughput: dict, *, batch_sizes,
+                    entry: str = "predict") -> dict:
+    """Roofline placement of the compiled IMPACT sessions: per
+    (backend, batch) executable, XLA's own flops / bytes_accessed
+    counters -> arithmetic intensity, the TPU-v5e roofline bound on
+    samples/s, and the achieved fraction against the measured sweep.
+
+    Recorded, NOT gated: CI runs the kernels in interpret mode on CPU,
+    so achieved fractions are tiny and only the *shape* of the record
+    (intensity, bound side) is meaningful there.  On a real TPU the
+    same record becomes the optimization scoreboard.  ``throughput`` is
+    the ``results`` dict of ``throughput_sweep`` (measured samples/s
+    looked up per ``{impl}_b{B}`` key; missing keys record null).
+    """
+    from repro.impact import RuntimeSpec
+    rows = {}
+    for impl in ("xla", "pallas"):
+        session = system.compile(RuntimeSpec(backend=impl, metering="off"))
+        for B in batch_sizes:
+            ca = session.cost_analysis(entry, B)
+            flops, nbytes = ca["flops"], ca["bytes_accessed"]
+            t_c = flops / PEAK_FLOPS
+            t_m = nbytes / HBM_BW
+            t_bound = max(t_c, t_m)
+            measured = throughput.get(f"{impl}_b{B}", {}).get("samples_per_s")
+            rows[f"{impl}_b{B}"] = dict(
+                flops=flops, bytes_accessed=nbytes,
+                operand_bytes=session.input_bytes(entry, B),
+                intensity_flops_per_byte=(flops / nbytes if nbytes else 0.0),
+                bound_side=("compute" if t_c >= t_m else "memory"),
+                roofline_bound_samples_per_s=(B / t_bound if t_bound
+                                              else 0.0),
+                measured_samples_per_s=measured,
+                achieved_fraction=(measured * t_bound / B
+                                   if measured and t_bound else None),
+            )
+    return dict(peak_flops=PEAK_FLOPS, hbm_bw=HBM_BW, entry=entry,
+                sessions=rows)
 
 
 LEVERS = {

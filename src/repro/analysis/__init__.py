@@ -1,0 +1,37 @@
+"""Static-analysis subsystem: prove the datapath's invariants before it
+runs.
+
+Two layers, both driven by ``benchmarks/check_static.py`` and run in CI:
+
+* **Layer 1 — IR audit** (``analysis.ir_audit`` + ``analysis.vmem``):
+  walks the lowered StableHLO of every AOT ``InferenceSession``
+  executable and statically verifies the precision ladder (no f64
+  widening, no sub-f32 meter accumulation), the absence of host
+  callbacks / infeed / outfeed, a Pallas VMEM working-set estimate
+  against the spec's budget, and executable fingerprints against
+  committed baselines.  Entry point: ``InferenceSession.audit()``.
+
+* **Layer 2 — contract lint** (``analysis.lint``, stdlib ``ast`` only —
+  importable without jax): repo-specific rules ``IMPACT001``-``005``
+  distilled from recurring bug classes, with per-line waiver comments
+  (``# lint: waive IMPACTnnn -- reason``).
+
+``lint`` deliberately has no jax dependency so the CI hygiene job can
+run it before any jax install; importing THIS package pulls ``ir_audit``
+lazily for the same reason.
+"""
+from __future__ import annotations
+
+from . import lint  # stdlib-only, always safe
+
+__all__ = ["lint", "ir_audit", "vmem"]
+
+
+def __getattr__(name):
+    # ir_audit / vmem import jax; load them only when actually used so
+    # ``repro.analysis.lint`` works in jax-free environments (the CI
+    # hygiene job).
+    if name in ("ir_audit", "vmem"):
+        import importlib
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

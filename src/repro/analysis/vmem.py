@@ -1,0 +1,187 @@
+"""Pallas VMEM working-set estimator, derived from the kernels' BlockSpecs.
+
+A TPU core has ~16 MiB of VMEM; a Pallas kernel whose per-grid-step
+blocks (double-buffered by the pipeline) plus scratch accumulators
+exceed it OOMs at compile time *on the TPU* — which CPU CI, running the
+same kernels in interpret mode, can never see.  This module prices the
+working set STATICALLY, by mirroring the exact padding/tiling math of
+``kernels.backends`` (``_fused_impact_operands`` /
+``_fused_impact_packed_operands``) and the BlockSpecs of
+``kernels.fused_impact`` / ``kernels.crossbar_mvm``, so a block-shape or
+grid-geometry change that blows VMEM fails the IR-audit gate before any
+TPU exists to OOM (the static half of the ROADMAP's autotuning item).
+
+The block constants are imported from the kernel modules themselves —
+change ``BLOCK_B``/``BLOCK_N`` there and this estimate moves with it.
+
+Estimates are per-core upper bounds: a sharded topology only shrinks
+per-device operands, and interpret mode has no VMEM at all, so the
+estimate is conservative in both directions that matter.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+# The kernels package re-exports same-named entry FUNCTIONS
+# (kernels.fused_impact is the function, not the module), so bind the
+# block constants by module path.
+from ..kernels.crossbar_mvm import (BLOCK_B as _MVM_BLOCK_B,
+                                    BLOCK_K as _MVM_BLOCK_K,
+                                    BLOCK_N as _MVM_BLOCK_N)
+from ..kernels.fused_impact import (BLOCK_B as _FUSED_BLOCK_B,
+                                    BLOCK_N as _FUSED_BLOCK_N,
+                                    METER_LANES as _METER_LANES)
+
+#: ~VMEM per TensorCore on current TPUs (v4/v5e: 16 MiB; v5p: ~32).
+DEFAULT_VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+
+#: Pallas pipelines in/out blocks double-buffered (copy next while
+#: computing current); scratch accumulators are single-buffered.
+PIPELINE_BUFFERS = 2
+
+_F32 = 4
+_I8 = 1
+
+
+def _ceil_to(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkingSet:
+    """Per-grid-step VMEM footprint of one kernel variant.
+
+    ``blocks`` are the single-buffered in/out block sizes in bytes
+    (the pipeline holds ``PIPELINE_BUFFERS`` copies of each), ``scratch``
+    the VMEM scratch accumulators; ``total_bytes`` is the budgeted sum.
+    """
+    variant: str
+    blocks: dict[str, int]
+    scratch: dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return (PIPELINE_BUFFERS * sum(self.blocks.values())
+                + sum(self.scratch.values()))
+
+
+def fused_working_set(*, R: int, tr: int, n_clause: int, class_rows: int,
+                      M: int, metered: bool,
+                      block_b: int | None = None,
+                      block_n: int | None = None) -> WorkingSet:
+    """Working set of the fused IMPACT kernel (unpacked f32 operands),
+    mirroring ``PallasBackend._fused_impact_operands`` padding."""
+    block_b = block_b or _FUSED_BLOCK_B
+    block_n = block_n or _FUSED_BLOCK_N
+    N = max(n_clause, class_rows)
+    block_n = min(block_n, max(128, _ceil_to(N, 128)))
+    tr_pad = max(128, _ceil_to(tr, 128))
+    m_pad = _ceil_to(M, 128)
+    blocks = {
+        "drive": R * block_b * tr_pad * _F32,
+        "ccur": R * tr_pad * block_n * _F32,
+        "nonempty": block_n * _I8,
+        "wcur": block_n * m_pad * _F32,
+        "out": block_b * m_pad * _F32,
+    }
+    scratch = {"acc": block_b * m_pad * _F32}
+    if metered:
+        blocks["meter_out"] = block_b * _METER_LANES * _F32
+        scratch["macc"] = block_b * _METER_LANES * _F32
+    return WorkingSet("fused_impact_metered" if metered else "fused_impact",
+                      blocks, scratch)
+
+
+def packed_working_set(*, R: int, tr4: int, n_clause: int, class_rows: int,
+                       M: int, metered: bool,
+                       block_b: int | None = None,
+                       block_n: int | None = None) -> WorkingSet:
+    """Working set of the bitplane-packed fused kernel, mirroring
+    ``PackedPallasBackend._fused_impact_packed_operands`` padding.
+    ``tr4`` is the packed per-shard row count (4 cells/byte)."""
+    block_b = block_b or _FUSED_BLOCK_B
+    block_n = block_n or _FUSED_BLOCK_N
+    N = max(n_clause, class_rows)
+    block_n = min(block_n, max(128, _ceil_to(N, 128)))
+    tr4_pad = max(128, _ceil_to(tr4, 128))
+    m_pad = _ceil_to(M, 128)
+    blocks = {
+        "drive": R * 4 * block_b * tr4_pad * _F32,
+        "pbits": R * tr4_pad * block_n * _I8,
+        "levels": 128 * _F32,
+        "nonempty": block_n * _I8,
+        "wcur": block_n * m_pad * _F32,
+        "out": block_b * m_pad * _F32,
+    }
+    scratch = {"acc": block_b * m_pad * _F32}
+    if metered:
+        blocks["meter_out"] = block_b * _METER_LANES * _F32
+        scratch["macc"] = block_b * _METER_LANES * _F32
+    return WorkingSet(
+        "fused_impact_packed_metered" if metered else "fused_impact_packed",
+        blocks, scratch)
+
+
+def mvm_working_set(*, k_rows: int, block_b: int | None = None,
+                    block_n: int | None = None,
+                    block_k: int | None = None) -> WorkingSet:
+    """Working set of one staged ``crossbar_mvm`` call over ``k_rows``
+    drive rows (the Fig. 14 per-shard unroll runs one such kernel per
+    crossbar stage; each call's footprint is independent)."""
+    block_b = block_b or _MVM_BLOCK_B
+    block_n = block_n or _MVM_BLOCK_N
+    block_k = min(block_k or _MVM_BLOCK_K,
+                  max(128, _ceil_to(k_rows, 128)))
+    blocks = {
+        "drive": block_b * block_k * _F32,
+        "g": block_k * block_n * _F32,
+        "out": block_b * block_n * _F32,
+    }
+    scratch = {"acc": block_b * block_n * _F32}
+    return WorkingSet("crossbar_mvm", blocks, scratch)
+
+
+def session_working_set(session, entry: str) -> WorkingSet | None:
+    """The VMEM working set of the kernel variant the ``(session,
+    entry)`` pair actually lowers to, following the routing of
+    ``InferenceSession._scores_expr`` / ``_metered_expr``:
+
+    * reference (oracle) backends run no kernel -> ``None``;
+    * co-resident sessions and ``metering="staged"`` entries ride the
+      staged ``crossbar_mvm`` compositions -> the larger of the clause /
+      class stage calls;
+    * ``packing="2bit"`` on the ``pallas-packed`` backend -> the packed
+      kernel; on other Pallas backends the session dequantizes outside
+      and runs the unpacked kernel;
+    * ``metering="fused"`` entries (and everything on the always-metered
+      ``pallas-metered`` backend) -> the metered kernel variant.
+    """
+    backend = session.backend
+    if getattr(backend, "reference", False):
+        return None
+    spec = session.spec
+    sys_ = session.system
+    R, C, tr, tc = sys_.clause_i.shape
+    S, sr, M = sys_.class_i.shape
+    n_clause = C * tc
+
+    metered_entry = (entry in ("infer_step", "infer_with_report")
+                     and spec.metering != "off")
+    staged = metered_entry and spec.metering == "staged"
+    metered_kernel = ((metered_entry and spec.metering == "fused")
+                      or backend.name == "pallas-metered")
+
+    if session.coresident is not None or staged:
+        # Staged per-shard unroll: one crossbar_mvm per clause row-shard
+        # (tr drive rows) + one per class row-shard (sr drive rows).
+        clause = mvm_working_set(k_rows=tr)
+        klass = mvm_working_set(k_rows=sr)
+        return clause if clause.total_bytes >= klass.total_bytes else klass
+
+    if spec.packing == "2bit" and backend.name == "pallas-packed":
+        tr4 = session._packed.bits.shape[2]
+        return packed_working_set(R=R, tr4=tr4, n_clause=n_clause,
+                                  class_rows=S * sr, M=M,
+                                  metered=metered_kernel)
+    return fused_working_set(R=R, tr=tr, n_clause=n_clause,
+                             class_rows=S * sr, M=M, metered=metered_kernel)

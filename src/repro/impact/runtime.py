@@ -227,6 +227,9 @@ class RuntimeSpec:
     capacity: int | None = None
     batch_sizes: tuple[int, ...] = ()
     coresident: CoResidentPlan | None = None
+    #: VMEM budget (bytes/core) the static IR audit prices kernel
+    #: working sets against; None = analysis.vmem default (16 MiB).
+    vmem_budget_bytes: int | None = None
 
     def __post_init__(self):
         if self.metering not in METERING_MODES:
@@ -240,6 +243,9 @@ class RuntimeSpec:
                              f"got {self.packing!r}")
         if self.capacity is not None and self.capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {self.capacity}")
+        if self.vmem_budget_bytes is not None and self.vmem_budget_bytes < 1:
+            raise ValueError(f"vmem_budget_bytes must be >= 1, "
+                             f"got {self.vmem_budget_bytes}")
         object.__setattr__(self, "batch_sizes",
                            tuple(int(b) for b in self.batch_sizes))
         if any(b < 1 for b in self.batch_sizes):
@@ -307,6 +313,7 @@ class InferenceSession:
         self._packed = (packing_mod.pack_clause_operand(system.clause_i)
                         if spec.packing == "2bit" else None)
         self._exes: dict[tuple[str, int], Any] = {}
+        self._irs: dict[tuple[str, int], str] = {}
         self._traces: collections.Counter = collections.Counter()
         # Programming-time compilation: the serving sweep and any
         # declared predict shapes are executables before the first
@@ -360,6 +367,28 @@ class InferenceSession:
         ca = ca or {}
         return dict(flops=float(ca.get("flops", 0.0)),
                     bytes_accessed=float(ca.get("bytes accessed", 0.0)))
+
+    def ir_text(self, entry: str, batch: int) -> str:
+        """Lowered StableHLO of the ``(entry, batch)`` executable — the
+        exact artifact handed to XLA, captured at compile time.  Compiles
+        on demand like every other session access."""
+        self._exe(entry, batch)
+        return self._irs[(entry, batch)]
+
+    def audit(self, entry: str | None = None, batch: int | None = None, *,
+              baselines=None):
+        """Static IR audit of this session's executables (see
+        ``analysis.ir_audit``): precision ladder (no f64, no sub-f32
+        meters), host isolation (no callbacks/infeed/outfeed), Pallas
+        VMEM working set vs ``spec.vmem_budget_bytes``, and executable
+        fingerprints (diffed against ``baselines`` when given).  Audits
+        every compiled executable by default, or one ``(entry, batch)``
+        pair — compiling it on demand."""
+        from ..analysis import ir_audit as _ir_audit
+        if entry is not None and batch is not None:
+            self._exe(entry, batch)
+        return _ir_audit.audit_session(self, entry, batch,
+                                       baselines=baselines)
 
     # -- entry points -------------------------------------------------------
     def _model_ids(self, model_ids, batch: int) -> Array | None:
@@ -514,8 +543,7 @@ class InferenceSession:
                     lit, valid, mids, *consts)
             else:
                 raise ValueError(f"unknown entry point {entry!r}")
-            return lowered.compile()
-        if entry == "predict":
+        elif entry == "predict":
             lowered = jax.jit(self._predict_fn).lower(lit, *consts)
         elif entry == "infer_step":
             lowered = jax.jit(self._infer_step_fn).lower(lit, valid, *consts)
@@ -523,6 +551,10 @@ class InferenceSession:
             lowered = jax.jit(self._report_fn).lower(lit, valid, *consts)
         else:
             raise ValueError(f"unknown entry point {entry!r}")
+        # The lowered StableHLO is the artifact the static IR audit
+        # scans; keep the text (the Lowered object does not survive
+        # .compile()) so audits never retrace or recompile.
+        self._irs[(entry, batch)] = lowered.as_text()
         return lowered.compile()
 
     # The traced bodies below run ONLY inside ``.lower()`` — the trace

@@ -651,6 +651,24 @@ class PackedPallasBackend(PallasBackend):
 
 _REGISTRY: dict[str, Backend] = {}
 
+#: The primitive contract every registered backend must satisfy: the
+#: ops the session/entry points may route to.  ``Backend`` supplies
+#: working compositions for most, so subclasses only override what they
+#: specialize — but a registrant that *deletes* one of these (sets it to
+#: None, or shadows it with a non-callable) would fail at serving time;
+#: ``register_backend`` refuses it up front, and the IMPACT004 lint rule
+#: proves the same contract (plus signatures) statically.
+REQUIRED_PRIMITIVES: tuple[str, ...] = (
+    "resolve_interpret", "clause_eval", "class_sum",
+    "fused_cotm", "fused_impact", "fused_impact_metered",
+    "crossbar_mvm", "pack_clause_operand",
+    "fused_impact_packed", "fused_impact_packed_metered",
+    "fused_impact_coresident", "fused_impact_coresident_metered",
+    "fused_impact_coresident_packed",
+    "fused_impact_coresident_packed_metered",
+    "impact_clause_bits", "impact_class_scores",
+)
+
 
 def register_backend(backend: Backend, *, overwrite: bool = False) -> Backend:
     """Register a backend under ``backend.name``.  Registering is how a
@@ -659,6 +677,14 @@ def register_backend(backend: Backend, *, overwrite: bool = False) -> Backend:
     resolve through here, so no call site changes."""
     if not backend.name:
         raise ValueError("backend must define a non-empty .name")
+    missing = [p for p in REQUIRED_PRIMITIVES
+               if not callable(getattr(backend, p, None))]
+    if missing:
+        raise TypeError(
+            f"backend {backend.name!r} does not satisfy the primitive "
+            f"contract: {', '.join(missing)} "
+            f"{'is' if len(missing) == 1 else 'are'} missing or not "
+            f"callable (see backends.REQUIRED_PRIMITIVES)")
     if backend.name in _REGISTRY and not overwrite:
         raise ValueError(f"backend {backend.name!r} is already registered "
                          f"(pass overwrite=True to replace it)")

@@ -141,7 +141,12 @@ def _scatter_cache(cache, cache_axes, new_cache, src_rows, dst_rows):
     new_leaves = jax.tree.leaves(new_cache)
     ax_leaves = jax.tree.leaves(cache_axes,
                                 is_leaf=lambda x: isinstance(x, tuple))
-    assert len(leaves) == len(new_leaves) == len(ax_leaves)
+    if not len(leaves) == len(new_leaves) == len(ax_leaves):
+        raise ValueError(
+            f"cache pytrees disagree: {len(leaves)} cache leaves vs "
+            f"{len(new_leaves)} new-cache leaves vs {len(ax_leaves)} "
+            f"cache_axes leaves — the model's cache_axes() no longer "
+            f"mirrors its cache structure")
     src = jnp.asarray(src_rows)
     dst = jnp.asarray(dst_rows)
     out = []
@@ -238,10 +243,13 @@ class Engine:
 
         Returns ({rid: generated tokens (n_i, ...)}, stats).
         """
-        assert requests, "no requests"
+        if not requests:
+            raise ValueError("serve_continuous needs at least one request")
         S = requests[0].tokens.shape[0]
-        assert all(r.tokens.shape[0] == S for r in requests), \
-            "serve_continuous requires equal-length prompts"
+        if not all(r.tokens.shape[0] == S for r in requests):
+            raise ValueError(
+                "serve_continuous requires equal-length prompts (the "
+                "compiled prefill shape is shared across admissions)")
         axes = self.model.cache_axes()
         table = SlotTable(capacity)
         pending = collections.deque(requests)

@@ -96,7 +96,8 @@ def aggregate_reports(reports: Sequence[EnergyReport]) -> EnergyReport:
     aggregate it would shrink with the number of sweeps instead of
     describing the hardware — read it off the per-step reports (which
     carry the area), not the aggregate; the aggregate raises."""
-    assert reports, "no reports to aggregate"
+    if not reports:
+        raise ValueError("no reports to aggregate")
     return EnergyReport(
         read_energy_j=sum(r.read_energy_j for r in reports),
         clause_energy_j=sum(r.clause_energy_j for r in reports),
@@ -505,7 +506,10 @@ def replay_trace(engine: IMPACTEngine, literals: np.ndarray,
     replay.  Shed requests appear as ``shed`` instant events on the
     scheduler track."""
     n = len(arrivals)
-    assert literals.shape[0] >= n
+    if literals.shape[0] < n:
+        raise ValueError(
+            f"replay_trace needs one literal row per arrival: got "
+            f"{literals.shape[0]} rows for {n} arrivals")
     tracer = engine.trace
     if trace_path is not None and tracer is None:
         tracer = Tracer(clock=engine.clock)

@@ -668,7 +668,10 @@ def replay_zoo_trace(zoo: ModelZoo, requests: Sequence[tuple[str, Any]],
     ``trace_path`` writes the Chrome-tracing timeline (one Perfetto
     process track per tenant)."""
     n = len(arrivals)
-    assert len(requests) >= n
+    if len(requests) < n:
+        raise ValueError(
+            f"replay_zoo_trace needs one request per arrival: got "
+            f"{len(requests)} requests for {n} arrivals")
     tracer = zoo.trace
     if trace_path is not None and tracer is None:
         tracer = Tracer(clock=zoo.clock)

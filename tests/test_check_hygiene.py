@@ -48,16 +48,58 @@ def test_generated_paths_flagged():
     assert "tracing" in labels["somewhere/else/SERVE_flush.trace.json"]
 
 
+def test_gitignore_gaps():
+    """Every policed artifact class must have its ignore line; comments
+    and surrounding noise don't count as coverage."""
+    full = list(check_hygiene.REQUIRED_IGNORES)
+    assert check_hygiene.gitignore_gaps(full) == []
+    assert check_hygiene.gitignore_gaps(
+        full + ["# noise", "", "  *.tmp  "]) == []
+    missing_traces = [p for p in full if p != "*.trace.json"]
+    assert check_hygiene.gitignore_gaps(missing_traces) == ["*.trace.json"]
+    assert check_hygiene.gitignore_gaps(["# *.trace.json"]) == full
+
+
+def test_this_repo_gitignore_covers_required():
+    """The regression that motivated the check: three SERVE_*.trace.json
+    files sat tracked because .gitignore never matched traces.  The real
+    .gitignore must cover every policed class."""
+    repo = pathlib.Path(__file__).resolve().parent.parent
+    lines = (repo / ".gitignore").read_text().splitlines()
+    assert check_hygiene.gitignore_gaps(lines) == []
+
+
+def test_this_repo_tracks_no_serve_traces():
+    repo = pathlib.Path(__file__).resolve().parent.parent
+    res = subprocess.run(["git", "-C", str(repo), "ls-files",
+                          "artifacts/"], capture_output=True, text=True)
+    if res.returncode != 0:
+        import pytest
+        pytest.skip("not a git checkout")
+    assert [p for p in res.stdout.splitlines()
+            if p.endswith(".trace.json")] == []
+
+
 def test_main_against_a_real_repo(tmp_path, monkeypatch, capsys):
     """End to end on a throwaway git repo: clean tree exits 0; a tracked
-    artifact flips the exit code and prints a ::error annotation."""
+    artifact flips the exit code and prints a ::error annotation; a
+    .gitignore coverage gap flips it independently."""
     subprocess.run(["git", "init", "-q", str(tmp_path)], check=True)
     (tmp_path / "ok.py").write_text("x = 1\n")
-    subprocess.run(["git", "-C", str(tmp_path), "add", "ok.py"],
-                   check=True)
+    (tmp_path / ".gitignore").write_text(
+        "\n".join(check_hygiene.REQUIRED_IGNORES) + "\n")
+    subprocess.run(["git", "-C", str(tmp_path), "add", "ok.py",
+                    ".gitignore"], check=True)
     monkeypatch.chdir(tmp_path)
     assert check_hygiene.main() == 0
     assert "passed" in capsys.readouterr().out
+
+    (tmp_path / ".gitignore").write_text("*.pyc\n")   # coverage gap
+    assert check_hygiene.main() == 1
+    out = capsys.readouterr().out
+    assert "::error file=.gitignore::missing ignore pattern" in out
+    (tmp_path / ".gitignore").write_text(
+        "\n".join(check_hygiene.REQUIRED_IGNORES) + "\n")
 
     art = tmp_path / "artifacts"
     art.mkdir()

@@ -242,7 +242,7 @@ def test_engine_bills_from_fused_meters(small_system, backend):
 
 
 def test_aggregate_reports_requires_nonempty():
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="no reports"):
         aggregate_reports([])
 
 
