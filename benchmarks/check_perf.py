@@ -2,7 +2,8 @@
 
 Usage:
     python benchmarks/check_perf.py CURRENT.json BASELINE.json \
-        [--max-regression 0.30] [--serve BENCH_serve.json]
+        [--max-regression 0.30] [--serve BENCH_serve.json] \
+        [--train BENCH_train.json]
 
 Compares the ``normalized`` samples/s ratios of ``BENCH_throughput.json``
 (each path's samples/s divided by its impl family's in-run reference at
@@ -279,6 +280,68 @@ def check_cost_model(current: dict) -> list[str]:
     return failures
 
 
+def check_train(train: dict) -> list[str]:
+    """Gate the online-training benchmark (``BENCH_train.json``): the
+    Pallas feedback kernel must have walked a bit-identical TA trajectory
+    to the einsum oracle (``parity.exact`` — the draws are precomputed
+    operands, so this is equality, not a tolerance), held-out accuracy
+    after the interleaved run must clear the stored floor AND improve on
+    the deployment accuracy, the f64 per-update write bills must equal
+    the running meter and the aggregated report lane at 1e-9, per-request
+    read bills must have kept reconciling at 1e-9 while updates mutated
+    the fabric, and serving-only reports must bill exactly zero write
+    energy."""
+    failures = []
+    parity = train.get("parity", {})
+    if not parity.get("exact"):
+        failures.append(
+            "train: ta_feedback kernel and oracle TA trajectories "
+            "diverged (parity.exact is false) — the feedback primitive "
+            "lost bit-exactness")
+    online = train.get("online", {})
+    floor = train.get("acc_floor")
+    acc_b, acc_a = online.get("acc_before"), online.get("acc_after")
+    if acc_a is None or floor is None:
+        failures.append("train: online section missing acc_after/acc_floor")
+    else:
+        print(f"  train accuracy: {acc_b:.3f} -> {acc_a:.3f} after "
+              f"{online.get('n_updates', '?')} updates  floor {floor:.2f}  "
+              f"{'ok' if acc_a >= floor else 'FAIL'}")
+        if acc_a < floor:
+            failures.append(
+                f"train: held-out accuracy {acc_a:.3f} after online "
+                f"updates is below the floor {floor:.2f}")
+        if not acc_a > acc_b:
+            failures.append(
+                f"train: online updates did not improve held-out accuracy "
+                f"({acc_b:.3f} -> {acc_a:.3f})")
+    wm = train.get("write_meter", {})
+    rel = wm.get("rel_err", float("inf"))
+    agg, meter = wm.get("aggregate_j"), wm.get("running_meter_j")
+    print(f"  train write meter: {meter if meter is not None else '?'} J, "
+          f"per-update-sum rel err {rel:.3e}")
+    if not rel <= 1e-9:
+        failures.append(
+            f"train: f64 sum of per-update write bills drifts {rel:.3e} "
+            f"from the running write meter (> 1e-9)")
+    if agg != meter:
+        failures.append(
+            f"train: aggregated report write lane {agg} != running "
+            f"meter {meter}")
+    read_rel = train.get("read_billing", {}).get("max_rel_err",
+                                                 float("inf"))
+    if not read_rel <= 1e-9:
+        failures.append(
+            f"train: per-request read bills drifted {read_rel:.3e} from "
+            f"the batch meter during the interleaved run (> 1e-9)")
+    serving_w = train.get("serving_only", {}).get("write_energy_j")
+    if serving_w != 0.0:
+        failures.append(
+            f"train: serving-only report bills {serving_w} J of write "
+            f"energy (must be exactly 0.0)")
+    return failures
+
+
 def check_serve(serve: dict) -> list[str]:
     # A run where a scheduler completed nothing has no percentiles at
     # all — that is a gate failure to report, not a KeyError to crash
@@ -370,6 +433,9 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--serve", default=None,
                     help="BENCH_serve.json to gate the continuous-vs-flush "
                          "p95 invariant")
+    ap.add_argument("--train", default=None,
+                    help="BENCH_train.json to gate the online-training "
+                         "parity/accuracy/write-meter invariants")
     args = ap.parse_args(argv)
 
     with open(args.current) as f:
@@ -389,6 +455,10 @@ def main(argv: list[str] | None = None) -> int:
             serve = json.load(f)
         failures += check_serve(serve)
         failures += check_multi_tenant(serve)
+    if args.train:
+        with open(args.train) as f:
+            train = json.load(f)
+        failures += check_train(train)
     if failures:
         print("\nPERF GATE FAILED:")
         for msg in failures:

@@ -114,6 +114,10 @@ def run_audit(vmem_budget: int | None,
         if vmem_budget is not None:
             kw = dict(kw, vmem_budget_bytes=vmem_budget)
         session = system.compile(RuntimeSpec(**kw))
+        # The online-training feedback executable rides every
+        # non-co-resident session: audit it alongside the serving
+        # entries (batch 8 = the doubled 2B feedback row count).
+        session.warm(8, "ta_feedback")
         base = (baselines or {}).get(tag)
         rep = session.audit(baselines=base)
         report["sessions"][tag] = rep.to_json()

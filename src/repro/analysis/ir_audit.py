@@ -200,7 +200,7 @@ def audit_session(session, entry: str | None = None,
         findings += scan_host_io(ir, entry=e, batch=b)
         fingerprints[tag] = fingerprint_text(ir)
 
-        ws = vmem.session_working_set(session, e)
+        ws = vmem.session_working_set(session, e, b)
         if ws is not None:
             vmem_bytes[tag] = ws.total_bytes
             if ws.total_bytes > budget:

@@ -40,6 +40,7 @@ DEFAULT_VMEM_BUDGET_BYTES = 16 * 1024 * 1024
 PIPELINE_BUFFERS = 2
 
 _F32 = 4
+_I32 = 4
 _I8 = 1
 
 
@@ -141,7 +142,34 @@ def mvm_working_set(*, k_rows: int, block_b: int | None = None,
     return WorkingSet("crossbar_mvm", blocks, scratch)
 
 
-def session_working_set(session, entry: str) -> WorkingSet | None:
+def ta_feedback_working_set(*, K: int, n_clause: int, batch2: int,
+                            block_k: int | None = None,
+                            block_n: int | None = None) -> WorkingSet:
+    """Working set of the ``ta_feedback`` training kernel, mirroring
+    ``PallasBackend.ta_feedback`` padding.  ``batch2`` is the DOUBLED
+    feedback row count (positive + negative target copies, 2B); the
+    grid tiles (K, n) while every block streams the full batch2 axis,
+    so batch2 — not K or n — is the VMEM lever at serving batch sizes.
+    No scratch: each (block_k, block_n) output tile is one matmul
+    accumulation, written directly."""
+    block_k = min(block_k or 128, max(128, _ceil_to(K, 128)))
+    block_n = min(block_n or 128, max(128, _ceil_to(n_clause, 128)))
+    b2p = max(128, _ceil_to(batch2, 128))
+    blocks = {
+        "litT": block_k * b2p * _F32,
+        "sel": b2p * block_n * _F32,
+        "match": b2p * block_n * _F32,
+        "fired2": b2p * block_n * _F32,
+        "hi": block_k * block_n * _F32,
+        "lo": block_k * block_n * _F32,
+        "excl": block_k * block_n * _F32,
+        "out": block_k * block_n * _I32,
+    }
+    return WorkingSet("ta_feedback", blocks, {})
+
+
+def session_working_set(session, entry: str,
+                        batch: int | None = None) -> WorkingSet | None:
     """The VMEM working set of the kernel variant the ``(session,
     entry)`` pair actually lowers to, following the routing of
     ``InferenceSession._scores_expr`` / ``_metered_expr``:
@@ -154,7 +182,10 @@ def session_working_set(session, entry: str) -> WorkingSet | None:
       kernel; on other Pallas backends the session dequantizes outside
       and runs the unpacked kernel;
     * ``metering="fused"`` entries (and everything on the always-metered
-      ``pallas-metered`` backend) -> the metered kernel variant.
+      ``pallas-metered`` backend) -> the metered kernel variant;
+    * the ``ta_feedback`` training entry -> the feedback-delta kernel
+      (``batch`` is its compiled DOUBLED row count, from
+      ``compiled_shapes``).
     """
     backend = session.backend
     if getattr(backend, "reference", False):
@@ -164,6 +195,11 @@ def session_working_set(session, entry: str) -> WorkingSet | None:
     R, C, tr, tc = sys_.clause_i.shape
     S, sr, M = sys_.class_i.shape
     n_clause = C * tc
+
+    if entry == "ta_feedback":
+        return ta_feedback_working_set(K=sys_.n_literals,
+                                       n_clause=sys_.n_clauses,
+                                       batch2=batch or 128)
 
     metered_entry = (entry in ("infer_step", "infer_with_report")
                      and spec.metering != "off")

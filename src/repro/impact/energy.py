@@ -44,6 +44,11 @@ class EnergyReport:
     ops_crosspoint: float
     datapoints: int
     area_mm2: float | None = None  # occupied crossbar area (system-level)
+    #: Online-training write energy (J): program/erase pulse trains the
+    #: in-array TA updates applied THIS report's window — distinct from
+    #: ``program_energy_j``/``erase_energy_j``, which carry the one-time
+    #: encode cost.  Serving-only reports bill exactly 0.0 here.
+    write_energy_j: float = 0.0
 
     @property
     def energy_per_datapoint_j(self) -> float:
@@ -105,11 +110,13 @@ def report_from_lane_energies(e_clause_lanes: Array, e_class_lanes: Array, *,
                               program_energy_j: float, erase_energy_j: float,
                               latency_s: float, ops_per_datapoint: float,
                               datapoints: int,
-                              area_mm2: float | None = None) -> "EnergyReport":
+                              area_mm2: float | None = None,
+                              write_energy_j: float = 0.0) -> "EnergyReport":
     """Fold per-lane (per-request) read energies into a batch-level
     ``EnergyReport`` — the aggregation point where request attribution and
     the paper's per-batch accounting provably agree (sum of lanes == batch
-    meter)."""
+    meter).  ``write_energy_j`` carries this window's online-training
+    pulse energy (0.0 for serving-only reports)."""
     e_cl = float(np.asarray(e_clause_lanes, dtype=np.float64).sum())
     e_cs = float(np.asarray(e_class_lanes, dtype=np.float64).sum())
     return EnergyReport(
@@ -118,7 +125,8 @@ def report_from_lane_energies(e_clause_lanes: Array, e_class_lanes: Array, *,
         program_energy_j=program_energy_j, erase_energy_j=erase_energy_j,
         latency_s=latency_s,
         ops_crosspoint=ops_per_datapoint * datapoints,
-        datapoints=datapoints, area_mm2=area_mm2)
+        datapoints=datapoints, area_mm2=area_mm2,
+        write_energy_j=write_energy_j)
 
 
 def encode_energy(n_program_pulses: Array, n_erase_pulses: Array,

@@ -487,6 +487,26 @@ class InferenceSession:
             datapoints=n_dp, area_mm2=sum(sys_.area_mm2().values()))
         return InferenceResult(predictions=preds, report=report)
 
+    def ta_feedback(self, lit2, fired2, sel, match, hi, lo, include) -> Array:
+        """CoTM Type I/II TA feedback deltas -> (K, n) int32 — the online
+        trainer's compiled update primitive (arXiv:2408.09456), routed
+        through the session's registered backend like every serving entry.
+
+        ``lit2`` (2B, K) doubled literal rows; ``fired2``/``sel``/``match``
+        (2B, n) feedback masks; ``hi``/``lo`` (K, n) int32 Bernoulli
+        draws; ``include`` (K, n) current TA actions.  All stochastic
+        draws are precomputed operands, so the Pallas kernel and the
+        einsum oracle return bit-identical deltas (see
+        ``kernels.ref.ta_feedback_ref``).
+        """
+        lit2 = jnp.asarray(lit2, LITERAL_DTYPE)
+        exe = self._exe("ta_feedback", lit2.shape[0])
+        return exe(lit2, jnp.asarray(fired2, jnp.bool_),
+                   jnp.asarray(sel, jnp.bool_),
+                   jnp.asarray(match, jnp.bool_),
+                   jnp.asarray(hi, jnp.int32), jnp.asarray(lo, jnp.int32),
+                   jnp.asarray(include, jnp.bool_))
+
     # -- compiled-function plumbing -----------------------------------------
     def _lits(self, literals) -> Array:
         return jnp.asarray(literals, LITERAL_DTYPE)
@@ -525,6 +545,19 @@ class InferenceSession:
 
     def _compile_entry(self, entry: str, batch: int):
         sys_ = self.system
+        if entry == "ta_feedback":
+            # The feedback entry is span-independent (no weight-side
+            # constants, no tenant routing): ``batch`` is the DOUBLED
+            # update-row count 2B.
+            K, n = sys_.n_literals, sys_.n_clauses
+            row = lambda dt: jax.ShapeDtypeStruct((batch, n), dt)
+            cell = lambda dt: jax.ShapeDtypeStruct((K, n), dt)
+            lowered = jax.jit(self._ta_feedback_fn).lower(
+                jax.ShapeDtypeStruct((batch, K), LITERAL_DTYPE),
+                row(jnp.bool_), row(jnp.bool_), row(jnp.bool_),
+                cell(jnp.int32), cell(jnp.int32), cell(jnp.bool_))
+            self._irs[(entry, batch)] = lowered.as_text()
+            return lowered.compile()
         lit = jax.ShapeDtypeStruct((batch, sys_.n_literals), LITERAL_DTYPE)
         valid = jax.ShapeDtypeStruct((batch,), jnp.bool_)
         consts = self._operands()
@@ -767,6 +800,12 @@ class InferenceSession:
         scores, i_class = self.backend.impact_class_scores(
             fired, class_i, interpret=self.spec.interpret)
         return scores, i_clause.sum(axis=(1, 2, 3)), i_class.sum(axis=(1, 2))
+
+    def _ta_feedback_fn(self, lit2, fired2, sel, match, hi, lo, include):
+        self._traces["ta_feedback"] += 1
+        return self.backend.ta_feedback(lit2, fired2, sel, match, hi, lo,
+                                        include,
+                                        interpret=self.spec.interpret)
 
     def _predict_fn(self, literals, *args):
         self._traces["predict"] += 1

@@ -73,6 +73,16 @@ class ClassTile:
 # Encoding (Figs. 9-10): TA actions -> Boolean conductances
 # ---------------------------------------------------------------------------
 
+def n_unconverged(g: Array, target_lo: Array, target_hi: Array) -> int:
+    """Count cells still outside [target_lo, target_hi] after a pulse loop.
+
+    ``pulse_until`` gives up silently when ``max_pulses`` exhausts; encode
+    callers surface this count in their stats so an impossible target (or
+    an under-budgeted pulse loop) is a visible number, not a quiet
+    mis-programmed tile."""
+    return int(jnp.sum((g < target_lo) | (g > target_hi)))
+
+
 def encode_clause_tile(include: Array, key: Array, *,
                        pulse_width: float = 1e-3,
                        variability: bool = True,
@@ -106,7 +116,8 @@ def encode_clause_tile(include: Array, key: Array, *,
 
     stats = dict(prog_pulses=n_prog, erase_pulses=n_erase,
                  include_fraction=include.mean(),
-                 pulse_width=pulse_width)
+                 pulse_width=pulse_width,
+                 n_unconverged=n_unconverged(g, target_lo, target_hi))
     return ClauseTile(g=g, nonempty=include.any(axis=0)), stats
 
 
@@ -163,7 +174,8 @@ def encode_class_tile(weights_unipolar: Array, key: Array, *,
             g0, target, jnp.asarray(tol), var=var, key=k_pre,
             max_pulses=max_pulses, c2c=variability)
         stats = dict(pretune_prog=p_a, pretune_erase=e_a,
-                     segment_size=seg, w_max=w_max, adaptive=True)
+                     segment_size=seg, w_max=w_max, adaptive=True,
+                     n_unconverged=int(jnp.sum(jnp.abs(g2 - target) > tol)))
         return ClassTile(g=g2), stats
 
     tol_pre = pretune_tol_segments * seg
@@ -180,7 +192,11 @@ def encode_class_tile(weights_unipolar: Array, key: Array, *,
             g1, target_lo=target - tol_fine, target_hi=target + tol_fine,
             width_prog=finetune_width, width_erase=finetune_width,
             var=var, key=k_fine, max_pulses=max_pulses, c2c=variability)
-        stats.update(finetune_prog=p_f, finetune_erase=e_f)
+        stats.update(finetune_prog=p_f, finetune_erase=e_f,
+                     n_unconverged=n_unconverged(
+                         g2, target - tol_fine, target + tol_fine))
     else:
         g2 = g1
+        stats["n_unconverged"] = n_unconverged(
+            g2, target - tol_pre, target + tol_pre)
     return ClassTile(g=g2), stats

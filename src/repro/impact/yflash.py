@@ -177,19 +177,25 @@ def tune_adaptive(g: Array, target: Array, tol: Array, *,
 
     def body(state):
         g, np_, ne_, i, k = state
-        k, k1 = jax.random.split(k)
+        k, k1, k2 = jax.random.split(k, 3)
         cands = land_all(g)
         err = jnp.abs(cands - target)
         best = jnp.argmin(err, axis=0)                   # (2W index per cell)
         is_prog = (best % 2) == 0
         width = jnp.take(jnp.asarray(widths_arr), best // 2)
         # Re-apply the chosen move WITH C2C noise (unless ideal devices).
-        noise = (jnp.exp(C2C_SIGMA * jax.random.normal(k1, g.shape))
-                 if c2c else jnp.ones(g.shape))
+        # Each move type draws its OWN per-pulse sample at its own Fig. 7
+        # sigma: program moves at C2C_SIGMA (LCS SD ~4.8 %), erase moves
+        # at C2C_SIGMA_HCS (~9.7 %) — matching program_pulse/erase_pulse.
+        ones = jnp.ones(g.shape)
+        noise_p = (jnp.exp(C2C_SIGMA * jax.random.normal(k1, g.shape))
+                   if c2c else ones)
+        noise_e = (jnp.exp(C2C_SIGMA_HCS * jax.random.normal(k2, g.shape))
+                   if c2c else ones)
         floor = G_MIN * var.g_floor
         ceil = G_MAX * var.g_ceil
-        decay = jnp.exp(-width / (TAU_PROG * var.tau_prog)) * noise
-        rate = (1.0 - jnp.exp(-width / (TAU_ERASE * var.tau_erase))) * noise
+        decay = jnp.exp(-width / (TAU_PROG * var.tau_prog)) * noise_p
+        rate = (1.0 - jnp.exp(-width / (TAU_ERASE * var.tau_erase))) * noise_e
         g_prog = floor + (g - floor) * jnp.clip(decay, 0.0, 1.0)
         g_erase = g + (ceil - g) * jnp.clip(rate, 0.0, 1.0)
         done = jnp.abs(g - target) <= tol

@@ -273,6 +273,25 @@ class Backend:
             thresh=thresh, interpret=interpret, block_b=block_b,
             block_n=block_n)
 
+    # -- online training (arXiv:2408.09456 in-array TA updates) ------------
+    def ta_feedback(self, lit2: Array, fired2: Array, sel: Array,
+                    match: Array, hi: Array, lo: Array, include: Array, *,
+                    interpret: bool | None = None, block_k: int = 128,
+                    block_n: int = 128) -> Array:
+        """CoTM Type I/II TA feedback deltas over one doubled update batch
+        -> ta_delta (K, n) int32 (see ``ref.ta_feedback_ref`` for the full
+        mask semantics).  All stochastic draws (``sel``/``hi``/``lo``) are
+        precomputed operands, so every backend computes bit-identical
+        deltas from the same inputs — the parity contract the online
+        trainer's write path depends on.
+
+        Default: the einsum oracle; ``PallasBackend`` overrides with the
+        fused kernel that accumulates the three feedback matmuls in one
+        VMEM residency of the clause-output datapath.
+        """
+        return ref.ta_feedback_ref(lit2, fired2, sel, match, hi, lo,
+                                   include)
+
     # -- staged analog compositions (Fig. 14 per-shard unroll) -------------
     def impact_clause_bits(self, literals: Array, clause_i: Array,
                            nonempty: Array, *, thresh: float,
@@ -435,6 +454,31 @@ class PallasBackend(Backend):
         return (out[:B, :M],
                 meters[:B, _impact_kernel.METER_LANE_CLAUSE],
                 meters[:B, _impact_kernel.METER_LANE_CLASS])
+
+    def ta_feedback(self, lit2, fired2, sel, match, hi, lo, include, *,
+                    interpret=None, block_k=128, block_n=128):
+        B2, K = lit2.shape
+        n = hi.shape[1]
+        interpret = self.resolve_interpret(interpret)
+        b2p = max(128, -(-B2 // 128) * 128)
+        block_k = min(block_k, max(128, -(-K // 128) * 128))
+        block_n = min(block_n, max(128, -(-n // 128) * 128))
+        # Neutral padding: padded batch rows / clause columns carry sel=0
+        # (they select nothing), padded TA rows carry hi=lo=excl=0 (their
+        # delta is exactly 0) — so the sliced output equals the oracle's.
+        litT = pad_axis(pad_axis(lit2.astype(jnp.float32).T,
+                                 block_k, 0, 0.0), b2p, 1, 0.0)
+        mask = lambda x: pad_axis(pad_axis(x.astype(jnp.float32),
+                                           b2p, 0, 0.0), block_n, 1, 0.0)
+        cell = lambda x: pad_axis(pad_axis(x.astype(jnp.float32),
+                                           block_k, 0, 0.0),
+                                  block_n, 1, 0.0)
+        excl = jnp.logical_not(include.astype(bool))
+        out = _impact_kernel.ta_feedback(
+            litT, mask(sel), mask(match), mask(fired2), cell(hi), cell(lo),
+            cell(excl), block_k=block_k, block_n=block_n,
+            interpret=interpret)
+        return out[:K, :n]
 
     def crossbar_mvm(self, drive, g, *, v_read=2.0, nonlin=1.5,
                      cutoff=10e-9, interpret=None, block_b=128,
@@ -666,7 +710,7 @@ REQUIRED_PRIMITIVES: tuple[str, ...] = (
     "fused_impact_coresident", "fused_impact_coresident_metered",
     "fused_impact_coresident_packed",
     "fused_impact_coresident_packed_metered",
-    "impact_clause_bits", "impact_class_scores",
+    "impact_clause_bits", "impact_class_scores", "ta_feedback",
 )
 
 

@@ -360,6 +360,96 @@ def fused_impact_packed(drive: Array, pbits: Array, levels: Array,
     )(drive, pbits, levels, nonempty, wcur)
 
 
+# -- online TA feedback (arXiv:2408.09456 in-array updates) -------------------
+#
+# The feedback pass of the companion in-memory-learning paper reuses the
+# clause-output datapath in reverse: the same (literal row x clause
+# column) geometry that reads clause outputs accumulates, per TA cell,
+# how often its literal was present/absent in the clauses selected for
+# Type I/II feedback over one update batch.  Three matmuls on the
+# doubled-batch feedback masks — identical contraction geometry to the
+# clause read, so they share the MXU datapath and the VMEM residency
+# pattern of the fused inference kernels:
+#
+#   present = lit^T     @ (sel & match & fired)       # Type Ia reward
+#   absent  = (1-lit)^T @ (sel & match & fired)       # Type Ib penalty
+#   inval   = (1-lit)^T @ (sel & ~match & fired)      # Type II inclusion
+#   decay   = sum_b (sel & match & ~fired)            # Type Ib erasure
+#   delta   = hi*present - lo*(absent + decay) + excl*inval
+#
+# The whole 2B contraction happens inside one block (like R staying whole
+# in the inference kernels), so each (block_k, block_n) output tile is
+# independent — no cross-chunk accumulator.  f32 MACs are exact for the
+# integer mask counts involved (< 2**24).  Layouts (prepared by
+# ``backends.PallasBackend.ta_feedback``):
+#
+#   litT          (K, B2)  f32   transposed doubled literals; pads 0
+#   sel/match/fd  (B2, N)  f32   feedback masks; pads 0 (neutral: a padded
+#                                row/column selects nothing)
+#   hi/lo/excl   (K, N)    f32   per-TA draws + exclude mask; pads 0, so
+#                                padded cells produce delta == 0
+#   out          (K, N)    i32   TA state deltas
+
+
+def _ta_feedback_kernel(litT_ref, sel_ref, match_ref, fired_ref, hi_ref,
+                        lo_ref, excl_ref, out_ref):
+    s = sel_ref[...]
+    mt = match_ref[...]
+    f = fired_ref[...]
+    t1f = s * mt * f
+    t1nf = s * mt * (1.0 - f)
+    t2f = s * (1.0 - mt) * f
+    litT = litT_ref[...]
+    dot = lambda a, b: jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    present = dot(litT, t1f)
+    absent = dot(1.0 - litT, t1f)
+    inval = dot(1.0 - litT, t2f)
+    decay = t1nf.sum(axis=0, keepdims=True)
+    delta = (hi_ref[...] * present - lo_ref[...] * (absent + decay)
+             + excl_ref[...] * inval)
+    out_ref[...] = delta.astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_k", "block_n", "interpret"))
+def ta_feedback(litT: Array, sel: Array, match: Array, fired2: Array,
+                hi: Array, lo: Array, excl: Array, *, block_k: int = 128,
+                block_n: int = 128, interpret: bool = False) -> Array:
+    """litT (K, B2) f32, sel/match/fired2 (B2, N) f32, hi/lo/excl (K, N)
+    f32 -> ta_delta (K, N) int32.
+
+    K % block_k == 0, N % block_n == 0, B2 % 128 == 0 required
+    (``backends.PallasBackend.ta_feedback`` pads arbitrary shapes).
+    """
+    K, B2 = litT.shape
+    B2b, N = sel.shape
+    assert B2 == B2b and match.shape == sel.shape == fired2.shape
+    assert hi.shape == lo.shape == excl.shape == (K, N)
+    assert (K % block_k == 0 and N % block_n == 0 and B2 % 128 == 0), (
+        K, B2, N)
+
+    return pl.pallas_call(
+        _ta_feedback_kernel,
+        grid=(K // block_k, N // block_n),
+        in_specs=[
+            pl.BlockSpec((block_k, B2), lambda k, n: (k, 0)),
+            pl.BlockSpec((B2, block_n), lambda k, n: (0, n)),
+            pl.BlockSpec((B2, block_n), lambda k, n: (0, n)),
+            pl.BlockSpec((B2, block_n), lambda k, n: (0, n)),
+            pl.BlockSpec((block_k, block_n), lambda k, n: (k, n)),
+            pl.BlockSpec((block_k, block_n), lambda k, n: (k, n)),
+            pl.BlockSpec((block_k, block_n), lambda k, n: (k, n)),
+        ],
+        out_specs=pl.BlockSpec((block_k, block_n), lambda k, n: (k, n)),
+        out_shape=jax.ShapeDtypeStruct((K, N), jnp.int32),
+        compiler_params=_compat.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(litT, sel, match, fired2, hi, lo, excl)
+
+
 def _fused_impact_packed_metered_kernel(drive_ref, pbits_ref, lvl_ref,
                                         ne_ref, wcur_ref, out_ref, meter_ref,
                                         acc_ref, macc_ref, *, n_n: int,

@@ -214,6 +214,53 @@ def fused_impact_coresident_metered_ref(
     return scores, i_col.sum(axis=(1, 2, 3)), i_cls.sum(axis=(1, 2))
 
 
+def ta_feedback_ref(lit2: Array, fired2: Array, sel: Array, match: Array,
+                    hi: Array, lo: Array, include: Array) -> Array:
+    """CoTM Type I/II TA feedback deltas (arXiv:2408.09456 Algs. 1-2).
+
+    Inputs are the per-(row, clause) feedback masks of one update batch,
+    2B rows (true class + sampled negative per example, already doubled):
+
+      lit2 (2B, K) int8     literal states (doubled along the batch axis);
+      fired2 (2B, n) bool   clause outputs per row;
+      sel (2B, n) bool      clause selected for feedback (prob (T -/+ v)/2T);
+      match (2B, n) bool    weight sign agrees with the row polarity
+                            (Type I when True, Type II when False);
+      hi (K, n) int32       per-TA boost draw (1/s Bernoulli complement);
+      lo (K, n) int32       per-TA 1/s penalty draw;
+      include (K, n) bool   current TA include actions.
+
+    Returns ta_delta (K, n) int32:
+
+      +hi   for every selected matching FIRED clause whose literal is 1
+            (Type Ia reward),
+      -lo   for selected matching fired clauses with literal 0 AND for all
+            literals of selected matching non-fired clauses (Type Ib
+            erasure/decay),
+      +1    on currently-excluded literals that are 0 in a selected
+            NON-matching fired clause (Type II inclusion pressure).
+
+    All terms are integer counts accumulated over the 2B rows; both this
+    oracle and the Pallas kernel compute them with f32 matmuls, exact for
+    counts far below 2**24.
+    """
+    t1 = jnp.logical_and(sel, match)
+    t1f = jnp.logical_and(t1, fired2).astype(jnp.float32)        # (2B, n)
+    t1nf = jnp.logical_and(t1, ~fired2).astype(jnp.float32)
+    t2f = jnp.logical_and(jnp.logical_and(sel, ~match),
+                          fired2).astype(jnp.float32)
+    litT = lit2.astype(jnp.float32).T                            # (K, 2B)
+    present = litT @ t1f                                         # (K, n)
+    absent = (1.0 - litT) @ t1f
+    inval = (1.0 - litT) @ t2f
+    decay = t1nf.sum(axis=0, keepdims=True)                      # (1, n)
+    excl = (~include.astype(bool)).astype(jnp.float32)
+    delta = (hi.astype(jnp.float32) * present
+             - lo.astype(jnp.float32) * (absent + decay)
+             + excl * inval)
+    return delta.astype(jnp.int32)
+
+
 def crossbar_mvm_ref(drive: Array, g: Array, *, v_read: float = 2.0,
                      nonlin: float = 1.5, cutoff: float = 10e-9) -> Array:
     """Analog crossbar column currents with the Y-Flash low-G nonlinearity.

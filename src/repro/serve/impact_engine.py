@@ -107,6 +107,10 @@ def aggregate_reports(reports: Sequence[EnergyReport]) -> EnergyReport:
         latency_s=sum(r.latency_s for r in reports),
         ops_crosspoint=sum(r.ops_crosspoint for r in reports),
         datapoints=sum(r.datapoints for r in reports),
+        # Unlike the one-time encode cost above, write energy accrues per
+        # window: an interleaved train+serve run's aggregate must carry
+        # every update's pulse bill.
+        write_energy_j=sum(r.write_energy_j for r in reports),
     )
 
 

@@ -556,15 +556,20 @@ class ModelZoo:
                         key=lambda t: (-t.traffic, t.index))
         want = sorted(ranked[:self.max_resident], key=lambda t: t.index)
         have = [t for t in self.tenants if t.resident]
-        for t in self.tenants:
-            t.traffic *= decay
         if [t.tid for t in want] == [t.tid for t in have]:
+            for t in self.tenants:
+                t.traffic *= decay
             return False
+        # Validate BEFORE mutating: a busy-table raise must leave the
+        # traffic EWMAs untouched, or the retry re-ranks on corrupted
+        # counters (each failed attempt would decay them again).
         if self.table.occupancy:
             raise RuntimeError(
                 "rebalance() re-programs the shared crossbar and needs "
                 "an idle slot table — drain in-flight lanes first "
                 "(step(force=True))")
+        for t in self.tenants:
+            t.traffic *= decay
         combined, plan = build_coresident([t.system for t in want])
         self.session = combined.compile(dataclasses.replace(
             self._base_spec, coresident=plan, capacity=self.capacity))

@@ -1,6 +1,7 @@
 """Training substrate: optimizer, step, checkpointing, compression, FT."""
 from .checkpoint import CheckpointManager
 from .compression import compressed_grad_allreduce, int8_psum
+from .online import OnlineTrainer
 from .optimizer import AdamWConfig, TrainState, apply_updates, init_state
 from .runtime import RuntimeConfig, SimulatedFailure, TrainLoop
 from .step import cast_tree, make_train_step
@@ -9,5 +10,5 @@ __all__ = [
     "AdamWConfig", "TrainState", "apply_updates", "init_state",
     "make_train_step", "cast_tree", "CheckpointManager",
     "compressed_grad_allreduce", "int8_psum", "RuntimeConfig",
-    "SimulatedFailure", "TrainLoop",
+    "SimulatedFailure", "TrainLoop", "OnlineTrainer",
 ]

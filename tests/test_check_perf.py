@@ -189,6 +189,62 @@ def test_check_cost_model_empty_entries_fail():
     assert any("no entries" in f for f in fails)
 
 
+# -- check_train -------------------------------------------------------------
+
+def _train(exact=True, acc_before=0.30, acc_after=0.81, floor=0.55,
+           rel_err=0.0, read_rel=0.0, serving_w=0.0, agg=None,
+           meter=1e-3):
+    return dict(
+        acc_floor=floor,
+        parity=dict(exact=exact, n_steps=3),
+        online=dict(acc_before=acc_before, acc_after=acc_after,
+                    n_updates=16),
+        write_meter=dict(per_update_sum_j=meter, running_meter_j=meter,
+                         aggregate_j=meter if agg is None else agg,
+                         rel_err=rel_err),
+        read_billing=dict(max_rel_err=read_rel),
+        serving_only=dict(write_energy_j=serving_w))
+
+
+def test_check_train_happy_path():
+    assert check_perf.check_train(_train()) == []
+    # the accuracy floor is inclusive
+    assert check_perf.check_train(_train(acc_after=0.55)) == []
+
+
+def test_check_train_parity_is_exact_not_a_tolerance():
+    fails = check_perf.check_train(_train(exact=False))
+    assert any("bit-exactness" in f for f in fails)
+
+
+def test_check_train_accuracy_floor_and_improvement():
+    fails = check_perf.check_train(_train(acc_after=0.50))
+    assert any("below the floor" in f for f in fails)
+    # clearing the floor without improving on deployment accuracy still
+    # fails — online training must actually help
+    fails = check_perf.check_train(
+        _train(acc_before=0.80, acc_after=0.70, floor=0.55))
+    assert any("did not improve" in f for f in fails)
+    fails = check_perf.check_train(_train(acc_after=None))
+    assert any("missing" in f for f in fails)
+
+
+def test_check_train_write_meter_identities():
+    fails = check_perf.check_train(_train(rel_err=1e-6))
+    assert any("per-update write bills" in f for f in fails)
+    fails = check_perf.check_train(_train(agg=2e-3))
+    assert any("aggregated report" in f for f in fails)
+    fails = check_perf.check_train(_train(read_rel=1e-6))
+    assert any("read bills" in f for f in fails)
+
+
+def test_check_train_serving_only_must_bill_exactly_zero():
+    fails = check_perf.check_train(_train(serving_w=1e-30))
+    assert any("serving-only" in f for f in fails)
+    fails = check_perf.check_train(_train(serving_w=None))
+    assert any("serving-only" in f for f in fails)
+
+
 # -- check_throughput --------------------------------------------------------
 
 def test_check_throughput_floor_and_missing_keys(capsys):

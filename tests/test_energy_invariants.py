@@ -298,6 +298,123 @@ def test_coresident_tenant_bills_sum_to_batch_meter(metering):
     assert rep.datapoints == int(valid.sum())
 
 
+# -- online-training write-energy invariants ---------------------------------
+#
+# The write meter obeys the same physical contract as the read meters:
+# pulse trains are counted, not estimated, so zero pulses bill exactly
+# zero joules, bills are non-negative, and the f64 sum of per-update
+# bills equals the running batch meter and the aggregated report lane.
+
+def _online_trainer(seed, *, K=12, n=8, m=3, B=6, variability=True):
+    import jax
+    from repro.core.cotm import CoTMConfig
+    from repro.impact.pipeline import IMPACTConfig, build_system
+    from repro.train import OnlineTrainer
+    cfg = CoTMConfig(n_literals=K, n_clauses=n, n_classes=m, n_states=16,
+                     threshold=4)
+    params = cfg.init(jax.random.key(seed))
+    system = build_system(params, cfg, jax.random.key(seed + 1),
+                          IMPACTConfig(variability=False, finetune=False))
+    session = system.compile(RuntimeSpec(backend="xla"))
+    trainer = OnlineTrainer(session, params, cfg, key=jax.random.key(seed + 2),
+                            variability=variability, max_pulses=32)
+    rng = np.random.default_rng(seed)
+    lits = jnp.asarray(rng.integers(0, 2, (B, K)).astype(np.int8))
+    labels = jnp.asarray(rng.integers(0, m, (B,)).astype(np.int32))
+    return trainer, lits, labels
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), variability=st.sampled_from([False, True]),
+       steps=st.integers(1, 3))
+def test_write_energy_invariants_property(seed, variability, steps):
+    """Non-negativity, zero-pulses-zero-joules, and the f64 per-update /
+    batch-meter / aggregate-lane identity, over random systems, seeds,
+    and ideal vs. noisy write paths."""
+    trainer, lits, labels = _online_trainer(seed, variability=variability)
+    for _ in range(steps):
+        r = trainer.update(lits, labels)
+        assert r["write_energy_j"] >= 0.0
+        if r["prog_pulses"] + r["erase_pulses"] == 0:
+            assert r["write_energy_j"] == 0.0
+        else:
+            assert r["write_energy_j"] > 0.0
+    total = sum(r["write_energy_j"] for r in trainer.records)
+    assert total == trainer.write_energy_j
+    agg = aggregate_reports(trainer.reports)
+    assert agg.write_energy_j == trainer.write_energy_j
+
+
+@settings(max_examples=10, deadline=None)
+@given(rows=st.integers(1, 8), cols=st.integers(1, 8),
+       seed=st.integers(0, 2 ** 16), width=st.floats(1e-6, 1e-3))
+def test_in_band_cells_never_pulse_or_bill(rows, cols, seed, width):
+    """The foundation of the zero-write identity: cells already inside
+    their target band draw no pulses, keep their conductance bit-exact,
+    and ``encode_energy`` bills them exactly (0.0, 0.0) J."""
+    import jax
+    from repro.impact import yflash
+    from repro.impact.energy import encode_energy
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.uniform(yflash.G_MIN, yflash.G_MAX, (rows, cols)))
+    var = yflash.DeviceVariation.sample(jax.random.key(seed), (rows, cols))
+    g1, n_p, n_e = yflash.pulse_until(
+        g, target_lo=jnp.zeros_like(g), target_hi=jnp.full_like(g, jnp.inf),
+        width_prog=width, width_erase=width, var=var,
+        key=jax.random.key(seed + 1), max_pulses=16)
+    np.testing.assert_array_equal(np.asarray(g1), np.asarray(g))
+    assert int(n_p.sum()) == 0 and int(n_e.sum()) == 0
+    assert encode_energy(n_p, n_e, width, width) == (0.0, 0.0)
+
+
+def test_zero_pulse_update_bills_exactly_zero():
+    """A feedback sweep whose votes are saturated at +/-T draws p=0 on
+    every row: no TA moves, no weight changes, the write path sees only
+    trivial [0, inf) bands — zero pulses, exactly 0.0 J, even with the
+    noisy write path enabled."""
+    import jax
+    from repro.core.cotm import CoTMConfig, CoTMParams
+    from repro.impact.pipeline import IMPACTConfig, build_system
+    from repro.train import OnlineTrainer
+    cfg = CoTMConfig(n_literals=12, n_clauses=24, n_classes=3, n_states=16,
+                     threshold=4)
+    # Deep-excluded TAs (state 1): every clause is empty, so under the
+    # training semantics every clause fires; class 0 carries +3 weights
+    # and the rest -3, so label-0 batches saturate every vote at +/-T.
+    params = CoTMParams(
+        ta_state=jnp.ones((12, 24), jnp.int32),
+        weights=jnp.broadcast_to(
+            jnp.where(jnp.arange(3)[:, None] == 0, 3, -3),
+            (3, 24)).astype(jnp.int32))
+    system = build_system(params, cfg, jax.random.key(0),
+                          IMPACTConfig(variability=False, finetune=False))
+    session = system.compile(RuntimeSpec(backend="xla"))
+    trainer = OnlineTrainer(session, params, cfg, key=jax.random.key(1),
+                            variability=True)
+    rng = np.random.default_rng(2)
+    lits = jnp.asarray(rng.integers(0, 2, (6, 12)).astype(np.int8))
+    r = trainer.update(lits, jnp.zeros((6,), jnp.int32))
+    assert r["n_flips"] == 0 and r["n_weight_cells"] == 0
+    assert r["prog_pulses"] == 0 and r["erase_pulses"] == 0
+    assert r["write_energy_j"] == 0.0
+    assert trainer.write_energy_j == 0.0
+
+
+def test_serving_only_bills_zero_write_energy():
+    """Pure inference never touches the write meter: every serving report
+    and any aggregate of serving reports carries write_energy_j == 0.0
+    exactly."""
+    lit, sys_ = _grid(6, 32, 12, 4, 2, 2, seed=5, density=0.15)
+    reports = []
+    for metering in METERINGS:
+        session = sys_.compile(RuntimeSpec(backend="xla", metering=metering,
+                                           capacity=6))
+        rep = session.infer_with_report(lit).report
+        assert rep.write_energy_j == 0.0
+        reports.append(rep)
+    assert aggregate_reports(reports).write_energy_j == 0.0
+
+
 def test_coresident_lane_bills_match_standalone_sessions():
     """Tenant purity: each lane's bill on the shared grid equals the bill
     the SAME row draws on its tenant's standalone session (up to f32

@@ -338,6 +338,36 @@ def test_zoo_rebalance_requires_idle_table():
     assert zoo.rebalance() is True
 
 
+def test_zoo_failed_rebalance_preserves_traffic():
+    """Regression: a busy-table rebalance used to decay every tenant's
+    traffic EWMA before raising, so each failed attempt corrupted the
+    ranking its own retry depends on.  The raise must be state-free."""
+    clk = FakeClock()
+    never = SLOClass(name="bulk", priority=1, target_occupancy=1.0,
+                     max_wait_s=10.0)
+    zoo, systems = make_zoo(3, capacity=6, max_resident=2, clock=clk,
+                            slos=[never] * 3)
+    rng = np.random.default_rng(10)
+    rows = random_rows(systems, rng)
+    for _ in range(8):
+        zoo.submit("t2", rows[2])
+    zoo.step(force=True)
+    zoo.submit("t0", rows[0])
+    zoo.step()                                 # admitted, sweep deferred
+    assert zoo.table.occupancy == 1
+    before = {t.tid: t.traffic for t in zoo.tenants}
+    with pytest.raises(RuntimeError, match="idle"):
+        zoo.rebalance()
+    assert {t.tid: t.traffic for t in zoo.tenants} == before
+    # A no-change rebalance still decays (the EWMA window is the cadence).
+    zoo.step(force=True)
+    assert zoo.rebalance() is True
+    after = {t.tid: t.traffic for t in zoo.tenants}
+    assert zoo.rebalance() is False
+    assert all(t.traffic < after[t.tid] or after[t.tid] == 0.0
+               for t in zoo.tenants)
+
+
 def test_zoo_coresident_fewer_sweeps_than_per_tenant_engines():
     n_tenants, reps = 4, 3
     zoo, systems = make_zoo(n_tenants)

@@ -83,6 +83,46 @@ def test_finetune_improves_mapping(rng):
     assert err_fine <= err_pre * 1.05, (err_pre, err_fine)
 
 
+def test_encode_reports_convergence(rng):
+    """Converged encodes must report n_unconverged == 0 on every path."""
+    include = jnp.asarray(rng.random((64, 32)) < 0.05)
+    _, s_cl = encode_clause_tile(include, jax.random.key(6))
+    assert s_cl["n_unconverged"] == 0
+    w = jnp.asarray(rng.integers(0, 100, (32, 4)), jnp.int32)
+    for kwargs in (dict(finetune=True), dict(finetune=False),
+                   dict(adaptive=True)):
+        _, s = encode_class_tile(w, jax.random.key(7), **kwargs)
+        assert s["n_unconverged"] == 0, (kwargs, s["n_unconverged"])
+
+
+def test_encode_surfaces_nonconvergence(rng):
+    """Regression: an impossible target used to be returned as-is with no
+    signal — pulse loops give up at max_pulses and the tile silently
+    mis-programs.  encode_stats must now carry the unconverged count."""
+    # Boolean path: excluded cells must reach G <= 1e-12 S, far below the
+    # programming floor G_MIN — no pulse budget can get there.
+    K, n = 16, 8
+    include = jnp.zeros((K, n), bool)
+    _, stats = encode_clause_tile(include, jax.random.key(8))
+    assert stats["n_unconverged"] == 0  # sanity: the real target converges
+    import repro.impact.tiles as tiles_mod
+    old = tiles_mod.G_LCS
+    tiles_mod.G_LCS = 1e-12
+    try:
+        _, stats_bad = encode_clause_tile(include, jax.random.key(8),
+                                          max_pulses=4)
+    finally:
+        tiles_mod.G_LCS = old
+    assert stats_bad["n_unconverged"] == K * n, stats_bad["n_unconverged"]
+
+    # Analog adaptive path: a near-zero tolerance band under C2C noise
+    # leaves cells outside tolerance when max_pulses exhausts.
+    w = jnp.asarray(rng.integers(0, 100, (32, 4)), jnp.int32)
+    _, s_ad = encode_class_tile(w, jax.random.key(9), adaptive=True,
+                                finetune_tol_segments=1e-6, max_pulses=4)
+    assert s_ad["n_unconverged"] > 0, s_ad["n_unconverged"]
+
+
 def test_adaptive_controller_beats_two_phase(rng):
     """Beyond paper: the width-selecting closed-loop programmer reaches a
     tighter mapping with fewer pulses than the fixed two-phase schedule."""

@@ -89,6 +89,44 @@ def test_c2c_variability_scale():
     assert 0.005 <= hcs.std() / hcs.mean() <= 0.6
 
 
+def test_tune_adaptive_erase_uses_hcs_sigma():
+    """Regression: tune_adaptive's erase moves must draw per-pulse C2C
+    noise at C2C_SIGMA_HCS (9.7 %, Fig. 7 HCS) — not the program sigma
+    (4.8 %) it once shared.  One widest-width erase step from a common
+    start pins the realized-rate log-spread to the HCS sigma."""
+    n = 8192
+    g0 = 1e-7 * jnp.ones((n,))
+    target = jnp.full((n,), yflash.G_MAX * 0.9)
+    var = DeviceVariation.none((n,))
+    g1, n_prog, n_erase = yflash.tune_adaptive(
+        g0, target, jnp.full((n,), 1e-12), var=var,
+        key=jax.random.key(5), max_pulses=1)
+    # From 1e-7 S toward 2.7e-6 S every cell's best move is the widest
+    # (500 us) erase pulse.
+    assert int(n_prog.sum()) == 0 and int(n_erase.sum()) == n
+    rate_det = 1.0 - np.exp(-500e-6 / yflash.TAU_ERASE)
+    realized = (np.asarray(g1) - 1e-7) / (yflash.G_MAX - 1e-7)
+    spread = float(np.std(np.log(realized / rate_det)))
+    assert 0.085 <= spread <= 0.11, spread
+
+
+def test_tune_adaptive_program_sigma_pinned():
+    """Companion pin: program moves keep the LCS sigma (4.8 %) — guards
+    against over-correcting the erase fix onto the program path."""
+    n = 8192
+    g0 = 1e-6 * jnp.ones((n,))
+    target = jnp.full((n,), yflash.G_MIN)
+    var = DeviceVariation.none((n,))
+    g1, n_prog, n_erase = yflash.tune_adaptive(
+        g0, target, jnp.full((n,), 1e-12), var=var,
+        key=jax.random.key(6), max_pulses=1)
+    assert int(n_erase.sum()) == 0 and int(n_prog.sum()) == n
+    decay_det = np.exp(-500e-6 / yflash.TAU_PROG)
+    realized = (np.asarray(g1) - yflash.G_MIN) / (1e-6 - yflash.G_MIN)
+    spread = float(np.std(np.log(realized / decay_det)))
+    assert 0.04 <= spread <= 0.06, spread
+
+
 def test_read_nonlinearity():
     """Fig. 5c: sub-cutoff conductances read ~1.5x ohmic current."""
     g_low, g_high = jnp.asarray(1e-9), jnp.asarray(1e-6)
